@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, graph suite, CSV emission."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+# scaled-down stand-ins for the paper's Table 2 suite (same families):
+#   road_usa → 2-D grid; LiveJournal/Orkut → RMAT; Friendster → BA;
+#   ClueWeb/Hyperlink → larger RMAT with heavier skew.
+SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "1"))
+
+
+def graph_suite():
+    from repro.graphs import generators as gen
+    s = SCALE
+    return {
+        "grid(road)": lambda: gen.grid2d(160 * s, 160 * s),
+        "rmat_small(LJ)": lambda: gen.rmat(1 << 14, (1 << 17) * s, seed=1),
+        "rmat_dense(CO)": lambda: gen.rmat(1 << 13, (1 << 18) * s, seed=2),
+        "ba(FR)": lambda: gen.barabasi_albert((1 << 14) * s, 8, seed=3),
+        "rmat_web(CW)": lambda: gen.rmat(1 << 16, (1 << 19) * s, seed=4,
+                                         a=0.57, b=0.19, c=0.19),
+    }
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time in seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

@@ -1,0 +1,71 @@
+"""§Roofline report: per (arch × shape × mesh) — the three roofline terms
+derived from the compiled dry-run, dominant bottleneck, MODEL/HLO FLOPs
+ratio, and the three hillclimb candidates.
+
+Reads the CSV produced by ``python -m repro.launch.dryrun --all --mesh both
+--csv dryrun_all.csv`` (the dry-run must run in its own process: it forces
+512 host devices before importing jax).
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+
+
+def load(path: str = "dryrun_all.csv"):
+    if not os.path.exists(path):
+        alt = os.path.join(os.path.dirname(__file__), "..", path)
+        path = alt if os.path.exists(alt) else path
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def run(quick: bool = True, path: str = "dryrun_all.csv"):
+    try:
+        rows = load(path)
+    except FileNotFoundError:
+        print("roofline: dryrun_all.csv not found — run "
+              "`python -m repro.launch.dryrun --all --mesh both --csv "
+              "dryrun_all.csv` first")
+        return []
+    hdr = ["arch", "shape", "mesh", "dominant", "compute_term_s",
+           "memory_term_s", "collective_term_s", "useful_flops_frac",
+           "temp_bytes"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(
+            f"{float(r[h]):.3e}" if h.endswith("_s") or h == "useful_flops_frac"
+            else r[h] for h in hdr))
+    # hillclimb candidates (single-pod mesh): worst roofline fraction,
+    # most collective-bound, most representative of the paper's technique
+    single = [r for r in rows if r["mesh"] == "single"]
+
+    def frac(r):
+        dom = max(float(r["compute_term_s"]), float(r["memory_term_s"]),
+                  float(r["collective_term_s"]))
+        return float(r["compute_term_s"]) / dom if dom else 0.0
+
+    def coll_ratio(r):
+        tot = (float(r["compute_term_s"]) + float(r["memory_term_s"])
+               + float(r["collective_term_s"]))
+        return float(r["collective_term_s"]) / tot if tot else 0.0
+
+    if single:
+        worst = min(single, key=frac)
+        collbound = max(single, key=coll_ratio)
+        rep = next((r for r in single if r["arch"] == "connectit"), single[0])
+        print("\nhillclimb candidates:")
+        print(f"  worst-roofline-fraction: {worst['arch']} × {worst['shape']}"
+              f" (compute fraction {frac(worst):.3f})")
+        print(f"  most-collective-bound:   {collbound['arch']} × "
+              f"{collbound['shape']} (collective share "
+              f"{coll_ratio(collbound):.3f})")
+        print(f"  paper-representative:    {rep['arch']} × {rep['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False, path=sys.argv[1] if len(sys.argv) > 1 else
+        "dryrun_all.csv")

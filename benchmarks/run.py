@@ -1,0 +1,48 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``python -m benchmarks.run``           quick pass (CI-sized)
+``python -m benchmarks.run --full``    paper-scale pass
+``python -m benchmarks.run --only streaming_throughput``
+
+Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
+from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (amsf_bench, gather_edges, sampling_quality, scan_bench,
+               static_connectivity, streaming_batchsize,
+               streaming_throughput, synthetic_families)
+
+SUITES = {
+    "static_connectivity": static_connectivity.run,     # Table 3
+    "sampling_quality": sampling_quality.run,           # Figure 2 / T6-7
+    "streaming_throughput": streaming_throughput.run,   # Table 4
+    "streaming_batchsize": streaming_batchsize.run,     # Table 5 / Fig 19
+    "synthetic_families": synthetic_families.run,       # Figure 4
+    "amsf": amsf_bench.run,                             # Figure 6
+    "scan": scan_bench.run,                             # Figure 7
+    "gather_edges": gather_edges.run,                   # Table 8 / C.5.1
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(SUITES)
+    t0 = time.time()
+    for name in names:
+        print(f"\n### {name} " + "#" * max(0, 60 - len(name)))
+        SUITES[name](quick=not args.full)
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Paper Figure 7: parallel GS*-Query (ConnectIt) vs sequential GS*-Query."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True):
+    from repro.core.apps import scan
+    from repro.graphs import generators as gen
+    rows = []
+    n = 1 << 11 if quick else 1 << 13
+    g = gen.rmat(n, n * 12, seed=4)
+    sims = scan.build_index(g)  # offline index construction (GS*-Index)
+    simsj = jnp.asarray(sims)
+    for eps, mu in [(0.1, 3), (0.3, 3)]:
+        t0 = time.perf_counter()
+        scan.gs_query_sequential(g, sims, eps, mu=mu)
+        t_seq = time.perf_counter() - t0
+        t_par = timeit(lambda: scan.gs_query_parallel(g, simsj, eps, mu=mu),
+                       warmup=1, iters=3)
+        rows.append(dict(eps=eps, mu=mu, seq_s=f"{t_seq:.4f}",
+                         par_s=f"{t_par:.4f}",
+                         speedup=f"{t_seq / t_par:.1f}"))
+    emit(rows, ["eps", "mu", "seq_s", "par_s", "speedup"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Paper Table 3: static connectivity — finish methods × sampling schemes
+across the graph suite. Reports wall time (s) per combination and the
+speedup of each sampling scheme over no-sampling for the fastest finish."""
+
+from __future__ import annotations
+
+import jax
+
+from .common import emit, graph_suite, timeit
+
+FINISHES = ["uf_sync", "uf_sync_full", "shiloach_vishkin", "liu_tarjan_CRFA",
+            "liu_tarjan_PRF", "stergiou", "label_prop"]
+SAMPLERS = [None, "kout", "bfs", "ldd"]
+
+
+def run(quick: bool = True):
+    from repro.core.driver import connectivity
+    rows = []
+    suite = graph_suite()
+    if quick:
+        suite = {k: suite[k] for k in list(suite)[:3]}
+        finishes = FINISHES[:4]
+    else:
+        finishes = FINISHES
+    for gname, build in suite.items():
+        g = build()
+        for sampler in SAMPLERS:
+            for finish in finishes:
+                def once():
+                    return connectivity(g, sample=sampler, finish=finish,
+                                        key=jax.random.PRNGKey(1))
+                t = timeit(once, warmup=1, iters=2)
+                rows.append(dict(graph=gname, n=g.n, m=g.m,
+                                 sampler=sampler or "none", finish=finish,
+                                 time_s=f"{t:.5f}"))
+        jax.clear_caches()
+    emit(rows, ["graph", "n", "m", "sampler", "finish", "time_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

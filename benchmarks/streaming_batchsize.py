@@ -1,0 +1,68 @@
+"""Paper Table 5 / Figure 19: throughput vs batch size, plus the sequential
+per-edge baseline (the STINGER stand-in: a python-loop union-find that
+processes one edge at a time, as a dynamic-connectivity lower bound)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timeit
+
+
+def _sequential_baseline(s, r, n, limit=20000):
+    """Per-edge sequential union-find (STINGER-style dynamic labeling)."""
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    k = min(len(s), limit)
+    t0 = time.perf_counter()
+    for i in range(k):
+        ru, rv = find(int(s[i])), find(int(r[i]))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return k / (time.perf_counter() - t0)
+
+
+def run(quick: bool = True):
+    from repro.core import streaming
+    from repro.graphs import generators as gen
+    rows = []
+    n = 1 << 17
+    g = gen.rmat(n, 1 << 20 if not quick else 1 << 18, seed=7)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    seq_tput = _sequential_baseline(s, r, g.n)
+    rows.append(dict(batch="1(seq-baseline)", edges_per_s=f"{seq_tput:.3e}",
+                     speedup_vs_seq="1.0"))
+    batches = [10, 100, 1000, 10_000, 100_000] + ([] if quick else [1_000_000])
+    for B in batches:
+        nb = max(min(len(s) // B, 64), 1)
+
+        def ingest():
+            st = streaming.init_stream(g.n)
+            for i in range(nb):
+                bu = jnp.asarray(s[i * B:(i + 1) * B])
+                bv = jnp.asarray(r[i * B:(i + 1) * B])
+                if len(bu) < B:
+                    break
+                st = streaming.insert_batch(st, bu, bv)
+            return st.P
+        t = timeit(ingest, warmup=1, iters=2)
+        tput = nb * B / t
+        rows.append(dict(batch=B, edges_per_s=f"{tput:.3e}",
+                         speedup_vs_seq=f"{tput / seq_tput:.1f}"))
+    emit(rows, ["batch", "edges_per_s", "speedup_vs_seq"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Paper Table 4: maximum streaming throughput (directed edge insertions per
+second) per algorithm per graph (single large unpermuted batch)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, graph_suite, timeit
+
+ALGOS = ["uf_sync_full", "uf_sync_naive", "shiloach_vishkin",
+         "liu_tarjan_CRFA"]
+
+
+def run(quick: bool = True):
+    from repro.core import streaming
+    rows = []
+    suite = graph_suite()
+    names = list(suite)[:3 if quick else None]
+    algos = ALGOS[:3] if quick else ALGOS
+    for gname in names:
+        g = suite[gname]()
+        s = jnp.where(g.edge_mask, g.senders, g.n)
+        r = jnp.where(g.edge_mask, g.receivers, g.n)
+        for algo in algos:
+            def ingest():
+                st = streaming.init_stream(g.n)
+                return streaming.insert_batch(st, s, r, finish=algo).P
+            t = timeit(ingest, warmup=1, iters=2)
+            rows.append(dict(graph=gname, algo=algo, m=g.m,
+                             edges_per_s=f"{g.m / t:.3e}",
+                             time_s=f"{t:.4f}"))
+        jax.clear_caches()
+    emit(rows, ["graph", "algo", "m", "edges_per_s", "time_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Paper Figure 4: UF-Sync + sampling schemes across synthetic families —
+(a) Barabási–Albert density sweep, (b) d-dimensional torus dimension sweep."""
+
+from __future__ import annotations
+
+import jax
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True):
+    from repro.core.driver import connectivity
+    from repro.graphs import generators as gen
+    rows = []
+    n_ba = 1 << 12 if quick else 1 << 14
+    densities = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]
+    for k in densities:
+        g = gen.barabasi_albert(n_ba, k, seed=1)
+        for sampler in [None, "kout", "bfs", "ldd"]:
+            t = timeit(lambda: connectivity(
+                g, sample=sampler, finish="uf_sync",
+                key=jax.random.PRNGKey(0)), warmup=1, iters=2)
+            rows.append(dict(family="ba", param=k, sampler=sampler or "none",
+                             time_s=f"{t:.5f}"))
+        jax.clear_caches()
+    dims = [2, 3] if quick else [1, 2, 3, 4]
+    for d in dims:
+        side = max(2, int(round((1 << 14) ** (1.0 / d))))
+        g = gen.torus((side,) * d)
+        for sampler in [None, "kout", "bfs", "ldd"]:
+            t = timeit(lambda: connectivity(
+                g, sample=sampler, finish="uf_sync",
+                key=jax.random.PRNGKey(0)), warmup=1, iters=2)
+            rows.append(dict(family="torus", param=d,
+                             sampler=sampler or "none", time_s=f"{t:.5f}"))
+        jax.clear_caches()
+    emit(rows, ["family", "param", "sampler", "time_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,61 @@
+"""Train a GNN end-to-end with the framework substrate — ConnectIt labels the
+components of the synthetic dataset and drives the batched-graph readout.
+
+    PYTHONPATH=src python examples/train_gnn.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import connectivity
+from repro.graphs import generators as gen
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn
+
+
+def main():
+    # a "molecule batch": many small graphs as one block-diagonal graph;
+    # per-graph ids come from ConnectIt (the paper's technique as substrate)
+    g = gen.planted_components(512, 32, 4.0, seed=0)
+    labels = np.asarray(connectivity(g, finish="uf_sync"))
+    uniq, graph_ids = np.unique(labels, return_inverse=True)
+    n_graphs = len(uniq)
+    print(f"ConnectIt found {n_graphs} graphs in the batch")
+    gid = jnp.asarray(np.concatenate([graph_ids, [0]]).astype(np.int32))
+
+    key = jax.random.PRNGKey(0)
+    feats = jax.random.normal(key, (g.n + 1, 16))
+    # synthetic task: classify each graph by parity of its size
+    sizes = np.bincount(graph_ids, minlength=n_graphs)
+    y = jnp.asarray((sizes % 2).astype(np.int32))
+
+    cfg = GNNConfig(name="gin", kind="gin", n_layers=3, d_hidden=32, d_in=16,
+                    n_classes=2, readout="graph")
+    params = init_gnn(jax.random.PRNGKey(1), cfg)
+    ocfg = optim.OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=200,
+                                 schedule="cosine")
+    state = optim.init_adam(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_loss(p, cfg, feats, g.senders, g.receivers, y,
+                               graph_ids=gid, n_graphs=n_graphs))(params)
+        params, state, info = optim.update(ocfg, params, grads, state)
+        return params, state, loss
+
+    for i in range(100):
+        params, state, loss = step(params, state)
+        if i % 20 == 0:
+            print(f"step {i:3d} loss {float(loss):.4f}")
+    print(f"final loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

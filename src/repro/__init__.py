@@ -1,0 +1,2 @@
+"""repro: ConnectIt (Dhulipala, Hong, Shun 2020) on JAX/TPU."""
+__version__ = "0.1.0"

@@ -1,0 +1,1 @@
+from .base import Arch, all_archs, get_arch, load_all  # noqa: F401

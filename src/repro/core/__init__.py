@@ -1,0 +1,5 @@
+"""ConnectIt core: the paper's contribution as composable JAX modules."""
+from . import distributed, driver, finish, primitives, sampling, streaming  # noqa: F401
+from .driver import connectivity, connectivity_fused, spanning_forest  # noqa: F401
+from .finish import finish_names, get_finish  # noqa: F401
+from .sampling import get_sampler, sampler_names  # noqa: F401

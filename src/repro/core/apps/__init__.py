@@ -1,0 +1,1 @@
+from . import amsf, scan  # noqa: F401

@@ -1,0 +1,185 @@
+"""Approximate minimum spanning forest via ConnectIt (paper §5.1).
+
+Folklore algorithm: bucket edges geometrically by weight, process buckets in
+increasing order, compute a spanning forest per bucket against the running
+labeling. Variants:
+
+  * ``amsf_nf``   — AMSF-NF: no edge filtering; every bucket masks the full
+                    edge list (all edges inspected every round).
+  * ``amsf_nf_s`` — AMSF-NF-S: additionally skips vertices in the running
+                    L_max component (the ConnectIt sampling optimization);
+                    paper-best variant, 2.03–5.36x over exact MSF.
+  * ``amsf_coo``  — AMSF-COO: host-side sort of the COO list + per-bucket
+                    compacted edges.
+  * ``boruvka_msf`` — exact Borůvka (the GBBS-MSF baseline).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...graphs.containers import Graph, round_up
+from ..finish import uf_sync_forest
+from ..primitives import (
+    INT_MAX,
+    full_compress,
+    init_forest,
+    init_labels,
+    most_frequent,
+    parents_of,
+    write_min,
+)
+
+
+def _bucket_ids(w: jax.Array, eps: float):
+    finite = jnp.isfinite(w)
+    wmin = jnp.min(jnp.where(finite, w, jnp.inf))
+    b = jnp.floor(jnp.log(jnp.maximum(w / wmin, 1.0)) / jnp.log1p(eps))
+    return jnp.where(finite, b.astype(jnp.int32), INT_MAX), wmin
+
+
+@partial(jax.jit, static_argnames=())
+def _bucket_forest_step(P, fu, fv, senders, receivers, active):
+    """Spanning forest restricted to `active` edges against labeling P."""
+    n = P.shape[0] - 1
+    s = jnp.where(active, senders, n)
+    r = jnp.where(active, receivers, n)
+    st, _ = uf_sync_forest(P, s, r, fu=fu, fv=fv, compress="full")
+    return st.P, st.fu, st.fv
+
+
+def _amsf(g: Graph, weights: jax.Array, *, eps: float = 0.25,
+          skip_lmax: bool = False):
+    bids, _ = _bucket_ids(weights, eps)
+    bids_np = np.asarray(bids)
+    P = init_labels(g.n)
+    fu, fv = init_forest(g.n)
+    n_buckets = int(bids_np[bids_np < INT_MAX].max(initial=0)) + 1
+    for b in range(n_buckets):
+        active = bids == b
+        # self-loops under the current labeling contribute nothing
+        same = P[g.senders] == P[g.receivers]
+        active = active & ~same & g.edge_mask
+        if skip_lmax:
+            lmax, cnt = most_frequent(full_compress(P))
+            in_lmax = (P[g.senders] == lmax) & (P[g.receivers] == lmax)
+            active = active & ~jnp.where(cnt > 1, in_lmax, False)
+        P, fu, fv = _bucket_forest_step(P, fu, fv, g.senders, g.receivers, active)
+    fu_np, fv_np = np.asarray(fu), np.asarray(fv)
+    sel = (fu_np >= 0) & (fv_np >= 0)
+    return np.stack([fu_np[sel], fv_np[sel]], 1), P
+
+
+def amsf_nf(g: Graph, weights, *, eps: float = 0.25):
+    return _amsf(g, weights, eps=eps, skip_lmax=False)
+
+
+def amsf_nf_s(g: Graph, weights, *, eps: float = 0.25):
+    return _amsf(g, weights, eps=eps, skip_lmax=True)
+
+
+def amsf_coo(g: Graph, weights, *, eps: float = 0.25):
+    """Host-sorted COO variant: per-bucket compacted edge arrays."""
+    w = np.asarray(weights)[: g.m]
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    eps_b = np.floor(np.log(np.maximum(w / w.min(), 1.0)) / np.log1p(eps)).astype(np.int64)
+    order = np.argsort(eps_b, kind="stable")
+    s, r, eps_b = s[order], r[order], eps_b[order]
+    P = init_labels(g.n)
+    fu, fv = init_forest(g.n)
+    bounds = np.searchsorted(eps_b, np.arange(eps_b.max() + 2))
+    for b in range(len(bounds) - 1):
+        lo, hi = int(bounds[b]), int(bounds[b + 1])
+        if lo == hi:
+            continue
+        m_pad = max(round_up(hi - lo, 8), 8)
+        bs = np.full((m_pad,), g.n, np.int32)
+        br = np.full((m_pad,), g.n, np.int32)
+        bs[: hi - lo] = s[lo:hi]
+        br[: hi - lo] = r[lo:hi]
+        st, _ = uf_sync_forest(P, jnp.asarray(bs), jnp.asarray(br),
+                               fu=fu, fv=fv, compress="full")
+        P, fu, fv = st.P, st.fu, st.fv
+    fu_np, fv_np = np.asarray(fu), np.asarray(fv)
+    sel = (fu_np >= 0) & (fv_np >= 0)
+    return np.stack([fu_np[sel], fv_np[sel]], 1), P
+
+
+def boruvka_msf(g: Graph, weights: jax.Array, *, max_rounds: int = 64):
+    """Exact MSF (Borůvka): per component, hook along the min-weight outgoing
+    edge each round. The GBBS-MSF stand-in baseline for Figure 6."""
+    n = g.n
+    m = g.m_pad
+    # strict total order on *undirected* edges: (w, lo, hi); both directions of
+    # an edge share a rank, distinct edges never tie (cut property holds)
+    w = np.asarray(weights)
+    s_np = np.asarray(g.senders).astype(np.int64)
+    r_np = np.asarray(g.receivers).astype(np.int64)
+    lo, hi = np.minimum(s_np, r_np), np.maximum(s_np, r_np)
+    _, inverse = np.unique(
+        np.stack([w.astype(np.float64), lo.astype(np.float64),
+                  hi.astype(np.float64)], 1),
+        axis=0, return_inverse=True)
+    rank = jnp.asarray(inverse.astype(np.int32))
+    eid = jnp.arange(m, dtype=jnp.int32)
+
+    P = init_labels(n)
+    in_forest = jnp.zeros((m,), jnp.bool_)
+    valid = g.edge_mask & jnp.isfinite(weights)
+
+    def cond(st):
+        P, in_forest, changed, i = st
+        return changed & (i < max_rounds)
+
+    def body(st):
+        P, in_forest, _, i = st
+        ls = P[g.senders]
+        lr = P[g.receivers]
+        inter = valid & (ls != lr)
+        # min-weight outgoing edge per component, two-pass (rank, then edge id)
+        rbuf = jnp.full((n + 1,), INT_MAX, jnp.int32)
+        rbuf = rbuf.at[jnp.where(inter, ls, n)].min(
+            jnp.where(inter, rank, INT_MAX))
+        achieve = inter & (rank == rbuf[ls])
+        buf = jnp.full((n + 1,), INT_MAX, jnp.int32)
+        buf = buf.at[jnp.where(achieve, ls, n)].min(
+            jnp.where(achieve, eid, INT_MAX))
+        has = buf < INT_MAX
+        chosen = jnp.minimum(jnp.where(has[:n], buf[:n], 0), m - 1)
+        # mark chosen edges and hook: component root ← min(other label)
+        mark = jnp.zeros((m,), jnp.bool_).at[chosen].max(has[:n])
+        in_forest2 = in_forest | (mark & inter)
+        tgt = jnp.where(has[:n], P[g.senders[chosen]], n)
+        val = jnp.where(has[:n], P[g.receivers[chosen]], n)
+        P2 = write_min(P, tgt, val, has[:n])
+        P2 = full_compress(P2)
+        return P2, in_forest2, jnp.any(P2 != P), i + 1
+
+    P, in_forest, _, _ = jax.lax.while_loop(
+        cond, body, (P, in_forest, jnp.bool_(True), 0))
+    sel = np.asarray(in_forest)
+    s = np.asarray(g.senders)[sel]
+    r = np.asarray(g.receivers)[sel]
+    # dedup the two directions
+    lo, hi = np.minimum(s, r), np.maximum(s, r)
+    uniq = np.unique(np.stack([lo, hi], 1), axis=0)
+    return uniq, P
+
+
+def forest_weight(edges: np.ndarray, g: Graph, weights) -> float:
+    """Sum of weights of (undirected) forest edges."""
+    w = np.asarray(weights)[: g.m]
+    s = np.asarray(g.senders)[: g.m].astype(np.int64)
+    r = np.asarray(g.receivers)[: g.m].astype(np.int64)
+    lut = {}
+    for i in range(len(s)):
+        lut[(s[i], r[i])] = w[i]
+    total = 0.0
+    for u, v in edges:
+        total += lut[(int(u), int(v))]
+    return float(total)

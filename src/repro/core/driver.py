@@ -1,0 +1,152 @@
+"""ConnectIt two-phase driver (paper Algorithm 1 / Algorithm 2).
+
+``connectivity(graph, sample, finish)`` is the host-level orchestrator:
+
+  1. run the sampling phase (jit) → partial labeling P
+  2. identify L_max (most frequent label) and pin it to the virtual minimum
+     label -1 (Theorem 4's "smallest possible ID" relabeling)
+  3. *compact* the finish-phase edge list: edges internal to L_max are
+     dropped on the host (this is where the paper's m - X + Y edge saving
+     is realized — masked edges would still cost memory bandwidth)
+  4. run the finish phase (jit) on the compacted edges
+  5. compress + restore -1 → canonical min-vertex-id labels
+
+``connectivity_fused`` is the fully-jitted single-dispatch variant (no host
+compaction; L_max-internal edges are no-ops under write_min) used by the
+distributed/dry-run paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.containers import Graph, round_up
+from .finish import ForestState, get_finish, uf_sync_forest
+from .primitives import (
+    canonical_labels,
+    full_compress,
+    init_labels,
+    most_frequent,
+    num_components,
+    relabel_lmax,
+    restore_lmax,
+)
+from .sampling import get_sampler
+
+
+@dataclasses.dataclass
+class ConnectivityStats:
+    """Paper Figure 2 quantities: sampling coverage X and cost Y."""
+
+    lmax_count: int = 0
+    edges_total: int = 0
+    edges_finish: int = 0
+    finish_rounds: int = 0
+
+
+@partial(jax.jit, static_argnames=("finish",))
+def _finish_phase(P, senders, receivers, finish: str):
+    P, rounds = get_finish(finish)(P, senders, receivers)
+    P = full_compress(P)
+    P = restore_lmax(P)
+    return P, rounds
+
+
+@jax.jit
+def _prep_sampled(P, senders, receivers):
+    P = full_compress(P)
+    lmax, cnt = most_frequent(P)
+    keep = ~((P[senders] == lmax) & (P[receivers] == lmax))
+    P = relabel_lmax(P, lmax)
+    return P, keep, lmax, cnt
+
+
+def _compact(senders, receivers, keep, n_dump: int):
+    keep_np = np.asarray(keep)
+    s = np.asarray(senders)[keep_np]
+    r = np.asarray(receivers)[keep_np]
+    kept = int(s.shape[0])
+    m_pad = max(round_up(kept, 8), 8)
+    s_out = np.full((m_pad,), n_dump, np.int32)
+    r_out = np.full((m_pad,), n_dump, np.int32)
+    s_out[:kept] = s
+    r_out[:kept] = r
+    return jnp.asarray(s_out), jnp.asarray(r_out), kept
+
+
+def connectivity(
+    g: Graph,
+    *,
+    sample: Optional[str] = None,
+    finish: str = "uf_sync",
+    key: Optional[jax.Array] = None,
+    return_stats: bool = False,
+):
+    """Compute a canonical connectivity labeling (component id = min vertex)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    stats = ConnectivityStats(edges_total=g.m)
+    if sample is None:
+        P = init_labels(g.n)
+        senders, receivers = g.senders, g.receivers
+        stats.edges_finish = g.m
+    else:
+        P = get_sampler(sample)(g, key)
+        P, keep, lmax, cnt = _prep_sampled(P, g.senders, g.receivers)
+        senders, receivers, kept = _compact(g.senders, g.receivers, keep, g.n)
+        stats.lmax_count = int(cnt)
+        stats.edges_finish = kept
+    P, rounds = _finish_phase(P, senders, receivers, finish)
+    stats.finish_rounds = int(rounds)
+    labels = P[: g.n]
+    if return_stats:
+        return labels, stats
+    return labels
+
+
+@partial(jax.jit, static_argnames=("finish", "use_sampling_relabel"))
+def connectivity_fused(P, senders, receivers, finish: str = "uf_sync",
+                       use_sampling_relabel: bool = False):
+    """Single-dispatch connectivity on a (possibly pre-sampled) labeling."""
+    if use_sampling_relabel:
+        P = full_compress(P)
+        lmax, _ = most_frequent(P)
+        P = relabel_lmax(P, lmax)
+    P, rounds = get_finish(finish)(P, senders, receivers)
+    P = full_compress(P)
+    P = restore_lmax(P)
+    return P, rounds
+
+
+def spanning_forest(
+    g: Graph,
+    *,
+    sample: Optional[str] = None,
+    key: Optional[jax.Array] = None,
+) -> np.ndarray:
+    """Spanning forest via root-based finish (paper Algorithm 2). Returns a
+    host-side (k, 2) array of forest edges."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    if sample is None:
+        P = init_labels(g.n)
+        st, _ = uf_sync_forest(P, g.senders, g.receivers, compress="full")
+    else:
+        st0 = get_sampler(sample)(g, key, want_forest=True)
+        P, keep, lmax, cnt = _prep_sampled(st0.P, g.senders, g.receivers)
+        senders, receivers, _ = _compact(g.senders, g.receivers, keep, g.n)
+        st, _ = uf_sync_forest(P, senders, receivers,
+                               fu=st0.fu, fv=st0.fv, compress="full")
+    fu = np.asarray(st.fu)
+    fv = np.asarray(st.fv)
+    sel = (fu >= 0) & (fv >= 0)
+    return np.stack([fu[sel], fv[sel]], axis=1)
+
+
+def connected_components(g: Graph, **kw) -> np.ndarray:
+    """Convenience: numpy canonical labels."""
+    return np.asarray(connectivity(g, **kw))

@@ -1,0 +1,317 @@
+"""ConnectIt finish methods (paper §3.3) as bulk-synchronous JAX algorithms.
+
+Every finish method has the signature::
+
+    finish(P, senders, receivers) -> (P, rounds)
+
+operating on a ``(n + 1,)`` label array (see primitives.py) and static-shape
+COO edge arrays (padded edges point at the dump slot ``n``). All methods are
+*min-based* (labels only decrease) and tolerate the ``-1`` virtual-minimum
+label used for L_max skipping, so any of them composes with any sampling
+scheme — the paper's central claim.
+
+TPU adaptation (DESIGN.md §2): the asynchronous CAS union-find variants
+(UF-Rem-CAS etc.) become the synchronous ``uf_sync`` family, where the paper's
+find/compression options map onto per-round pointer-jumping aggressiveness:
+
+    FindNaive   → compress='naive' (one shortcut round)
+    FindHalve   → compress='halve' (two shortcut rounds)
+    FindCompress→ compress='full'  (shortcut to fixpoint)
+
+The Liu–Tarjan framework, Shiloach–Vishkin, Stergiou, and label propagation
+are already synchronous (MPC) algorithms and port rule-for-rule.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .primitives import (
+    INT_MAX,
+    full_compress,
+    hook_and_record,
+    init_forest,
+    jump_round,
+    parents_of,
+    write_min,
+)
+
+FinishFn = Callable[..., tuple[jax.Array, jax.Array]]
+_REGISTRY: dict[str, FinishFn] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_finish(name: str) -> FinishFn:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown finish method {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def finish_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _loop(body, P, max_rounds: int):
+    """Run ``body: P -> P`` until fixpoint; returns (P, rounds)."""
+
+    def cond(st):
+        _, changed, i = st
+        return changed & (i < max_rounds)
+
+    def step(st):
+        P, _, i = st
+        P2 = body(P)
+        return P2, jnp.any(P2 != P), i + 1
+
+    P, _, rounds = jax.lax.while_loop(cond, step, (P, jnp.bool_(True), 0))
+    return P, rounds
+
+
+# ---------------------------------------------------------------------------
+# Label propagation (paper B.2.6): frontier-based scatter-min.
+# ---------------------------------------------------------------------------
+
+@register("label_prop")
+def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
+    n = P.shape[0] - 1
+
+    def cond(st):
+        _, frontier, i = st
+        return jnp.any(frontier) & (i < max_rounds)
+
+    def body(st):
+        P, frontier, i = st
+        act = frontier[senders]
+        cand = jnp.where(act, P[senders], INT_MAX)
+        P2 = write_min(P, receivers, cand, act)
+        return P2, P2 != P, i + 1
+
+    init_frontier = jnp.ones((n + 1,), jnp.bool_).at[n].set(False)
+    P, _, rounds = jax.lax.while_loop(cond, body, (P, init_frontier, 0))
+    return P, rounds
+
+
+# ---------------------------------------------------------------------------
+# Shiloach–Vishkin (paper B.2.4): min-hook roots + full compression per round.
+# ---------------------------------------------------------------------------
+
+@register("shiloach_vishkin")
+def shiloach_vishkin(P, senders, receivers, *, max_rounds: int = 1 << 20):
+    def body(P):
+        pu = P[senders]
+        pv = P[receivers]
+        root_u = parents_of(P, pu) == pu
+        mask = root_u & (pv < pu)
+        P = write_min(P, pu, pv, mask)
+        return full_compress(P)
+
+    return _loop(body, P, max_rounds)
+
+
+# ---------------------------------------------------------------------------
+# UF-Sync family (TPU adaptation of the union-find variants, DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def _compress(P, how: str):
+    if how == "naive":
+        return jump_round(P)
+    if how == "halve":
+        return jump_round(jump_round(P))
+    if how == "full":
+        return full_compress(P)
+    raise ValueError(how)
+
+
+def make_uf_sync(compress: str = "naive") -> FinishFn:
+    def uf_sync(P, senders, receivers, *, max_rounds: int = 1 << 20):
+        def body(P):
+            pu = P[senders]
+            pv = P[receivers]
+            root_u = parents_of(P, pu) == pu
+            mask = root_u & (pv < pu)
+            P = write_min(P, pu, pv, mask)
+            return _compress(P, compress)
+
+        return _loop(body, P, max_rounds)
+
+    uf_sync.__name__ = f"uf_sync_{compress}"
+    return uf_sync
+
+
+register("uf_sync_naive")(make_uf_sync("naive"))
+register("uf_sync_halve")(make_uf_sync("halve"))
+register("uf_sync_full")(make_uf_sync("full"))
+_REGISTRY["uf_sync"] = _REGISTRY["uf_sync_naive"]  # paper-fastest analogue
+
+
+# ---------------------------------------------------------------------------
+# Liu–Tarjan rule framework (paper §3.3.2 + Appendix D.4): 16 variants.
+# connect ∈ {C: Connect, P: ParentConnect, E: ExtendedConnect}
+# root-up ∈ {U: unconditional, R: only roots updated}
+# shortcut ∈ {S: one round, F: to fixpoint}
+# alter    ∈ {A: rewrite edges to parent ids, -: keep}
+# ---------------------------------------------------------------------------
+
+LIU_TARJAN_VARIANTS: dict[str, tuple[str, bool, str, bool]] = {
+    # name: (connect, rootup, shortcut, alter)
+    "CUSA": ("connect", False, "S", True),
+    "CRSA": ("connect", True, "S", True),
+    "PUSA": ("parent", False, "S", True),
+    "PRSA": ("parent", True, "S", True),
+    "PUS": ("parent", False, "S", False),
+    "PRS": ("parent", True, "S", False),
+    "EUSA": ("extended", False, "S", True),
+    "EUS": ("extended", False, "S", False),
+    "CUFA": ("connect", False, "F", True),
+    "CRFA": ("connect", True, "F", True),
+    "PUFA": ("parent", False, "F", True),
+    "PRFA": ("parent", True, "F", True),
+    "PUF": ("parent", False, "F", False),
+    "PRF": ("parent", True, "F", False),
+    "EUFA": ("extended", False, "F", True),
+    "EUF": ("extended", False, "F", False),
+}
+
+
+def _lt_connect(P, u, v, connect: str, rootup: bool):
+    """One connect phase. u/v may be altered labels (possibly -1).
+
+    RootUp ("update the parent value of a vertex iff it is a tree-root at the
+    start of the round"): the write target is redirected to the endpoint's
+    round-start root — plain endpoint masking starves edges whose endpoints
+    are both interior, so information must flow through roots (this matches
+    the hook step of SV / union-find, which Liu–Tarjan's root-based variants
+    generalize).
+    """
+    P0 = P  # round-start snapshot: all gathers/masks read it
+    pu = parents_of(P0, u)
+    pv = parents_of(P0, v)
+
+    def put(P, tgt, val):
+        if rootup:
+            tgt = parents_of(P0, tgt)  # redirect to round-start root
+            mask = parents_of(P0, tgt) == tgt
+        else:
+            mask = None
+        return write_min(P, tgt, val, mask)
+
+    if connect == "connect":
+        P = put(P, u, v)
+        P = put(P, v, u)
+    elif connect == "parent":
+        P = put(P, u, pv)
+        P = put(P, v, pu)
+    elif connect == "extended":
+        P = put(P, u, pv)
+        P = put(P, v, pu)
+        P = put(P, pu, pv)
+        P = put(P, pv, pu)
+    else:
+        raise ValueError(connect)
+    return P
+
+
+def make_liu_tarjan(variant: str) -> FinishFn:
+    connect, rootup, shortcut, alter = LIU_TARJAN_VARIANTS[variant]
+
+    def liu_tarjan(P, senders, receivers, *, max_rounds: int = 1 << 20):
+        def cond(st):
+            _, _, _, changed, i = st
+            return changed & (i < max_rounds)
+
+        def body(st):
+            P, u, v, _, i = st
+            P2 = _lt_connect(P, u, v, connect, rootup)
+            P2 = full_compress(P2) if shortcut == "F" else jump_round(P2)
+            changed = jnp.any(P2 != P)
+            if alter:
+                u2, v2 = parents_of(P2, u), parents_of(P2, v)
+                # altered edges are part of the algorithm state: a round that
+                # only rewrites endpoints has not converged yet
+                changed = changed | jnp.any(u2 != u) | jnp.any(v2 != v)
+            else:
+                u2, v2 = u, v
+            return P2, u2, v2, changed, i + 1
+
+        st = (P, senders.astype(P.dtype), receivers.astype(P.dtype),
+              jnp.bool_(True), 0)
+        P, _, _, _, rounds = jax.lax.while_loop(cond, body, st)
+        return P, rounds
+
+    liu_tarjan.__name__ = f"liu_tarjan_{variant}"
+    return liu_tarjan
+
+
+for _v in LIU_TARJAN_VARIANTS:
+    register(f"liu_tarjan_{_v}")(make_liu_tarjan(_v))
+_REGISTRY["liu_tarjan"] = _REGISTRY["liu_tarjan_CRFA"]  # paper-fastest LT variant
+
+
+# ---------------------------------------------------------------------------
+# Stergiou (paper B.2.5): ParentConnect with a two-array (prev/cur) labeling.
+# ---------------------------------------------------------------------------
+
+@register("stergiou")
+def stergiou(P, senders, receivers, *, max_rounds: int = 1 << 20):
+    def cond(st):
+        _, changed, i = st
+        return changed & (i < max_rounds)
+
+    def body(st):
+        cur, _, i = st
+        prev = cur
+        pu = parents_of(prev, prev[senders])
+        pv = parents_of(prev, prev[receivers])
+        cur = write_min(cur, prev[senders], pv)
+        cur = write_min(cur, prev[receivers], pu)
+        cur = jump_round(cur)
+        return cur, jnp.any(cur != prev), i + 1
+
+    P, _, rounds = jax.lax.while_loop(cond, body, (P, jnp.bool_(True), 0))
+    return P, rounds
+
+
+# ---------------------------------------------------------------------------
+# Root-based spanning-forest finish (paper §3.4): uf_sync/SV + edge recording.
+# ---------------------------------------------------------------------------
+
+class ForestState(NamedTuple):
+    P: jax.Array
+    fu: jax.Array
+    fv: jax.Array
+
+
+def uf_sync_forest(P, senders, receivers, fu=None, fv=None, *,
+                   compress: str = "full", max_rounds: int = 1 << 20):
+    """uf_sync that records one forest edge per hooked root (Theorem 6)."""
+    n = P.shape[0] - 1
+    if fu is None:
+        fu, fv = init_forest(n, P.dtype)
+
+    def cond(st):
+        _, _, _, changed, i = st
+        return changed & (i < max_rounds)
+
+    def body(st):
+        P, fu, fv, _, i = st
+        pu = P[senders]
+        pv = P[receivers]
+        root_u = parents_of(P, pu) == pu
+        mask = root_u & (pv < pu)
+        P2, fu, fv = hook_and_record(P, pu, pv, mask, senders, receivers, fu, fv)
+        P2 = _compress(P2, compress)
+        return P2, fu, fv, jnp.any(P2 != P), i + 1
+
+    P, fu, fv, _, rounds = jax.lax.while_loop(
+        cond, body, (P, fu, fv, jnp.bool_(True), 0))
+    return ForestState(P, fu, fv), rounds

@@ -1,0 +1,147 @@
+"""Low-level primitives shared by every ConnectIt algorithm.
+
+The connectivity labeling ``P`` is a ``(n + 1,)`` integer array:
+  * ``P[v]`` is vertex ``v``'s current label (a vertex id, or ``-1``);
+  * row ``n`` is the *dump slot* for padded edges (``P[n] == n`` always);
+  * ``-1`` is the *virtual minimum* label used to pin the most frequent
+    sampled component ``L_max`` (paper §3.3.2 "relabel to the smallest
+    possible ID"). ``-1`` is a fixed point of every primitive below.
+
+``write_min`` is the TPU-native form of the paper's ``writeMin`` (Appendix A):
+scatter-with-min-combiner replaces the CAS retry loop.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+DEFAULT_MAX_ROUNDS = 1 << 20
+
+
+def init_labels(n: int, dtype=jnp.int32) -> jax.Array:
+    return jnp.arange(n + 1, dtype=dtype)
+
+
+def parents_of(P: jax.Array, x: jax.Array) -> jax.Array:
+    """Gather ``P[x]`` treating negative labels as fixed points."""
+    return jnp.where(x < 0, x, P[jnp.maximum(x, 0)])
+
+
+def write_min(P: jax.Array, idx: jax.Array, vals: jax.Array,
+              mask: jax.Array | None = None) -> jax.Array:
+    """``P[idx] = min(P[idx], vals)`` with negative/masked targets dumped."""
+    n = P.shape[0] - 1
+    ok = idx >= 0
+    if mask is not None:
+        ok = ok & mask
+    idx = jnp.where(ok, idx, n)
+    vals = jnp.where(ok, vals, jnp.asarray(n, P.dtype))
+    return P.at[idx].min(vals.astype(P.dtype))
+
+
+def jump_round(P: jax.Array) -> jax.Array:
+    """One pointer-jumping (shortcut) round: ``P ← P[P]``."""
+    return parents_of(P, P)
+
+
+def full_compress(P: jax.Array, max_rounds: int = 64) -> jax.Array:
+    """Pointer-jump to fixpoint. log2(longest path) rounds."""
+
+    def cond(st):
+        P, changed, i = st
+        return changed & (i < max_rounds)
+
+    def body(st):
+        P, _, i = st
+        P2 = jump_round(P)
+        return P2, jnp.any(P2 != P), i + 1
+
+    P, _, _ = jax.lax.while_loop(cond, body, (P, jnp.bool_(True), 0))
+    return P
+
+
+def is_root(P: jax.Array) -> jax.Array:
+    """Boolean per-vertex root mask (``P[v] == v``); ``-1``-labeled ⇒ False."""
+    n = P.shape[0] - 1
+    return P == jnp.arange(n + 1, dtype=P.dtype)
+
+
+def count_labels(P: jax.Array) -> jax.Array:
+    """Histogram of labels over real vertices (length n); -1 ignored."""
+    n = P.shape[0] - 1
+    lab = P[:n]
+    lab = jnp.where(lab < 0, 0, lab)  # -1 never coexists with counting use
+    return jnp.zeros((n,), jnp.int32).at[lab].add(1)
+
+
+def most_frequent(P: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(label, count) of the most frequent component id (paper L_max)."""
+    counts = count_labels(P)
+    lmax = jnp.argmax(counts).astype(P.dtype)
+    return lmax, counts[lmax]
+
+
+def num_components(P: jax.Array) -> jax.Array:
+    """Number of distinct labels over real vertices (P must be compressed)."""
+    n = P.shape[0] - 1
+    counts = count_labels(P)
+    return jnp.sum(counts > 0)
+
+
+def relabel_lmax(P: jax.Array, lmax: jax.Array) -> jax.Array:
+    """Pin component `lmax` to the virtual minimum label -1 (Theorem 4)."""
+    n = P.shape[0] - 1
+    keep_dump = jnp.arange(n + 1) == n
+    return jnp.where((P == lmax) & ~keep_dump, jnp.asarray(-1, P.dtype), P)
+
+
+def restore_lmax(P: jax.Array) -> jax.Array:
+    """Map the virtual -1 label back to the component's min vertex id."""
+    n = P.shape[0] - 1
+    ids = jnp.arange(n + 1, dtype=P.dtype)
+    cand = jnp.where((P == -1) & (ids < n), ids, jnp.asarray(n, P.dtype))
+    rep = jnp.min(cand)
+    return jnp.where(P == -1, rep, P)
+
+
+@partial(jax.jit, static_argnames=("max_rounds",))
+def canonical_labels(P: jax.Array, max_rounds: int = 64) -> jax.Array:
+    P = full_compress(P, max_rounds)
+    return restore_lmax(P)
+
+
+def hook_and_record(P, idx, vals, mask, eu, ev, fu, fv):
+    """writeMin hook that also records the winning edge per hooked root.
+
+    Root-based spanning forest rule (paper §3.4 / Theorem 6): when root ``x``'s
+    label first decreases because of edge ``e = (eu[i], ev[i])``, store ``e`` at
+    slot ``x``. Two-pass: value scatter-min, then edge-id scatter-min among
+    achievers of the winning value. A slot is written at most once.
+    """
+    n = P.shape[0] - 1
+    old = P
+    P = write_min(P, idx, vals, mask)
+    safe_idx = jnp.where((idx >= 0) & (idx <= n), idx, n)
+    won = (
+        (mask if mask is not None else jnp.bool_(True))
+        & (idx >= 0)
+        & (vals.astype(P.dtype) == P[safe_idx])
+        & (P[safe_idx] < old[safe_idx])
+    )
+    m = eu.shape[0]
+    eid = jnp.arange(m, dtype=jnp.int32)
+    ebuf = jnp.full((n + 1,), INT_MAX, jnp.int32)
+    ebuf = ebuf.at[jnp.where(won, safe_idx, n)].min(jnp.where(won, eid, INT_MAX))
+    sel = (ebuf < INT_MAX) & (fu == -1)
+    take = jnp.minimum(ebuf, m - 1)
+    fu = jnp.where(sel, eu[take], fu)
+    fv = jnp.where(sel, ev[take], fv)
+    return P, fu, fv
+
+
+def init_forest(n: int, dtype=jnp.int32) -> tuple[jax.Array, jax.Array]:
+    return (jnp.full((n + 1,), -1, dtype), jnp.full((n + 1,), -1, dtype))

@@ -1,0 +1,229 @@
+"""ConnectIt sampling phase (paper §3.2, Appendix C.5).
+
+Three schemes, each returning a *partial* connectivity labeling (Def. 3.1)
+plus (optionally) partial spanning-forest edges (Def. B.2):
+
+  * k-out   — per-vertex edge selection, four variants (Appendix C.5):
+              afforest | pure | hybrid (paper default, k=2) | maxdeg
+  * BFS     — label-spreading BFS from ≤ c random sources, accept when the
+              discovered component covers > 10% of vertices
+  * LDD     — one round of Miller–Peng–Xu with exponential shifts (β)
+
+All three are implemented as bulk-synchronous frontier/scatter programs; the
+paper's direction-optimization becomes frontier masking over the static COO
+edge list (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.containers import Graph
+from .finish import ForestState, make_uf_sync, uf_sync_forest
+from .primitives import INT_MAX, full_compress, init_forest, init_labels, write_min
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_sampler(name: str):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown sampler {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def sampler_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# k-out sampling (Algorithm 4 + the four selection variants of Appendix C.5)
+# ---------------------------------------------------------------------------
+
+def _select_kout_edges(g: Graph, key: jax.Array, k: int, variant: str):
+    """Return (senders, receivers) of the ~n*k selected directed edges."""
+    n = g.n
+    deg = (g.indptr[1 : n + 1] - g.indptr[:n]).astype(jnp.int32)  # (n,)
+    base = g.indptr[:n].astype(jnp.int32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    has = deg > 0
+
+    def take(offsets):  # offsets (n,) into each row; invalid rows → self edge
+        pos = base + jnp.minimum(offsets, jnp.maximum(deg - 1, 0))
+        nbr = g.indices[jnp.minimum(pos, g.m_pad - 1)]
+        return jnp.where(has, nbr, ids)
+
+    cols = []
+    if variant == "afforest":
+        for j in range(k):
+            cols.append(jnp.where(j < deg, take(jnp.full((n,), j, jnp.int32)), ids))
+    elif variant in ("pure", "hybrid", "maxdeg"):
+        n_rand = k if variant == "pure" else k - 1
+        keys = jax.random.split(key, max(n_rand, 1))
+        if variant == "hybrid":
+            cols.append(take(jnp.zeros((n,), jnp.int32)))  # first edge
+        elif variant == "maxdeg":
+            # neighbor of maximum degree: two-pass segment-max (deg, then id)
+            degs_all = (g.indptr[1:] - g.indptr[:-1]).astype(jnp.int32)
+            dnbr = jnp.where(g.edge_mask, degs_all[g.receivers], -1)
+            dbuf = jnp.full((n + 1,), -1, jnp.int32).at[g.senders].max(dnbr)
+            hit = g.edge_mask & (dnbr == dbuf[g.senders])
+            nbuf = jnp.full((n + 1,), -1, jnp.int32).at[g.senders].max(
+                jnp.where(hit, g.receivers, -1))
+            cols.append(jnp.where(nbuf[:n] >= 0, nbuf[:n], ids))
+        for j in range(n_rand):
+            r = jax.random.randint(keys[j], (n,), 0, jnp.maximum(deg, 1))
+            cols.append(take(r.astype(jnp.int32)))
+    else:
+        raise ValueError(variant)
+    receivers = jnp.concatenate(cols)
+    senders = jnp.tile(ids, len(cols))
+    # drop self-edges introduced for isolated vertices: point them at the dump
+    bad = senders == receivers
+    senders = jnp.where(bad, n, senders)
+    receivers = jnp.where(bad, n, receivers)
+    return senders, receivers
+
+
+def make_kout(k: int = 2, variant: str = "hybrid"):
+    def kout(g: Graph, key: jax.Array, *, want_forest: bool = False):
+        s, r = _select_kout_edges(g, key, k, variant)
+        P = init_labels(g.n)
+        if want_forest:
+            st, _ = uf_sync_forest(P, s, r, compress="full")
+            P = full_compress(st.P)
+            return ForestState(P, st.fu, st.fv)
+        P, _ = make_uf_sync("full")(P, s, r)
+        return full_compress(P)
+
+    kout.__name__ = f"kout_{variant}_k{k}"
+    return kout
+
+
+register("kout")(make_kout(2, "hybrid"))
+register("kout_afforest")(make_kout(2, "afforest"))
+register("kout_pure")(make_kout(2, "pure"))
+register("kout_hybrid")(make_kout(2, "hybrid"))
+register("kout_maxdeg")(make_kout(2, "maxdeg"))
+
+
+# ---------------------------------------------------------------------------
+# BFS sampling (Algorithm 5): label-spreading BFS + 10% coverage gate.
+# ---------------------------------------------------------------------------
+
+def _bfs_from(g: Graph, src: jax.Array, *, max_rounds: int = 1 << 20):
+    """Frontier BFS; returns (visited, parent_vertex) both (n+1,)."""
+    n = g.n
+    visited = jnp.zeros((n + 1,), jnp.bool_).at[src].set(True)
+    parent = jnp.full((n + 1,), -1, jnp.int32)
+
+    def cond(st):
+        _, _, frontier, i = st
+        return jnp.any(frontier) & (i < max_rounds)
+
+    def body(st):
+        visited, parent, frontier, i = st
+        act = frontier[g.senders]
+        # discovery: min sender wins the parent slot of each new vertex
+        prop = jnp.where(act & ~visited[g.receivers], g.senders, INT_MAX)
+        buf = jnp.full((n + 1,), INT_MAX, jnp.int32).at[g.receivers].min(prop)
+        new = (buf < INT_MAX) & ~visited
+        parent = jnp.where(new, jnp.minimum(buf, n), parent)
+        visited = visited | new
+        return visited, parent, new, i + 1
+
+    visited, parent, _, _ = jax.lax.while_loop(
+        cond, body, (visited, parent, visited, 0))
+    return visited, parent
+
+
+@register("bfs")
+def bfs_sample(g: Graph, key: jax.Array, *, c: int = 3, threshold: float = 0.1,
+               want_forest: bool = False):
+    n = g.n
+    P = init_labels(n)
+    for i in range(c):
+        key, sub = jax.random.split(key)
+        src = jax.random.randint(sub, (), 0, n, dtype=jnp.int32)
+        visited, parent = _bfs_from(g, src)
+        size = jnp.sum(visited[:n])
+        ok = size > int(threshold * n)
+        ids = jnp.arange(n + 1, dtype=jnp.int32)
+        lab = jnp.where(visited, src.astype(jnp.int32), ids).at[n].set(n)
+        P = jnp.where(ok, lab, P)
+        if want_forest:
+            fu, fv = init_forest(n)
+            sel = ok & visited & (parent >= 0) & (ids < n) & (ids != src)
+            fu = jnp.where(sel, parent, fu)
+            fv = jnp.where(sel, ids, fv)
+            if bool(ok):
+                return ForestState(P, fu, fv)
+        elif bool(ok):
+            return P
+    if want_forest:
+        fu, fv = init_forest(n)
+        return ForestState(P, fu, fv)
+    return P
+
+
+# ---------------------------------------------------------------------------
+# LDD sampling (Algorithm 6): MPX with exponential shifts, ties by min center.
+# ---------------------------------------------------------------------------
+
+@register("ldd")
+def ldd_sample(g: Graph, key: jax.Array, *, beta: float = 0.2,
+               want_forest: bool = False, max_rounds: int = 1 << 20):
+    n = g.n
+    shifts = jax.random.exponential(key, (n,)) / beta
+    shifts = jnp.minimum(shifts, jnp.float32(max_rounds - 2))
+    # MPX: vertex v starts its own cluster at time δ_max − δ_v (the LARGEST
+    # shift races first; most vertices are covered before they ever wake)
+    wake = jnp.floor(jnp.max(shifts) - shifts).astype(jnp.int32)
+    P = jnp.full((n + 1,), INT_MAX, jnp.int32).at[n].set(n)
+    parent = jnp.full((n + 1,), -1, jnp.int32)
+    ids = jnp.arange(n + 1, dtype=jnp.int32)
+
+    def cond(st):
+        P, _, _, i = st
+        return jnp.any(P[:n] == INT_MAX) & (i < max_rounds)
+
+    def body(st):
+        P, parent, frontier, i = st
+        # uncovered vertices whose shift has elapsed become centers
+        start = (P == INT_MAX) & (wake_pad <= i) & (ids < n)
+        P = jnp.where(start, ids, P)
+        frontier = frontier | start
+        # grow all clusters one hop; min center id wins contested vertices
+        act = frontier[g.senders]
+        prop = jnp.where(act & (P[g.receivers] == INT_MAX), P[g.senders], INT_MAX)
+        buf = jnp.full((n + 1,), INT_MAX, jnp.int32).at[g.receivers].min(prop)
+        new = (buf < INT_MAX) & (P == INT_MAX)
+        # record the discovery edge (min sender among achievers of buf)
+        pprop = jnp.where(
+            act & new[g.receivers] & (P[g.senders] == buf[g.receivers]),
+            g.senders, INT_MAX)
+        pbuf = jnp.full((n + 1,), INT_MAX, jnp.int32).at[g.receivers].min(pprop)
+        parent = jnp.where(new, jnp.minimum(pbuf, n), parent)
+        P = jnp.where(new, buf, P)
+        return P, parent, new, i + 1
+
+    wake_pad = jnp.concatenate([wake, jnp.array([INT_MAX], jnp.int32)])
+    frontier0 = jnp.zeros((n + 1,), jnp.bool_)
+    P, parent, _, _ = jax.lax.while_loop(cond, body, (P, parent, frontier0, 0))
+    if want_forest:
+        fu, fv = init_forest(n)
+        sel = (parent >= 0) & (ids < n)
+        fu = jnp.where(sel, parent, fu)
+        fv = jnp.where(sel, ids, fv)
+        return ForestState(P, fu, fv)
+    return P

@@ -1,0 +1,60 @@
+"""Parallel batch-incremental connectivity (paper §3.5 / Appendix B.4).
+
+``process_batch`` applies one batch of edge insertions and connectivity
+queries as a single synchronous dispatch — the TPU-native realization of the
+paper's Type (1)/(2) streaming algorithms (DESIGN.md §2). The labeling array
+is the persistent state; queries are answered against the post-insertion
+labeling (the paper's batch-incremental correctness definition: operations in
+a batch linearize against the state at batch start, with inserts before
+queries — our phase split matches the paper's Type (3) phase-concurrency).
+
+The labeling is kept *fully compressed* between batches so queries are O(1)
+gathers — mirroring the paper's observation that compression work shifts
+latency from queries to inserts.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .finish import get_finish
+from .primitives import full_compress, init_labels
+
+
+class StreamState(NamedTuple):
+    P: jax.Array  # (n + 1,) compressed labeling
+
+
+def init_stream(n: int, dtype=jnp.int32) -> StreamState:
+    return StreamState(init_labels(n, dtype))
+
+
+@partial(jax.jit, static_argnames=("finish",))
+def insert_batch(state: StreamState, batch_u, batch_v,
+                 finish: str = "uf_sync_full") -> StreamState:
+    """Apply a batch of edge insertions. Batches are symmetrized internally
+    (min-based finish methods hook along the lower-endpoint direction, so
+    both directions must be visible — static graphs carry both by
+    construction). Padded slots must point at the dump id n."""
+    u = jnp.concatenate([batch_u, batch_v])
+    v = jnp.concatenate([batch_v, batch_u])
+    P, _ = get_finish(finish)(state.P, u, v)
+    return StreamState(full_compress(P))
+
+
+@jax.jit
+def query_batch(state: StreamState, qa, qb) -> jax.Array:
+    """IsConnected for each (qa[i], qb[i]) against the compressed labeling."""
+    return state.P[qa] == state.P[qb]
+
+
+@partial(jax.jit, static_argnames=("finish",))
+def process_batch(state: StreamState, batch_u, batch_v, qa, qb,
+                  finish: str = "uf_sync_full"):
+    """Inserts then queries, one dispatch (paper Algorithm 3 ProcessBatch)."""
+    state = insert_batch(state, batch_u, batch_v, finish=finish)
+    return state, query_batch(state, qa, qb)

@@ -1,0 +1,2 @@
+from .containers import Graph, build_graph, components_oracle, graph_spec  # noqa: F401
+from . import generators  # noqa: F401

@@ -1,0 +1,140 @@
+"""Static-shape graph containers for JAX.
+
+Conventions (see DESIGN.md §7):
+  * Vertices are ``0..n-1``. A *dump vertex* with id ``n`` absorbs padded edges:
+    label/feature arrays sized over vertices are allocated with ``n + 1`` rows so
+    scatter ops on padded edges are harmless.
+  * Edge lists are COO ``(senders, receivers)`` int32 arrays padded to a static
+    length with the sentinel ``n`` at both endpoints.
+  * Undirected graphs store each edge in both directions (the paper counts
+    directed edges; symmetrization happens at build time).
+  * CSR (``indptr``, ``indices``) is carried alongside COO for per-vertex edge
+    selection (k-out sampling, neighbor sampling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """COO + CSR static graph. All arrays are device arrays."""
+
+    senders: jax.Array      # (m_pad,) int32, sentinel = n for padding
+    receivers: jax.Array    # (m_pad,) int32
+    indptr: jax.Array       # (n + 2,) int32 CSR offsets (row n = dump, empty)
+    indices: jax.Array      # (m_pad,) int32 CSR column ids, sentinel-padded
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))  # real directed edges
+
+    @property
+    def m_pad(self) -> int:
+        return self.senders.shape[0]
+
+    @property
+    def edge_mask(self) -> jax.Array:
+        return jnp.arange(self.m_pad, dtype=jnp.int32) < self.m
+
+    def degrees(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]  # (n + 1,), dump row last
+
+
+def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
+    out = np.full((size,), fill, dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def build_graph(
+    edges: np.ndarray,
+    n: int,
+    *,
+    symmetrize: bool = True,
+    dedup: bool = True,
+    pad_multiple: int = 8,
+) -> Graph:
+    """Build a Graph from a host-side (k, 2) int array of undirected edges."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    edges = edges[edges[:, 0] != edges[:, 1]]  # drop self loops
+    if symmetrize:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    if dedup and edges.shape[0]:
+        edges = np.unique(edges, axis=0)
+    # sort by sender for CSR
+    if edges.shape[0]:
+        order = np.lexsort((edges[:, 1], edges[:, 0]))
+        edges = edges[order]
+    m = int(edges.shape[0])
+    m_pad = max(round_up(m, pad_multiple), pad_multiple)
+    senders = _pad_to(edges[:, 0].astype(np.int32), m_pad, n)
+    receivers = _pad_to(edges[:, 1].astype(np.int32), m_pad, n)
+    counts = np.bincount(edges[:, 0], minlength=n + 1).astype(np.int64)
+    indptr = np.zeros((n + 2,), dtype=np.int32)
+    indptr[1:] = np.cumsum(counts)
+    return Graph(
+        senders=jnp.asarray(senders),
+        receivers=jnp.asarray(receivers),
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(receivers),  # sorted-by-sender ⇒ CSR columns
+        n=n,
+        m=m,
+    )
+
+
+def graph_spec(n: int, m_pad: int, *, idx_dtype=jnp.int32) -> Graph:
+    """ShapeDtypeStruct stand-in Graph for dry-run lowering (no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    return Graph(
+        senders=sds((m_pad,), idx_dtype),
+        receivers=sds((m_pad,), idx_dtype),
+        indptr=sds((n + 2,), idx_dtype),
+        indices=sds((m_pad,), idx_dtype),
+        n=n,
+        m=m_pad,
+    )
+
+
+def to_numpy_edges(g: Graph) -> np.ndarray:
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    return np.stack([s, r], axis=1)
+
+
+def num_components_oracle(g: Graph) -> int:
+    """Host-side union-find oracle (tests / benchmarks only)."""
+    return len(set(components_oracle(g)))
+
+
+def components_oracle(g: Graph) -> np.ndarray:
+    """Host-side union-find labels: component id = min vertex id in component."""
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    for u, v in zip(s.tolist(), r.tolist()):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            if ru < rv:
+                parent[rv] = ru
+            else:
+                parent[ru] = rv
+    return np.array([find(i) for i in range(g.n)], dtype=np.int64)

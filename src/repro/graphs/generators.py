@@ -1,0 +1,148 @@
+"""Host-side synthetic graph generators (numpy) → static Graph containers.
+
+The paper's evaluation suite (Table 2, §4.4, §4.5) uses web graphs, social
+networks, road networks, RMAT, Barabási–Albert, and d-dimensional tori. We
+generate scaled-down stand-ins from the same families.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .containers import Graph, build_graph
+
+
+def rmat(n: int, m: int, *, a: float = 0.5, b: float = 0.1, c: float = 0.1,
+         seed: int = 0) -> Graph:
+    """RMAT generator with paper parameters (a,b,c) = (0.5, 0.1, 0.1)."""
+    rng = np.random.default_rng(seed)
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    d = 1.0 - a - b - c
+    p = np.array([a, b, c, d])
+    for level in range(scale):
+        quad = rng.choice(4, size=m, p=p)
+        bit = 1 << (scale - 1 - level)
+        src += np.where((quad == 2) | (quad == 3), bit, 0)
+        dst += np.where((quad == 1) | (quad == 3), bit, 0)
+    src %= n
+    dst %= n
+    return build_graph(np.stack([src, dst], 1), n)
+
+
+def barabasi_albert(n: int, k: int, *, seed: int = 0) -> Graph:
+    """BA preferential attachment: each new vertex draws k edges."""
+    rng = np.random.default_rng(seed)
+    targets = np.zeros(n * k, dtype=np.int64)
+    sources = np.zeros(n * k, dtype=np.int64)
+    # repeated-endpoint list trick: sample uniformly from endpoint history.
+    hist = np.zeros(2 * n * k, dtype=np.int64)
+    hlen = 0
+    e = 0
+    for v in range(1, n):
+        for _ in range(k):
+            if hlen == 0:
+                t = 0
+            else:
+                t = hist[rng.integers(0, hlen)]
+            sources[e] = v
+            targets[e] = t
+            hist[hlen] = v
+            hist[hlen + 1] = t
+            hlen += 2
+            e += 1
+    edges = np.stack([sources[:e], targets[:e]], 1)
+    return build_graph(edges, n)
+
+
+def torus(dims: tuple[int, ...]) -> Graph:
+    """d-dimensional torus; each vertex connects to 2d neighbors (Fig. 4b)."""
+    dims = tuple(int(d) for d in dims)
+    n = int(np.prod(dims))
+    coords = np.indices(dims).reshape(len(dims), -1)  # (d, n)
+    strides = np.array([int(np.prod(dims[i + 1:])) for i in range(len(dims))])
+    vid = (coords * strides[:, None]).sum(0)
+    edges = []
+    for axis, size in enumerate(dims):
+        nxt = coords.copy()
+        nxt[axis] = (nxt[axis] + 1) % size
+        nid = (nxt * strides[:, None]).sum(0)
+        edges.append(np.stack([vid, nid], 1))
+    return build_graph(np.concatenate(edges, 0), n)
+
+
+def grid2d(rows: int, cols: int) -> Graph:
+    """2-D grid — a high-diameter road-network stand-in (road_usa analogue)."""
+    r, c = np.indices((rows, cols))
+    vid = (r * cols + c).ravel()
+    right = vid.reshape(rows, cols)[:, :-1].ravel()
+    down = vid.reshape(rows, cols)[:-1, :].ravel()
+    edges = np.concatenate(
+        [np.stack([right, right + 1], 1), np.stack([down, down + cols], 1)], 0)
+    return build_graph(edges, rows * cols)
+
+
+def random_graph(n: int, m: int, *, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2))
+    return build_graph(edges, n)
+
+
+def planted_components(n: int, n_comp: int, avg_deg: float, *,
+                       seed: int = 0) -> Graph:
+    """Union of n_comp random connected blobs — an oracle-friendly testbed."""
+    rng = np.random.default_rng(seed)
+    sizes = np.full(n_comp, n // n_comp)
+    sizes[: n % n_comp] += 1
+    edges = []
+    start = 0
+    for sz in sizes:
+        ids = np.arange(start, start + sz)
+        if sz > 1:
+            # random spanning tree keeps each blob connected
+            perm = rng.permutation(ids)
+            parents = np.array(
+                [perm[rng.integers(0, i)] for i in range(1, sz)])
+            edges.append(np.stack([perm[1:], parents], 1))
+            extra = int(sz * max(avg_deg / 2.0 - 1.0, 0.0))
+            if extra:
+                e = rng.integers(start, start + sz, size=(extra, 2))
+                edges.append(e)
+        start += sz
+    if not edges:
+        edges = [np.zeros((0, 2), dtype=np.int64)]
+    return build_graph(np.concatenate(edges, 0), n)
+
+
+def star(n: int) -> Graph:
+    hub = np.zeros(n - 1, dtype=np.int64)
+    leaves = np.arange(1, n, dtype=np.int64)
+    return build_graph(np.stack([hub, leaves], 1), n)
+
+
+def path(n: int) -> Graph:
+    ids = np.arange(n - 1, dtype=np.int64)
+    return build_graph(np.stack([ids, ids + 1], 1), n)
+
+
+def empty_graph(n: int) -> Graph:
+    return build_graph(np.zeros((0, 2), dtype=np.int64), n)
+
+
+def with_weights(g: Graph, *, seed: int = 0, mean: float = 1.0):
+    """Exponential weights (AMSF §5.1), symmetric across edge directions."""
+    rng = np.random.default_rng(seed)
+    import numpy as _np
+    s = _np.asarray(g.senders)[: g.m]
+    r = _np.asarray(g.receivers)[: g.m]
+    lo = _np.minimum(s, r).astype(_np.int64)
+    hi = _np.maximum(s, r).astype(_np.int64)
+    key = lo * (g.n + 1) + hi
+    _, inverse = _np.unique(key, return_inverse=True)
+    uniq_w = rng.exponential(mean, size=int(inverse.max()) + 1 if len(inverse) else 1)
+    w = uniq_w[inverse].astype(_np.float32)
+    out = _np.ones((g.m_pad,), dtype=_np.float32) * _np.inf
+    out[: g.m] = w
+    import jax.numpy as jnp
+    return jnp.asarray(out)

@@ -1,0 +1,53 @@
+"""Uniform-fanout neighbor sampling for minibatch GNN training (GraphSAGE).
+
+``sample_neighbors`` draws, per frontier node, ``fanout`` neighbors uniformly
+with replacement from the CSR rows (static shapes; degree-0 nodes emit dump
+edges). ``sample_subgraph`` chains hops and returns the union edge list of
+the sampled computation graph plus the seed set — the ``minibatch_lg`` shape
+cell trains the full L-layer GNN on this subgraph with loss on seeds.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .containers import Graph
+
+
+def sample_neighbors(indptr, indices, nodes, key, fanout: int):
+    """nodes: (F,) int32 (may include dump id n). Returns (F*fanout,) nbrs."""
+    n = indptr.shape[0] - 2
+    safe = jnp.minimum(nodes, n)
+    base = indptr[safe]
+    deg = indptr[safe + 1] - base
+    r = jax.random.randint(key, (nodes.shape[0], fanout), 0, 2**31 - 1)
+    off = r % jnp.maximum(deg, 1)[:, None]
+    pos = jnp.minimum(base[:, None] + off, indices.shape[0] - 1)
+    nbr = indices[pos]
+    ok = (deg > 0)[:, None] & (nodes < n)[:, None]
+    return jnp.where(ok, nbr, n).reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("fanouts",))
+def sample_subgraph(indptr, indices, seeds, key, fanouts: tuple):
+    """Multi-hop uniform sampling. Returns (senders, receivers) of the union
+    computation graph in global ids: edges point sampled-neighbor → node."""
+    n = indptr.shape[0] - 2
+    frontier = seeds
+    s_parts = []
+    r_parts = []
+    for hop, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nbrs = sample_neighbors(indptr, indices, frontier, sub, f)
+        r_parts.append(jnp.repeat(frontier, f))
+        s_parts.append(nbrs)
+        frontier = nbrs
+    senders = jnp.concatenate(s_parts)
+    receivers = jnp.concatenate(r_parts)
+    # orphaned directions (dump) stay masked by the models' valid check
+    receivers = jnp.where(senders >= n, n, receivers)
+    return senders.astype(jnp.int32), receivers.astype(jnp.int32)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the edge_relabel kernel.
+
+One bulk-synchronous relabel round (the inner loop of every ConnectIt finish
+method): gather round-start labels at both edge endpoints, propose each
+endpoint's label to the other, merge with min. Jacobi semantics: all gathers
+read the *input* labeling; proposals combine with scatter-min.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_relabel_ref(labels: jnp.ndarray, senders: jnp.ndarray,
+                     receivers: jnp.ndarray) -> jnp.ndarray:
+    """labels: (n_pad,) int32; senders/receivers: (m_pad,) int32 in [0, n_pad).
+
+    Padded edges must point at a self-labeled dump row.
+    """
+    out = labels
+    out = out.at[receivers].min(labels[senders])
+    out = out.at[senders].min(labels[receivers])
+    return out

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: embedding-bag (gather rows + in-bag sum).
+
+Grid over batch blocks; the table is VMEM-resident per device (tables are
+row-sharded over the "model" axis at the framework level, so the per-device
+shard — vocab/|model| × D — is what this kernel sees). Each grid step gathers
+``block_b × L`` rows and reduces over the bag dimension. D is kept whole
+(MXU-lane aligned; D ∈ {16..128} in recsys configs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _embedding_bag_kernel(table_ref, idx_ref, out_ref, *, mode: str):
+    table = table_ref[...]          # (V + 1, D)
+    idx = idx_ref[...]              # (block_b, L)
+    rows = table[idx]               # (block_b, L, D) gather
+    if mode == "sum":
+        out_ref[...] = rows.sum(axis=1)
+    elif mode == "mean":
+        valid = (idx < table.shape[0] - 1)
+        cnt = jnp.maximum(valid.sum(axis=1), 1).astype(rows.dtype)
+        out_ref[...] = rows.sum(axis=1) / cnt[:, None]
+    elif mode == "max":
+        neg = jnp.finfo(rows.dtype).min
+        valid = (idx < table.shape[0] - 1)[..., None]
+        out_ref[...] = jnp.where(valid, rows, neg).max(axis=1)
+    else:
+        raise ValueError(mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_b", "interpret"))
+def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
+                  block_b: int = 1024, interpret: bool = True) -> jax.Array:
+    """table: (V + 1, D); idx: (B, L) int32 in [0, V] (V = dump row)."""
+    vp1, d = table.shape
+    b, l = idx.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    kern = functools.partial(_embedding_bag_kernel, mode=mode)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((vp1, d), lambda i: (0, 0)),      # table resident
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),  # bag block
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(table, idx)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the embedding_bag kernel.
+
+Multi-hot embedding lookup + in-bag reduction — DLRM's hot path (JAX has no
+native ``nn.EmbeddingBag``; this gather + segment-reduce IS the system's
+implementation, per the assignment brief). Bags are a dense (B, L) index
+matrix padded with ``vocab`` (a zero dump row is appended to the table).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      mode: str = "sum") -> jnp.ndarray:
+    """table: (V + 1, D) with zero dump row V; idx: (B, L) int32 in [0, V]."""
+    rows = table[idx]  # (B, L, D)
+    if mode == "sum":
+        return rows.sum(axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum((idx < table.shape[0] - 1).sum(axis=1), 1)
+        return rows.sum(axis=1) / cnt[:, None].astype(rows.dtype)
+    if mode == "max":
+        neg = jnp.finfo(rows.dtype).min
+        valid = (idx < table.shape[0] - 1)[..., None]
+        return jnp.where(valid, rows, neg).max(axis=1)
+    raise ValueError(mode)

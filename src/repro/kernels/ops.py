@@ -1,0 +1,42 @@
+"""Backend-dispatching jit wrappers for the Pallas kernels.
+
+On TPU backends the compiled Pallas path is used; elsewhere (this CPU
+container, and any host-device dry-run) the pure-jnp reference path runs —
+the kernels themselves are still exercised under ``interpret=True`` by the
+test suite, which sweeps shapes/dtypes against the oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .edge_relabel.kernel import edge_relabel as _edge_relabel_pallas
+from .edge_relabel.ref import edge_relabel_ref
+from .embedding_bag.kernel import embedding_bag as _embedding_bag_pallas
+from .embedding_bag.ref import embedding_bag_ref
+from .pointer_jump.kernel import pointer_jump as _pointer_jump_pallas
+from .pointer_jump.ref import pointer_jump_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def edge_relabel(labels, senders, receivers, *, block_m: int = 8192):
+    if _on_tpu():
+        return _edge_relabel_pallas(labels, senders, receivers,
+                                    block_m=block_m, interpret=False)
+    return edge_relabel_ref(labels, senders, receivers)
+
+
+def pointer_jump(labels, *, k: int = 1, block: int = 8192):
+    if _on_tpu():
+        return _pointer_jump_pallas(labels, k=k, block=block, interpret=False)
+    return pointer_jump_ref(labels, k=k)
+
+
+def embedding_bag(table, idx, *, mode: str = "sum", block_b: int = 1024):
+    if _on_tpu():
+        return _embedding_bag_pallas(table, idx, mode=mode, block_b=block_b,
+                                     interpret=False)
+    return embedding_bag_ref(table, idx, mode=mode)

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: blocked pointer jumping (P ← min(P, P[P]), k rounds).
+
+Grid over output label blocks; the full (round-start) label array stays
+VMEM-resident for the arbitrary-index gather, the output streams block by
+block. Multiple jump rounds per dispatch amortize the HBM round trip — the
+`k` knob is a §Perf lever (more jumps/dispatch ⇒ fewer HBM passes, more
+gather traffic per block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pointer_jump_kernel(labels_ref, out_ref, *, k: int, block: int):
+    i = pl.program_id(0)
+    labels = labels_ref[...]
+    mine = jax.lax.dynamic_slice_in_dim(labels, i * block, block)
+    for _ in range(k):
+        mine = jnp.minimum(mine, labels[mine])
+    out_ref[...] = mine
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def pointer_jump(labels: jax.Array, *, k: int = 1, block: int = 8192,
+                 interpret: bool = True) -> jax.Array:
+    n_pad = labels.shape[0]
+    block = min(block, n_pad)
+    assert n_pad % block == 0, (n_pad, block)
+    grid = (n_pad // block,)
+    kern = functools.partial(_pointer_jump_kernel, k=k, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n_pad,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), labels.dtype),
+        interpret=interpret,
+    )(labels)

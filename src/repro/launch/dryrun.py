@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e) + roofline term extraction (g).
+
+For every (architecture × input shape × mesh) cell: ``jax.jit(step,
+in_shardings=…).lower(*ShapeDtypeStructs).compile()`` must succeed on the
+single-pod 16×16 mesh AND the 2×16×16 multi-pod mesh. Prints
+``memory_analysis()`` (proves it fits) and ``cost_analysis()`` (FLOPs/bytes),
+parses collective bytes out of the partitioned HLO, and emits the three
+roofline terms per cell as CSV.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all --mesh both --csv dryrun.csv
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import all_archs, get_arch  # noqa: E402
+from .mesh import (  # noqa: E402
+    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh)
+from .steps import build_cell  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def analyze_hlo(hlo_text: str, loop_trips: int = 1) -> tuple[dict, int]:
+    """Per-device wire-byte estimate for every collective in the partitioned
+    HLO. The *result* type is always printed (operand types are not in all
+    HLO dialects), so we count result bytes with an op-specific factor:
+    all-gather/all-reduce/all-to-all/collective-permute move ~result bytes
+    per device; reduce-scatter moves ~result × group_size (its operand).
+
+    XLA prints while-loop (scan/fori) bodies ONCE; collectives inside a
+    while body (or a computation called from one) are scaled by
+    ``loop_trips`` (the known trip count: n_layers for LM scans, rounds for
+    the connectivity loops).
+
+    Also returns an HBM-traffic estimate with the same loop attribution:
+    Σ over non-fusion-interior ops of 2 × result bytes (read+write proxy) —
+    a floor used alongside XLA's own (loop-unaware) bytes-accessed."""
+    out = {c: 0 for c in _COLLECTIVES}
+    line_re = re.compile(
+        r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+([a-z0-9-]+)\(")
+    comp_re = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$")
+    # pass 1: computation spans + call graph + while bodies
+    cur = "__top__"
+    comp_of_line = []
+    calls: dict[str, set] = {}
+    while_bodies: set[str] = set()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = comp_re.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+        comp_of_line.append(cur)
+        for attr in ("body", "to_apply", "condition", "branch_computations",
+                     "called_computations", "calls"):
+            for g in re.finditer(attr + r"=\{?%?([\w.\-]+)", s):
+                calls.setdefault(cur, set()).add(g.group(1))
+        for g in re.finditer(r"body=%?([\w.\-]+)", s):
+            while_bodies.add(g.group(1))
+    fusion_bodies = set()
+    for line in hlo_text.splitlines():
+        for g in re.finditer(r"\bcalls=%?([\w.\-]+)", line):
+            fusion_bodies.add(g.group(1))
+    # transitively mark computations reachable from while bodies
+    in_loop = set()
+    frontier = list(while_bodies)
+    while frontier:
+        c = frontier.pop()
+        if c in in_loop:
+            continue
+        in_loop.add(c)
+        frontier.extend(calls.get(c, ()))
+    # pass 2: count
+    _SKIP = ("parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "iota", "while", "conditional", "after-all")
+    traffic = 0
+    for line, comp in zip(hlo_text.splitlines(), comp_of_line):
+        stripped = line.strip()
+        m = line_re.search(stripped)
+        if not m:
+            continue
+        result_ty, op = m.groups()
+        op = op.replace("_", "-")
+        shapes = _SHAPE_RE.findall(result_ty)
+        nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        trips = loop_trips if comp in in_loop else 1
+        if op not in _SKIP and comp not in fusion_bodies:
+            traffic += 2 * nbytes * trips
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        if base == "reduce-scatter":
+            g = re.search(r"replica_groups=\{\{([0-9,]+)\}", stripped)
+            nbytes *= len(g.group(1).split(",")) if g else 1
+        out[base] += nbytes * trips
+    return out, traffic
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True) -> dict:
+    arch = get_arch(arch_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    cell = build_cell(arch, shape_name, mesh)
+    t0 = time.time()
+    lowered = cell.lower(mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    trips = int(cell.meta.get("loop_trips", 1))
+    coll, traffic_est = analyze_hlo(hlo, loop_trips=trips)
+    coll_total = sum(coll.values())
+    flops_hlo = float(cost.get("flops", 0.0))
+    bytes_acc = max(float(cost.get("bytes accessed", 0.0)), float(traffic_est))
+    model_flops = cell.meta.get("model_flops", 0) / n_dev
+    # XLA cost_analysis counts while-loop (scan) bodies ONCE; the analytic
+    # MODEL_FLOPS (×8/6 for remat'd train steps) is the floor for loopy
+    # programs. compute term uses the larger of the two.
+    mult = cell.meta.get("flops_multiplier", 1.0)
+    flops = max(flops_hlo, model_flops * mult)
+    compute_t = flops / PEAK_FLOPS_BF16
+    memory_t = bytes_acc / HBM_BW
+    coll_t = coll_total / ICI_BW
+    dom = max((("compute", compute_t), ("memory", memory_t),
+               ("collective", coll_t)), key=lambda kv: kv[1])[0]
+    rec = dict(
+        arch=arch_name, shape=shape_name, mesh=mesh_kind, devices=n_dev,
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+        flops_per_dev=flops, flops_hlo_per_dev=flops_hlo,
+        bytes_per_dev=bytes_acc,
+        collective_bytes_per_dev=coll_total,
+        **{f"coll_{k.replace('-', '_')}": v for k, v in coll.items()},
+        compute_term_s=compute_t, memory_term_s=memory_t,
+        collective_term_s=coll_t, dominant=dom,
+        model_flops_per_dev=model_flops,
+        useful_flops_frac=(model_flops / flops) if flops else 0.0,
+        arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        out_bytes=getattr(mem, "output_size_in_bytes", 0),
+        code_bytes=getattr(mem, "generated_code_size_in_bytes", 0),
+    )
+    if verbose:
+        print(f"== {arch_name} × {shape_name} × {mesh_kind} "
+              f"({n_dev} devices) ==")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={flops:.3e} bytes={bytes_acc:.3e}")
+        print(f"  collectives: {coll}")
+        print(f"  roofline: compute={compute_t:.4e}s memory={memory_t:.4e}s "
+              f"collective={coll_t:.4e}s → dominant={dom}")
+        print(f"  useful-FLOPs fraction (MODEL/HLO): "
+              f"{rec['useful_flops_frac']:.3f}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in all_archs():
+            arch = get_arch(a)
+            for s in arch.shape_names():
+                if arch.supports(s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    records, failures = [], []
+    for a, s in cells:
+        for mk in meshes:
+            try:
+                records.append(run_cell(a, s, mk))
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, mk, repr(e)))
+                traceback.print_exc()
+                if args.fail_fast:
+                    raise
+    if args.csv and records:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(records[0]))
+            w.writeheader()
+            w.writerows(records)
+        print(f"wrote {len(records)} rows to {args.csv}")
+    print(f"\nDRY-RUN SUMMARY: {len(records)} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

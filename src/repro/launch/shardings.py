@@ -1,0 +1,170 @@
+"""Per-family parameter/activation sharding rules (DESIGN.md §5).
+
+Logical activation axes used by the models' ``shard`` callbacks map to mesh
+axes here; parameter PartitionSpecs are assigned by path-pattern rules
+(Megatron TP for dense LM, EP for MoE experts, row-sharded embedding tables
+for DLRM), then *fitted*: axes whose extent doesn't divide the dim are
+re-homed to another dim (e.g. granite's 40 experts don't divide a 16-way
+model axis → TP falls back to the hidden dims). Training cells additionally
+get FSDP: every parameter/optimizer leaf is sharded over the data axes on
+its largest remaining dim (XLA inserts the per-layer all-gathers inside the
+scan — classic ZeRO-3 behaviour).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes
+
+
+def _extent(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    e = 1
+    for a in axes:
+        e *= mesh.shape[a]
+    return e
+
+
+def make_shard_fn(mesh: Mesh):
+    """Activation-constraint callback passed to models: shard(x, axes).
+
+    Logical axes: "data" → (pod, data); "model"/"expert"/"seq" → model.
+    Non-divisible constraints are dropped (they trigger GSPMD involuntary
+    full rematerialization).
+    """
+    dax = data_axes(mesh)
+    table = {"data": dax, "model": ("model",), "expert": ("model",),
+             "seq": ("model",), None: None}
+
+    def shard(x, logical_axes):
+        spec = []
+        for dim, a in zip(x.shape, logical_axes):
+            axes = table.get(a)
+            if axes is None or dim % _extent(mesh, axes) != 0:
+                spec.append(None)
+            else:
+                spec.append(axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    shard.mesh = mesh        # models may opt into explicit shard_map paths
+    shard.dax = dax
+    return shard
+
+
+_LM_RULES = [
+    (r"embed$", P("model", None)),
+    (r"lm_head$", P(None, "model")),
+    (r"(wq|wk|wv)$", P(None, "model")),
+    (r"wo$", P("model", None)),
+    (r"ffn/(w_gate|w_up)$", P(None, "model")),
+    (r"ffn/w_down$", P("model", None)),
+    (r"moe/router$", P(None, None)),
+    (r"moe/(w_gate|w_up|w_down)$", P("model", None, None)),   # EP
+    (r"moe/shared/(w_gate|w_up)$", P(None, "model")),
+    (r"moe/shared/w_down$", P("model", None)),
+    (r"(ln_attn|ln_ffn|final_norm|q_norm|k_norm|eps)$", P()),
+]
+
+_DLRM_RULES = [
+    (r"tables/\d+$", P("model", None)),   # vocab-row sharding
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fit(mesh: Mesh, leaf, spec: P, *, fsdp: bool) -> P:
+    """Right-align the rule spec on the leaf dims (stacked layer params carry
+    a leading L axis), drop non-divisible assignments, re-home dropped axes,
+    and optionally add an FSDP data-axis shard on the largest free dim."""
+    dims = list(leaf.shape)
+    nd = len(dims)
+    rule = list(spec)
+    assign = [None] * nd
+    # right-align: rule covers the trailing dims
+    for i, a in enumerate(rule[-nd:] if len(rule) > nd else rule):
+        assign[nd - min(len(rule), nd) + i] = a
+    dropped = []
+    for i in range(nd):
+        if assign[i] is not None and dims[i] % _extent(mesh, assign[i]) != 0:
+            dropped.append(assign[i])
+            assign[i] = None
+    for a in dropped:  # re-home (e.g. 40 experts → TP on hidden dim instead)
+        for i in reversed(range(nd)):
+            if assign[i] is None and dims[i] % _extent(mesh, a) == 0 \
+                    and dims[i] >= _extent(mesh, a):
+                assign[i] = a
+                break
+    if fsdp:
+        dax = data_axes(mesh)
+        if dax:
+            cands = [i for i in range(nd)
+                     if assign[i] is None and dims[i] % _extent(mesh, dax) == 0
+                     and dims[i] >= _extent(mesh, dax)]
+            if cands:
+                best = max(cands, key=lambda i: dims[i])
+                assign[best] = dax
+    return P(*assign)
+
+
+def param_specs(params_shapes: Any, family: str, mesh: Mesh, *,
+                fsdp: bool = False, fsdp_exclude: str | None = None) -> Any:
+    """PartitionSpec pytree for a params shape-tree (from jax.eval_shape)."""
+    rules = {"lm": _LM_RULES, "recsys": _DLRM_RULES}.get(family, [])
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        spec = P()
+        for pat, s in rules:
+            if re.search(pat, ps):
+                spec = s
+                break
+        if leaf.ndim == 0:
+            return P()
+        use_fsdp = fsdp and leaf.size > 1 << 16
+        if fsdp_exclude and re.search(fsdp_exclude, ps):
+            use_fsdp = False
+        return _fit(mesh, leaf, spec, fsdp=use_fsdp)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shapes)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_sharding(mesh: Mesh, tree: Any) -> Any:
+    """Shard leading (batch) dims over the data axes when divisible."""
+    dax = data_axes(mesh)
+
+    def per_leaf(x):
+        if getattr(x, "ndim", 0) == 0 or not dax \
+                or x.shape[0] % _extent(mesh, dax) != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dax, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(per_leaf, tree)

@@ -1,0 +1,470 @@
+"""Cell builders: (architecture × input shape × mesh) → lowerable programs.
+
+Each cell packages a jit-able step function with ShapeDtypeStruct inputs
+(``input_specs`` — weak-type-correct, shardable, never allocated) and input
+NamedShardings. ``dryrun.py`` lowers + compiles every cell; ``train.py`` /
+``serve.py`` run reduced cells for real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs.base import Arch
+from ..core import distributed as cdist
+from ..graphs.containers import round_up
+from ..models import dlrm as dlrm_mod
+from ..models import gnn as gnn_mod
+from ..models import nequip as nequip_mod
+from ..models import transformer as tfm
+from ..graphs.sampler import sample_subgraph
+from .mesh import all_axes, data_axes
+from .shardings import batch_sharding, make_shard_fn, named, param_specs, replicated
+
+sds = jax.ShapeDtypeStruct
+OPT = optim.OptimizerConfig()
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self, mesh):
+        with mesh:
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.args)
+
+
+def _key_spec():
+    return sds((2,), jnp.uint32)
+
+
+def _opt_shapes(params_shapes):
+    return jax.eval_shape(optim.init_adam, params_shapes)
+
+
+def _lm_active_params(cfg: tfm.TransformerConfig) -> int:
+    """Active parameters per token (MoE counts top_k + shared experts)."""
+    D, dh = cfg.d_model, cfg.head_dim
+    att = D * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.is_moe:
+        F = cfg.d_expert or cfg.d_ff
+        ffn = (cfg.top_k + cfg.n_shared_experts) * 3 * D * F + D * cfg.n_experts
+    else:
+        ffn = 3 * D * cfg.d_ff
+    return cfg.n_layers * (att + ffn) + 2 * cfg.vocab * D
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    spec = arch.shapes[shape_name]
+    shard = make_shard_fn(mesh)
+    kind = spec["kind"]
+    B, S = spec["batch"], spec["seq"]
+    n_groups = 1
+    for a in data_axes(mesh):
+        n_groups *= mesh.shape[a]
+    if B == 1:
+        n_groups = 1
+    moe_fsdp = spec.get("moe_fsdp", kind == "train")
+    cfg: tfm.TransformerConfig = dataclasses.replace(
+        arch.model, moe_groups=n_groups if arch.model.is_moe else 1,
+        moe_fsdp=moe_fsdp,
+        moe_a2a_int8=spec.get("moe_a2a_int8", False))
+    no_moe_fsdp = r"moe/(w_gate|w_up|w_down)$" if not moe_fsdp else None
+    pshapes = jax.eval_shape(lambda k: tfm.init_params(k, cfg), _key_spec())
+    pshard = named(mesh, param_specs(pshapes, "lm", mesh,
+                                     fsdp=(kind == "train"),
+                                     fsdp_exclude=no_moe_fsdp))
+
+    if kind == "train":
+        oshapes = _opt_shapes(pshapes)
+        oshard = named(mesh, param_specs(oshapes, "lm", mesh, fsdp=True,
+                                         fsdp_exclude=no_moe_fsdp))
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                return tfm.lm_loss(p, batch["tokens"], batch["labels"], cfg,
+                                   shard)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state, info = optim.update(OPT, params, grads,
+                                                   opt_state)
+            return params, opt_state, {"loss": loss, **info}
+
+        tokens = B * S
+        model_flops = 6 * _lm_active_params(cfg) * tokens
+        return Cell(arch.name, shape_name, train_step,
+                    (pshapes, oshapes, batch),
+                    (pshard, oshard, batch_sharding(mesh, batch)),
+                    donate=(0, 1),
+                    meta=dict(model_flops=model_flops, tokens=tokens,
+                              loop_trips=cfg.n_layers,
+                              flops_multiplier=8 / 6 if cfg.remat else 1.0))
+
+    if kind == "prefill":
+        tokens_spec = sds((B, S), jnp.int32)
+
+        def prefill_step(params, tokens):
+            logits, cache = tfm.prefill(params, tokens, cfg, S, shard)
+            return logits, cache
+
+        model_flops = 2 * _lm_active_params(cfg) * B * S
+        return Cell(arch.name, shape_name, prefill_step,
+                    (pshapes, tokens_spec),
+                    (pshard, batch_sharding(mesh, tokens_spec)),
+                    meta=dict(model_flops=model_flops, tokens=B * S,
+                              loop_trips=cfg.n_layers))
+
+    if kind == "decode":
+        cache = tfm.cache_spec(cfg, B, S)
+        tok = sds((B,), jnp.int32)
+        dax = data_axes(mesh)
+        # KV cache: batch over data axes; sequence-shard over "model" (SP) —
+        # GQA kv-head counts don't divide the model axis, sequence does.
+        cache_shard = tfm.KVCache(
+            NamedSharding(mesh, P(None, dax, "model", None, None)),
+            NamedSharding(mesh, P(None, dax, "model", None, None)),
+            NamedSharding(mesh, P()))
+        if B == 1:  # long-context single stream: no batch to shard
+            cache_shard = tfm.KVCache(
+                NamedSharding(mesh, P(None, None, "model", None, None)),
+                NamedSharding(mesh, P(None, None, "model", None, None)),
+                NamedSharding(mesh, P()))
+
+        def decode(params, cache, tok):
+            return tfm.decode_step(params, cache, tok, cfg, shard)
+
+        model_flops = 2 * _lm_active_params(cfg) * B
+        return Cell(arch.name, shape_name, decode,
+                    (pshapes, cache, tok),
+                    (pshard, cache_shard, batch_sharding(mesh, tok)),
+                    donate=(1,),
+                    meta=dict(model_flops=model_flops, tokens=B,
+                              loop_trips=cfg.n_layers,
+                              kv_bytes=int(np.prod(cache.k.shape, dtype=np.int64))
+                              * 2 * 2))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_edge_specs(m_pad: int):
+    return sds((m_pad,), jnp.int32), sds((m_pad,), jnp.int32)
+
+
+def _gnn_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    spec = arch.shapes[shape_name]
+    shard = make_shard_fn(mesh)
+    kind = spec["kind"]
+    is_nequip = arch.name == "nequip"
+    dax = data_axes(mesh)
+
+    if kind == "molecule":
+        n_real = spec["nodes"] * spec["batch"]
+        m_pad = round_up(spec["edges"] * 2 * spec["batch"], 8192)
+        n_graphs = spec["batch"]
+    elif kind == "minibatch":
+        n_real = spec["n"]
+        m_pad = round_up(spec["batch"] * (spec["fanout"][0]
+                         + spec["fanout"][0] * spec["fanout"][1]), 8192)
+        n_graphs = 1
+    else:
+        n_real = spec["n"]
+        m_pad = round_up(spec["m"], 8192)
+        n_graphs = 1
+    # pad node tables so (n + 1) rows shard evenly over the mesh; rows in
+    # [n_real, n] are inert (no edges point at them; loss masks them out)
+    n = round_up(n_real + 1, 512) - 1
+    d_feat = spec["d_feat"]
+    n_classes = spec["n_classes"]
+
+    big = n_real > 1_000_000
+    if is_nequip:
+        mcfg = dataclasses.replace(arch.model, remat=big)
+        pshapes = jax.eval_shape(
+            lambda k: nequip_mod.init_nequip(k, mcfg), _key_spec())
+    else:
+        mcfg = dataclasses.replace(arch.model, d_in=d_feat,
+                                   n_classes=n_classes,
+                                   dtype="bfloat16" if big else "float32",
+                                   readout="graph" if kind == "molecule"
+                                   else "node")
+        pshapes = jax.eval_shape(
+            lambda k: gnn_mod.init_gnn(k, mcfg), _key_spec())
+    pshard = replicated(mesh, pshapes)
+    oshapes = _opt_shapes(pshapes)
+    oshard = replicated(mesh, oshapes)
+    # node tables sharded over the data axes (padded to divide); edge arrays
+    # sharded over every mesh axis. Each layer transiently all-gathers the
+    # node state for the edge gather and reduce-scatters the aggregation
+    # (see gnn_forward) — per-node activations never replicate at rest.
+    espec = NamedSharding(mesh, P(all_axes(mesh)))
+    nshard = NamedSharding(mesh, P(dax, None))
+
+    if is_nequip:
+        feats = {"species": sds((n + 1,), jnp.int32),
+                 "coords": sds((n + 1, 3), jnp.float32)}
+        fshard = {"species": NamedSharding(mesh, P()),
+                  "coords": NamedSharding(mesh, P())}
+        targets = sds((n_graphs,), jnp.float32)
+    else:
+        feats = {"feats": sds((n + 1, d_feat), jnp.float32)}
+        fshard = {"feats": nshard}
+        if mcfg.kind == "egnn":
+            feats["coords"] = sds((n + 1, 3), jnp.float32)
+            fshard["coords"] = NamedSharding(mesh, P())
+        targets = sds((n_graphs if kind == "molecule" else n,), jnp.int32)
+
+    def loss_of(params, feats, s, r, targets, graph_ids=None):
+        if is_nequip:
+            return nequip_mod.nequip_loss(
+                params, mcfg, feats["species"], feats["coords"], s, r,
+                targets, graph_ids=graph_ids, n_graphs=n_graphs, shard=shard)
+        mask = (jnp.arange(n) < n_real).astype(jnp.float32) \
+            if mcfg.readout == "node" else None
+        return gnn_mod.gnn_loss(
+            params, mcfg, feats["feats"], s, r, targets,
+            coords=feats.get("coords"), graph_ids=graph_ids,
+            n_graphs=n_graphs, label_mask=mask, shard=shard)
+
+    meta = dict(model_flops=2 * 3 * m_pad * getattr(mcfg, "d_hidden", 32)
+                * getattr(mcfg, "n_layers", 5), edges=m_pad)
+
+    if kind == "minibatch":
+        indptr = sds((n + 2,), jnp.int32)
+        indices = sds((round_up(spec["m"], 8192),), jnp.int32)
+        seeds = sds((spec["batch"],), jnp.int32)
+        labels = sds((n,), jnp.int32)
+
+        def train_step(params, opt_state, feats, indptr, indices, seeds,
+                       labels, key):
+            s, r = sample_subgraph(indptr, indices, seeds, key,
+                                   spec["fanout"])
+
+            def loss_fn(p):
+                mask = jnp.zeros((n,), jnp.float32).at[seeds].set(1.0)
+                if is_nequip:
+                    return nequip_mod.nequip_loss(
+                        p, mcfg, feats["species"], feats["coords"], s, r,
+                        jnp.zeros((1,), jnp.float32), shard=shard)
+                return gnn_mod.gnn_loss(
+                    p, mcfg, feats["feats"], s, r, labels,
+                    coords=feats.get("coords"), label_mask=mask, shard=shard)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, info = optim.update(OPT, params, grads,
+                                                   opt_state)
+            return params, opt_state, {"loss": loss, **info}
+
+        args = (pshapes, oshapes, feats, indptr, indices, seeds, labels,
+                _key_spec())
+        shards = (pshard, oshard, fshard, NamedSharding(mesh, P()),
+                  NamedSharding(mesh, P()), NamedSharding(mesh, P(dax)),
+                  NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+        return Cell(arch.name, shape_name, train_step, args, shards,
+                    donate=(0, 1), meta=meta)
+
+    if spec.get("spmd"):
+        from ..models.gnn_spmd import make_spmd_gnn_loss
+        loss_fn, _ = make_spmd_gnn_loss(mesh, mcfg, n1=n + 1, n_real=n_real,
+                                        dax=dax, n_graphs=n_graphs)
+        s_spec, r_spec = _gnn_edge_specs(m_pad)
+        espec_all = NamedSharding(mesh, P(all_axes(mesh)))
+        coords_spec = sds((n + 1, 3), jnp.float32)
+        if is_nequip:
+            a2 = feats["species"]
+            targets2 = sds((n_graphs,), jnp.float32)
+        else:
+            a2 = sds((n + 1, d_feat), jnp.float32)
+            targets2 = sds((n + 1,), jnp.int32)
+
+        def train_step(params, opt_state, a2, coords, s, r, targets):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, a2, coords, s, r, targets))(params)
+            params, opt_state, info = optim.update(OPT, params, grads,
+                                                   opt_state)
+            return params, opt_state, {"loss": loss, **info}
+
+        args = (pshapes, oshapes, a2, coords_spec, s_spec, r_spec, targets2)
+        a2_shard = NamedSharding(mesh, P()) if is_nequip else             NamedSharding(mesh, P(dax, None))
+        shards = (pshard, oshard, a2_shard, NamedSharding(mesh, P()),
+                  espec_all, espec_all, NamedSharding(mesh, P()))
+        return Cell(arch.name, shape_name, train_step, args, shards,
+                    donate=(0, 1), meta=meta)
+
+    s_spec, r_spec = _gnn_edge_specs(m_pad)
+    gid = sds((n + 1,), jnp.int32) if kind == "molecule" else None
+
+    def train_step(params, opt_state, feats, s, r, targets, *rest):
+        graph_ids = rest[0] if rest else None
+
+        def loss_fn(p):
+            return loss_of(p, feats, s, r, targets, graph_ids)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, info = optim.update(OPT, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **info}
+
+    args = [pshapes, oshapes, feats, s_spec, r_spec, targets]
+    shards = [pshard, oshard, fshard, espec, espec, NamedSharding(mesh, P())]
+    if gid is not None:
+        args.append(gid)
+        shards.append(NamedSharding(mesh, P()))
+    return Cell(arch.name, shape_name, train_step, tuple(args), tuple(shards),
+                donate=(0, 1), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# DLRM cells
+# ---------------------------------------------------------------------------
+
+def _dlrm_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    cfg: dlrm_mod.DLRMConfig = arch.model
+    spec = arch.shapes[shape_name]
+    shard = make_shard_fn(mesh)
+    pshapes = jax.eval_shape(lambda k: dlrm_mod.init_dlrm(k, cfg), _key_spec())
+    pshard = named(mesh, param_specs(pshapes, "recsys", mesh))
+    B = spec["batch"]
+    dense = sds((B, cfg.n_dense), jnp.float32)
+    sparse = sds((B, cfg.n_sparse, cfg.multi_hot), jnp.int32)
+    kind = spec["kind"]
+    # embedding-bag bytes dominate: 26 gathers × B × D × 4
+    meta = dict(model_flops=2 * B * (sum(
+        a * b for a, b in zip((cfg.n_dense,) + cfg.bot_mlp[:-1], cfg.bot_mlp))
+        + sum(a * b for a, b in zip(
+            (cfg.n_interactions + cfg.embed_dim,) + cfg.top_mlp[:-1],
+            cfg.top_mlp))), batch=B)
+
+    if kind == "train":
+        oshapes = _opt_shapes(pshapes)
+        oshard = named(mesh, param_specs(oshapes, "recsys", mesh))
+        labels = sds((B,), jnp.int32)
+
+        def train_step(params, opt_state, dense, sparse, labels):
+            def loss_fn(p):
+                return dlrm_mod.dlrm_loss(p, dense, sparse, labels, cfg, shard)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, info = optim.update(OPT, params, grads,
+                                                   opt_state)
+            return params, opt_state, {"loss": loss, **info}
+
+        return Cell(arch.name, shape_name, train_step,
+                    (pshapes, oshapes, dense, sparse, labels),
+                    (pshard, oshard, *batch_sharding(
+                        mesh, (dense, sparse, labels))),
+                    donate=(0, 1), meta=meta)
+
+    if kind == "serve":
+        def serve_step(params, dense, sparse):
+            return jax.nn.sigmoid(
+                dlrm_mod.dlrm_forward(params, dense, sparse, cfg, shard))
+
+        return Cell(arch.name, shape_name, serve_step,
+                    (pshapes, dense, sparse),
+                    (pshard, *batch_sharding(mesh, (dense, sparse))),
+                    meta=meta)
+
+    if kind == "retrieval":
+        n_cand = spec["n_candidates"]
+        cand = sds((n_cand, cfg.embed_dim), jnp.float32)
+
+        def retrieve(params, dense, sparse, cand):
+            return dlrm_mod.retrieval_score(params, dense, sparse, cand, cfg,
+                                            shard)
+
+        return Cell(arch.name, shape_name, retrieve,
+                    (pshapes, dense, sparse, cand),
+                    (pshard, NamedSharding(mesh, P()),
+                     NamedSharding(mesh, P()),
+                     NamedSharding(mesh, P("model", None))),
+                    meta=dict(model_flops=2 * n_cand * cfg.embed_dim,
+                              batch=1))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# ConnectIt production cells (the paper's own workload on the mesh)
+# ---------------------------------------------------------------------------
+
+def _connectit_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    spec = arch.shapes[shape_name]
+    n, rounds = spec["n"], spec.get("rounds", 8)
+    labels = sds((n,), jnp.int32)
+    kind = spec["kind"]
+
+    if kind == "static":
+        m = spec["m"]
+        s_spec = sds((m,), jnp.int32)
+        if spec["labels"] == "replicated":
+            axes = all_axes(mesh)
+            fn = cdist.make_replicated_connectivity(mesh, axes, rounds=rounds)
+            lshard = NamedSharding(mesh, P())
+            eshard = NamedSharding(mesh, P(axes))
+        else:
+            eaxes = data_axes(mesh)
+            if spec.get("variant") == "fused":
+                fn = cdist.make_sharded_connectivity_fused(
+                    mesh, eaxes, "model", rounds=rounds,
+                    jumps=spec.get("jumps", 2))
+            else:
+                fn = cdist.make_sharded_connectivity(
+                    mesh, eaxes, "model", rounds=rounds,
+                    use_reduce_scatter=spec.get("use_reduce_scatter", False))
+            lshard = NamedSharding(mesh, P("model"))
+            eshard = NamedSharding(mesh, P(eaxes))
+        return Cell(arch.name, shape_name, fn, (labels, s_spec, s_spec),
+                    (lshard, eshard, eshard), donate=(0,),
+                    meta=dict(edges=m, model_flops=0, loop_trips=rounds,
+                              bytes_touched=rounds * (m * 8 + n * 8)))
+
+    if kind == "ingest":
+        bsz, q = spec["batch"], spec["queries"]
+        axes = all_axes(mesh)
+        fn = cdist.make_streaming_ingest(mesh, axes, rounds=rounds)
+        eshard = NamedSharding(mesh, P(axes))
+        args = (labels, sds((bsz,), jnp.int32), sds((bsz,), jnp.int32),
+                sds((q,), jnp.int32), sds((q,), jnp.int32))
+        shards = (NamedSharding(mesh, P()), eshard, eshard, eshard, eshard)
+        return Cell(arch.name, shape_name, fn, args, shards, donate=(0,),
+                    meta=dict(edges=bsz, model_flops=0, loop_trips=rounds,
+                              bytes_touched=rounds * (bsz * 8 + n * 8)))
+    raise ValueError(kind)
+
+
+def build_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    if not arch.supports(shape_name):
+        raise ValueError(
+            f"{arch.name} does not support {shape_name} "
+            f"(sub-quadratic attention required; see DESIGN.md)")
+    if arch.family == "lm":
+        return _lm_cell(arch, shape_name, mesh)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape_name, mesh)
+    if arch.family == "recsys":
+        return _dlrm_cell(arch, shape_name, mesh)
+    if arch.family == "connectit":
+        return _connectit_cell(arch, shape_name, mesh)
+    raise ValueError(arch.family)

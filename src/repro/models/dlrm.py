@@ -1,0 +1,100 @@
+"""DLRM (arXiv:1906.00091) — RM2 configuration.
+
+13 dense features → bottom MLP; 26 sparse multi-hot fields → per-table
+embedding bags (``jnp.take`` + in-bag sum — JAX's EmbeddingBag, shared with
+the Pallas embedding_bag kernel); dot-product feature interaction (lower
+triangle); top MLP → CTR logit.
+
+``retrieval_score`` is the retrieval_cand shape cell: one user vector against
+10⁶ candidate embeddings as a single GEMV over the ("model"-sharded) table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ShardFn, mlp_apply, mlp_init, no_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_sizes: tuple = (1_000_000,) * 26
+    multi_hot: int = 1            # bag length per field
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+
+    @property
+    def n_interactions(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def init_dlrm(key, cfg: DLRMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    tables = []
+    for i, v in enumerate(cfg.vocab_sizes):
+        rows = -(-(v + 1) // 512) * 512  # pad for mesh-divisible row sharding
+        t = jax.random.normal(ks[i], (rows, cfg.embed_dim), dtype) / np.sqrt(
+            cfg.embed_dim)
+        tables.append(t.at[v:].set(0.0))  # dump rows for padded bag slots
+    d_int = cfg.n_interactions + cfg.embed_dim
+    return {
+        "tables": tables,
+        "bot": mlp_init(ks[-2], [cfg.n_dense, *cfg.bot_mlp], dtype),
+        "top": mlp_init(ks[-1], [d_int, *cfg.top_mlp], dtype),
+    }
+
+
+def embedding_bag(table, idx):
+    """table: (rows≥V+1, D); idx: (B, L) → (B, D) sum-bag (dump rows zero)."""
+    return jnp.take(table, idx, axis=0).sum(axis=1)
+
+
+def dlrm_forward(params, dense, sparse_idx, cfg: DLRMConfig,
+                 shard: ShardFn = no_shard):
+    """dense: (B, 13) float; sparse_idx: (B, 26, L) int32. → (B,) logits."""
+    B = dense.shape[0]
+    x = mlp_apply(params["bot"], dense, act=jax.nn.relu,
+                  final_act=jax.nn.relu)                      # (B, D)
+    embs = [embedding_bag(t, sparse_idx[:, i])
+            for i, t in enumerate(params["tables"])]          # 26 × (B, D)
+    z = jnp.stack([x, *embs], axis=1)                          # (B, 27, D)
+    z = shard(z, ("data", None, None))
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)                   # (B, 27, 27)
+    f = z.shape[1]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    flat = inter[:, iu, ju]                                    # (B, 351)
+    top_in = jnp.concatenate([x, flat], axis=-1)
+    logit = mlp_apply(params["top"], top_in, act=jax.nn.relu)[..., 0]
+    return logit
+
+
+def dlrm_loss(params, dense, sparse_idx, labels, cfg: DLRMConfig,
+              shard: ShardFn = no_shard):
+    logit = dlrm_forward(params, dense, sparse_idx, cfg, shard).astype(
+        jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def retrieval_score(params, dense, sparse_idx, cand_table, cfg: DLRMConfig,
+                    shard: ShardFn = no_shard, top_k: int = 100):
+    """Score 1 query (dense + sparse features) against (N_cand, D) item
+    embeddings: one GEMV + top-k, no loop."""
+    q = mlp_apply(params["bot"], dense, act=jax.nn.relu,
+                  final_act=jax.nn.relu)                       # (1, D)
+    embs = [embedding_bag(t, sparse_idx[:, i])
+            for i, t in enumerate(params["tables"])]
+    q = q + sum(embs)                                          # fused user vec
+    scores = (cand_table @ q[0]).astype(jnp.float32)           # (N_cand,)
+    return jax.lax.top_k(scores, top_k)

@@ -1,0 +1,275 @@
+"""§Perf: explicit-SPMD full-graph GNN message passing (beyond-paper).
+
+The GSPMD-partitioned path (gnn.py + sharding constraints) materializes
+every segment-op output as a replicated (n, d) buffer followed by combined
+all-reduces — measured 8–24 GB temp and 0.24–0.63 s collective terms on the
+ogb_products cells (EXPERIMENTS.md §Perf). This module shard_maps the whole
+loss: node state lives sharded over the data axes; each layer all-gathers it
+once for the edge-sharded gather and returns aggregations through an
+all_to_all-chain min/sum/max reduce-scatter (1/|group| of the all-reduce
+bytes), with the model axis folded in by a small psum/pmax at shard size.
+
+Supports gin | pna | egnn | nequip; per-layer jax.checkpoint keeps backward
+memory at one layer's working set.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .gnn import GNNConfig
+from .irreps import allowed_paths, gaunt, sh_jnp
+from .layers import mlp_apply
+from .nequip import NequIPConfig, bessel_basis
+
+
+def _axis_extent(mesh, axes):
+    e = 1
+    for a in axes:
+        e *= mesh.shape[a]
+    return e
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def pmax_grad(x, axis_name):
+    """Differentiable max-allreduce: subgradient flows to the achieving
+    shard(s) (jax.lax.pmax itself has no differentiation rule)."""
+    return jax.lax.pmax(x, axis_name)
+
+
+def _pmax_fwd(x, axis_name):
+    y = jax.lax.pmax(x, axis_name)
+    return y, (x, y)
+
+
+def _pmax_bwd(axis_name, res, g):
+    x, y = res
+    return (jnp.where(x == y, g, 0.0),)
+
+
+pmax_grad.defvjp(_pmax_fwd, _pmax_bwd)
+
+
+def make_spmd_gnn_loss(mesh, mcfg, *, n1: int, n_real: int, dax: tuple,
+                       n_graphs: int = 1):
+    """Returns loss_fn(params, feats..., senders, receivers, labels) with
+    shard_map'd SPMD internals. Node inputs sharded P(dax); edges P(all)."""
+    ALL = tuple(mesh.axis_names)
+    M = mesh.shape["model"]
+    Gd = _axis_extent(mesh, dax)
+    shard_rows = n1 // Gd
+    is_nequip = isinstance(mcfg, NequIPConfig)
+
+    def my_offset():
+        idx = 0
+        for a in dax:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx * shard_rows
+
+    def gather_nodes(h_shard):
+        return jax.lax.all_gather(h_shard, dax, tiled=True)  # (n1, ...)
+
+    def _rs_chain(x, combine):
+        """Reduce-scatter (n1, ...) → (n1/Gd, ...) over dax via all_to_all."""
+        for ax in dax:
+            k = mesh.shape[ax]
+            xs = x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            xs = jax.lax.all_to_all(xs, ax, split_axis=0, concat_axis=0,
+                                    tiled=False)
+            x = combine(xs)
+        return x
+
+    def scatter_sum(vals, recv):
+        full = jax.ops.segment_sum(vals, recv, n1)
+        loc = _rs_chain(full, lambda xs: xs.sum(axis=0))
+        return jax.lax.psum(loc, "model")
+
+    def scatter_max(vals, recv, fill):
+        full = jnp.full((n1,) + vals.shape[1:], fill, vals.dtype)
+        full = full.at[recv].max(vals)
+        loc = _rs_chain(full, lambda xs: xs.max(axis=0))
+        return pmax_grad(loc, "model")
+
+    # ------------------------------------------------------------------
+    # per-kind layer body (operates on local node shards + local edges)
+    # ------------------------------------------------------------------
+
+    def layer_plain(lp, h, aux, senders, receivers, valid, deg, deg_mean):
+        hg = gather_nodes(h)
+        zero = jnp.asarray(0.0, h.dtype)
+        if mcfg.kind == "gin":
+            agg = scatter_sum(jnp.where(valid[:, None], hg[senders], zero),
+                              receivers)
+            h = mlp_apply(lp["mlp"], (1.0 + lp["eps"]).astype(h.dtype) * h
+                          + agg, act=jax.nn.relu)
+            return jax.nn.relu(h), aux
+        if mcfg.kind == "pna":
+            msgs = jnp.where(valid[:, None], hg[senders], zero)
+            tot = scatter_sum(msgs, receivers)
+            sq = scatter_sum(msgs * msgs, receivers)
+            big = jnp.asarray(1e30, h.dtype)
+            mx = scatter_max(jnp.where(valid[:, None], msgs, -big),
+                             receivers, -big)
+            mn = -scatter_max(jnp.where(valid[:, None], -msgs, -big),
+                              receivers, -big)
+            cnt = jnp.maximum(deg, 1.0).astype(h.dtype)[:, None]
+            mean = tot / cnt
+            std = jnp.sqrt(jnp.maximum(
+                sq / cnt - mean * mean, jnp.asarray(0.0, h.dtype))
+                + jnp.asarray(1e-5, h.dtype))
+            has = (deg > 0)[:, None]
+            mx = jnp.where(has, mx, zero)
+            mn = jnp.where(has, mn, zero)
+            delta = jnp.log(deg_mean + 1.0).astype(h.dtype)
+            logd = jnp.log(deg + 1.0)[:, None].astype(h.dtype)
+            d_part = h.shape[-1]
+            w0, b0 = lp["post"]["w0"], lp["post"]["b0"]
+            acc = h @ w0[:d_part].astype(h.dtype) + b0.astype(h.dtype)
+            off = d_part
+            for base in (mean, mx, mn, std):
+                for scale in (None, logd / delta,
+                              delta / jnp.maximum(logd, 1e-5)):
+                    part = base if scale is None else base * scale
+                    acc = acc + part @ w0[off: off + d_part].astype(h.dtype)
+                    off += d_part
+            acc = jax.nn.relu(acc)
+            return acc @ lp["post"]["w1"].astype(h.dtype) \
+                + lp["post"]["b1"].astype(h.dtype), aux
+        raise ValueError(mcfg.kind)
+
+    def layer_egnn(lp, h, x_full, senders, receivers, valid, deg, deg_mean):
+        hg = gather_nodes(h)
+        rel = x_full[receivers] - x_full[senders]
+        d2 = jnp.sum(rel * rel, -1, keepdims=True).astype(h.dtype)
+        m = mlp_apply(lp["phi_e"],
+                      jnp.concatenate([hg[receivers], hg[senders], d2], -1),
+                      act=jax.nn.silu, final_act=jax.nn.silu)
+        m = jnp.where(valid[:, None], m, jnp.asarray(0.0, m.dtype))
+        w = mlp_apply(lp["phi_x"], m, act=jax.nn.silu)
+        dx = scatter_sum(rel * w.astype(rel.dtype), receivers)
+        x_shard_new = dx / jnp.maximum(deg, 1.0)[:, None]
+        x_full = x_full + gather_nodes(x_shard_new)
+        magg = scatter_sum(m, receivers)
+        h = h + mlp_apply(lp["phi_h"], jnp.concatenate([h, magg], -1),
+                          act=jax.nn.silu)
+        return h, x_full
+
+    def layer_nequip(layer, feats, rbf, Y, senders, receivers, valid):
+        # accumulate tensor-product messages on the EDGE side per output-l,
+        # then scatter ONCE per l (3 reduce-scatters/layer instead of 11 —
+        # §Perf iteration: collective and buffer count ÷3.7)
+        gathered = {l: gather_nodes(feats[l]) for l in feats}
+        edge_msgs = {l: jnp.zeros((senders.shape[0], mcfg.channels,
+                                   2 * l + 1), rbf.dtype)
+                     for l in range(mcfg.l_max + 1)}
+        for (l1, l2, l3) in allowed_paths(mcfg.l_max):
+            G = jnp.asarray(gaunt(l1, l2, l3)).astype(rbf.dtype)
+            w = mlp_apply(layer["radial"][f"{l1}{l2}{l3}"], rbf,
+                          act=jax.nn.silu)
+            src = gathered[l1][senders]
+            m = jnp.einsum("mci,mj,ijk->mck", src, Y[l2], G)
+            m = m * w[:, :, None]
+            m = jnp.where(valid[:, None, None], m,
+                          jnp.asarray(0.0, m.dtype))
+            edge_msgs[l3] = edge_msgs[l3] + m
+        msgs = {l: scatter_sum(edge_msgs[l], receivers)
+                for l in range(mcfg.l_max + 1)}
+        new = {}
+        scal = None
+        for l in range(mcfg.l_max + 1):
+            z = jnp.einsum("ncv,cd->ndv", msgs[l],
+                           layer["self"][str(l)].astype(msgs[l].dtype))
+            new[l] = feats[l] + z
+            if l == 0:
+                scal = new[0][:, :, 0]
+        gates = jax.nn.sigmoid(scal @ layer["gate"].astype(scal.dtype))
+        for l in range(mcfg.l_max + 1):
+            new[l] = jax.nn.silu(new[l]) if l == 0 else \
+                new[l] * gates[:, None, l: l + 1]
+        return new
+
+    # ------------------------------------------------------------------
+    # full loss bodies
+    # ------------------------------------------------------------------
+
+    nspec = P(dax, None)
+
+    if is_nequip:
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(), P(), P(), P(ALL), P(ALL), P()),
+                 out_specs=P(), check_rep=False)
+        def loss_fn(params, species, coords, senders, receivers, targets):
+            valid = senders < n1 - 1
+            rel = coords[receivers] - coords[senders]
+            r = jnp.sqrt(jnp.sum(rel * rel, -1) + 1e-12)
+            rhat = rel / r[..., None]
+            # §Perf note: bf16 messages were tried and REFUTED — XLA's
+            # CPU-backend scheduling of the mixed-precision graph RAISED
+            # peak temp (57 GB vs 32 GB); f32 keeps the fused layout.
+            mdt = jnp.float32
+            rbf = bessel_basis(r, mcfg.n_rbf, mcfg.cutoff)
+            rbf = jnp.where(valid[:, None], rbf, 0.0).astype(mdt)
+            Y = {l: sh_jnp(l, rhat).astype(mdt)
+                 for l in range(mcfg.l_max + 1)}
+            off = my_offset()
+            sp_shard = jax.lax.dynamic_slice_in_dim(species, off, shard_rows)
+            onehot = jax.nn.one_hot(sp_shard, mcfg.n_species, dtype=mdt)
+            feats = {l: jnp.zeros((shard_rows, mcfg.channels, 2 * l + 1),
+                                  mdt)
+                     for l in range(mcfg.l_max + 1)}
+            feats[0] = (onehot @ params["embed"].astype(mdt))[:, :, None]
+            step = (lambda lay, f: layer_nequip(lay, f, rbf, Y, senders,
+                                                receivers, valid))
+            for lay in params["layers"]:
+                feats = step(lay, feats)
+            e = mlp_apply(params["head"],
+                          feats[0][:, :, 0].astype(jnp.float32),
+                          act=jax.nn.silu)[..., 0]
+            rows = off + jnp.arange(shard_rows)
+            e = jnp.where(rows < n_real, e, 0.0)
+            # model-axis ranks hold identical shards: average the psum
+            total = jax.lax.psum(jnp.sum(e), ALL) / M
+            return jnp.mean((total - targets[0]) ** 2)
+
+        return loss_fn, "nequip"
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(), nspec, P(), P(ALL), P(ALL), P()),
+             out_specs=P(), check_rep=False)
+    def loss_fn(params, feats_shard, coords, senders, receivers, labels):
+        valid = senders < n1 - 1
+        ones = valid.astype(jnp.float32)
+        deg = scatter_sum(ones[:, None], receivers)[:, 0]
+        deg_mean = jax.lax.psum(deg.sum(), dax) / n1
+        h = feats_shard.astype(jnp.dtype(mcfg.dtype))
+        if mcfg.kind == "egnn":
+            h = mlp_apply(params["embed"], h, act=jax.nn.silu)
+            x_full = coords
+            step = (lambda lp, hh, xx: layer_egnn(
+                lp, hh, xx, senders, receivers, valid, deg, deg_mean))
+            for lp in params["layers"]:
+                h, x_full = step(lp, h, x_full)
+        else:
+            step = (lambda lp, hh: layer_plain(
+                lp, hh, None, senders, receivers, valid, deg, deg_mean)[0])
+            for lp in params["layers"]:
+                h = step(lp, h)
+        logits = mlp_apply(params["head"], h, act=jax.nn.relu)
+        logits = logits.astype(jnp.float32)
+        off = my_offset()
+        lab = jax.lax.dynamic_slice_in_dim(labels, off, shard_rows)
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(logp, lab[:, None], -1)[..., 0]
+        rows = off + jnp.arange(shard_rows)
+        mask = (rows < n_real).astype(jnp.float32)
+        num = jax.lax.psum(jnp.sum(nll * mask), dax)
+        den = jax.lax.psum(jnp.sum(mask), dax)
+        return num / jnp.maximum(den, 1.0)
+
+    return loss_fn, mcfg.kind

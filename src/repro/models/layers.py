@@ -1,0 +1,181 @@
+"""Shared neural-network layers (pure JAX, functional params-as-pytrees)."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ShardFn = Callable[[jax.Array, tuple], jax.Array]
+
+
+def no_shard(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    return x
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dtype) * gamma.astype(dtype)
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], sizes[i], sizes[i + 1], dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype)
+        for i in range(len(sizes) - 1)
+    }
+
+
+def mlp_apply(params, x, *, act=jax.nn.relu, final_act=None, n_layers=None):
+    n = n_layers if n_layers is not None else len(params) // 2
+    for i in range(n):
+        x = x @ params[f"w{i}"].astype(x.dtype) + params[f"b{i}"].astype(x.dtype)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4):
+    """x: (..., S, H, d_head); positions: (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)  # (d_head // 2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention: never materializes the S×S score matrix.
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, Hq, dh)
+    k: jax.Array,            # (B, Sk, Hkv, dh)
+    v: jax.Array,            # (B, Sk, Hkv, dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding-window attention width
+    q_offset: int | jax.Array = 0,  # absolute position of q[0] (decode)
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention with GQA head grouping.
+
+    Scans over KV chunks per query chunk, carrying (acc, row_max, row_sum) —
+    the XLA-schedulable equivalent of FlashAttention (peak live buffer is
+    B × H × q_chunk × k_chunk scores instead of S²).
+    """
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    # pad to chunk multiples
+    def pad_to(x, s, axis):
+        p = s - x.shape[axis]
+        if p == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, p)
+        return jnp.pad(x, widths)
+
+    qp = pad_to(q, nq * q_chunk, 1)
+    kp = pad_to(k, nk * k_chunk, 1)
+    vp = pad_to(v, nk * k_chunk, 1)
+    # (B, nq, qc, Hkv, g, dh)
+    qp = qp.reshape(B, nq, q_chunk, Hkv, g, dh)
+    kp = kp.reshape(B, nk, k_chunk, Hkv, dh)
+    vp = vp.reshape(B, nk, k_chunk, Hkv, dh)
+    neg = jnp.asarray(-1e30, jnp.float32)
+
+    def per_qchunk(qi, q_blk):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, inp):
+            acc, mx, sm = carry
+            ki, k_blk, v_blk = inp
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = k_pos[None, :] <= Sk - 1  # kv padding
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, neg)
+            new_mx = jnp.maximum(mx, s.max(-1))
+            corr = jnp.exp(mx - new_mx)
+            p = jnp.exp(s - new_mx[..., None])
+            sm = sm * corr + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                            v_blk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, new_mx, sm), None
+
+        acc0 = jnp.zeros((B, Hkv, g, q_chunk, dh), jnp.float32)
+        mx0 = jnp.full((B, Hkv, g, q_chunk), neg)
+        sm0 = jnp.zeros((B, Hkv, g, q_chunk), jnp.float32)
+        ks = jnp.arange(nk)
+        (acc, mx, sm), _ = jax.lax.scan(
+            body, (acc0, mx0, sm0),
+            (ks, jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0)))
+        out = acc / jnp.maximum(sm[..., None], 1e-30)
+        return out  # (B, Hkv, g, qc, dh)
+
+    outs = jax.lax.map(
+        lambda i: per_qchunk(i, qp[:, i]), jnp.arange(nq))  # (nq, B, Hkv, g, qc, dh)
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nq, Hkv, g, qc, dh)
+    out = jnp.moveaxis(out, -2, 2)  # (B, nq, qc, Hkv, g, dh)
+    out = out.reshape(B, nq * q_chunk, Hq, dh)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def dot_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """O(S²) reference attention (oracle for chunked_attention tests)."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / np.sqrt(dh)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos[None] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)

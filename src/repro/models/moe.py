@@ -1,0 +1,299 @@
+"""Mixture-of-Experts FFN with grouped sort-based dispatch (GShard/MegaBlocks).
+
+Tokens are reshaped into ``n_groups`` dispatch groups (one per data shard on
+the production mesh) so the top-k, argsort, and capacity scatter are *local*
+to a shard; the (G, E, C, D) dispatch buffer then moves group-sharded →
+expert-sharded in a single all-to-all (inserted by GSPMD from the sharding
+constraints), feeding batched per-expert SwiGLU einsums. Deterministic,
+capacity-bounded (slot E·C absorbs drops), fully differentiable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ShardFn, dense_init, no_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    n_groups: int = 1          # dispatch groups (= data shards on the mesh)
+    a2a_int8: bool = False     # int8-compress the EP all_to_all (§Perf)
+
+    @property
+    def n_experts_padded(self) -> int:
+        """Expert tensors are padded to a multiple of 16 so the expert axis
+        always divides the production "model" axis (e.g. granite's 40 → 48;
+        phantom experts are never routed to)."""
+        return -(-self.n_experts // 16) * 16
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts_padded, cfg.d_model, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], D, cfg.n_experts, dtype),
+        "w_gate": jax.random.normal(ks[1], (E, D, F), dtype) / np.sqrt(D),
+        "w_up": jax.random.normal(ks[2], (E, D, F), dtype) / np.sqrt(D),
+        "w_down": jax.random.normal(ks[3], (E, F, D), dtype) / np.sqrt(F),
+    }
+    if cfg.n_shared:
+        Fs = F * cfg.n_shared
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], D, Fs, dtype),
+            "w_up": dense_init(sk[1], D, Fs, dtype),
+            "w_down": dense_init(sk[2], Fs, D, dtype),
+        }
+    return p
+
+
+def _swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+    return h @ wd.astype(x.dtype)
+
+
+def _dispatch_group(x, gidx, gval, E: int, C: int):
+    """Per-group dispatch. x: (Tg, D); gidx/gval: (Tg, K).
+    Returns (buf (E, C, D), slot (Tg*K,), inv_order, dropped, gates)."""
+    Tg, D = x.shape
+    K = gidx.shape[1]
+    flat_e = gidx.reshape(-1).astype(jnp.int32)
+    flat_t = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_e, stable=True)
+    fe_sorted = flat_e[order]
+    pos = jnp.arange(Tg * K, dtype=jnp.int32)
+    first = jnp.full((E,), Tg * K, jnp.int32).at[fe_sorted].min(pos)
+    rank = pos - first[fe_sorted]
+    dropped = rank >= C
+    slot = jnp.where(dropped, E * C, fe_sorted * C + jnp.minimum(rank, C - 1))
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(x[flat_t[order]])
+    gates = gval.reshape(-1)[order].astype(x.dtype)
+    return buf[: E * C].reshape(E, C, D), slot, flat_t[order], dropped, gates
+
+
+def _combine_group(ye, slot, tok_of_sorted, dropped, gates, Tg: int):
+    E, C, D = ye.shape
+    ye_flat = jnp.concatenate(
+        [ye.reshape(E * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+    contrib = ye_flat[slot] * jnp.where(dropped, 0.0, 1.0)[:, None].astype(
+        ye.dtype)
+    return jnp.zeros((Tg, D), ye.dtype).at[tok_of_sorted].add(
+        contrib * gates[:, None])
+
+
+def moe_apply(params, x: jax.Array, cfg: MoEConfig,
+              shard: ShardFn = no_shard):
+    """x: (T, D) tokens. Returns (out (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    E, K, G = cfg.n_experts_padded, cfg.top_k, cfg.n_groups
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    C = int(np.ceil(cfg.capacity_factor * Tg * K / E))
+    C = max(8, -(-C // 8) * 8)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gval, gidx = jax.lax.top_k(probs, K)                     # (T, K)
+    gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss (global)
+    me = probs.mean(0)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[
+        gidx.reshape(-1)].add(1.0) / (T * K)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+
+    xg = shard(x.reshape(G, Tg, D), ("data", None, None))
+    gi = gidx.reshape(G, Tg, K)
+    gv = gval.reshape(G, Tg, K)
+    buf, slot, tok, dropped, gates = jax.vmap(
+        lambda xx, ii, vv: _dispatch_group(xx, ii, vv, E, C))(xg, gi, gv)
+    # group-sharded → (group, expert)-sharded: the MoE all-to-all
+    buf = shard(buf, ("data", "expert", None, None))         # (G, E, C, D)
+    he = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(x.dtype))
+    ue = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(he) * ue,
+                    params["w_down"].astype(x.dtype))
+    ye = shard(ye, ("data", None, None, None))               # back to groups
+    out = jax.vmap(lambda y, s, t, d, g: _combine_group(y, s, t, d, g, Tg))(
+        ye, slot, tok, dropped, gates)
+    out = out.reshape(T, D)
+
+    if cfg.n_shared:
+        sp = params["shared"]
+        out = out + _swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return out, aux
+
+
+def moe_ref(params, x: jax.Array, cfg: MoEConfig):
+    """Dense oracle: every expert on every token, combine by gate (no drops)."""
+    T, D = x.shape
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gval, gidx = jax.lax.top_k(probs, cfg.top_k)
+    gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+    ye = jax.vmap(lambda wg, wu, wd: _swiglu(x, wg, wu, wd))(
+        params["w_gate"], params["w_up"], params["w_down"])  # (E_pad, T, D)
+    gate_mat = jnp.zeros((T, cfg.n_experts_padded), jnp.float32)
+    gate_mat = jax.vmap(lambda g, i, gm: gm.at[i].add(g))(gval, gidx, gate_mat)
+    out = jnp.einsum("te,etd->td", gate_mat.astype(x.dtype), ye)
+    if cfg.n_shared:
+        sp = params["shared"]
+        out = out + _swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §Perf: explicit-SPMD MoE layer (shard_map) — beyond-paper optimization.
+#
+# The GSPMD-partitioned grouped dispatch above materializes cross-device
+# scatters as giant combined all-reduces (measured: ~300 GB/device/step on
+# deepseek-moe-16b train_4k). The explicit layer keeps dispatch local to
+# each data shard, exchanges expert chunks with a single all_to_all over the
+# "model" (EP) axis each way, and FSDP-gathers expert weights in bf16
+# *after* casting (halving FSDP wire bytes vs gathering f32).
+# ---------------------------------------------------------------------------
+
+from jax.experimental.shard_map import shard_map as _shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as _P  # noqa: E402
+from functools import partial as _partial  # noqa: E402
+
+
+def moe_apply_spmd(params, x: jax.Array, cfg: MoEConfig, mesh, dax: tuple,
+                   fsdp_weights: bool = True):
+    """x: (T, D) tokens sharded over `dax`. Expert tensors sharded
+    (E_pad/"model", D/dax, F) when ``fsdp_weights`` (train), else
+    (E_pad/"model", D, F) TP-only (serve). Returns (out (T, D), aux)."""
+    T, D = x.shape
+    E, K = cfg.n_experts_padded, cfg.top_k
+    M = mesh.shape["model"]
+    Gd = 1
+    for a in dax:
+        Gd *= mesh.shape[a]
+    t_loc = T // Gd
+    E_loc = E // M
+    C = int(np.ceil(cfg.capacity_factor * t_loc * K / E))
+    C = max(8, -(-C // 8) * 8)
+
+    if fsdp_weights:
+        wspec = _P("model", dax, None)
+        dspec = _P("model", None, dax)
+    else:
+        wspec = _P("model", None, None)
+        dspec = _P("model", None, None)
+
+    @_partial(_shard_map, mesh=mesh,
+              in_specs=(_P(dax, None), _P(), wspec, wspec, dspec),
+              out_specs=(_P(dax, None), _P()), check_rep=False)
+    def layer(x_loc, router, wg_loc, wu_loc, wd_loc):
+        cdt = x_loc.dtype
+        logits = (x_loc @ router.astype(cdt)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gval, gidx = jax.lax.top_k(probs, K)
+        gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+        # local load-balance stats → global aux via psum
+        me = jax.lax.psum(probs.sum(0), dax) / T
+        ce = jax.lax.psum(
+            jnp.zeros((cfg.n_experts,), jnp.float32).at[
+                gidx.reshape(-1)].add(1.0), dax) / (T * K)
+        aux = cfg.n_experts * jnp.sum(me * ce)
+        # local capacity dispatch
+        buf, slot, tok, dropped, gates = _dispatch_group(
+            x_loc, gidx, gval, E, C)
+        # EP all_to_all: (E, C, D) = (M, E_loc, C, D) → (E_loc, M·C, D)
+        buf = buf.reshape(M, E_loc, C, D)
+        if cfg.a2a_int8:
+            buf = a2a_int8(buf, "model")
+        else:
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                     concat_axis=0, tiled=False)
+        buf = buf.reshape(M, E_loc, C, D).transpose(1, 0, 2, 3) \
+            .reshape(E_loc, M * C, D)
+        # FSDP gather of this device's experts, bf16 on the wire
+        if fsdp_weights:
+            def fsdp_gather(w_loc):
+                return jax.lax.all_gather(
+                    w_loc.astype(cdt), dax, axis=1, tiled=True)
+            wg = fsdp_gather(wg_loc)        # (E_loc, D, F)
+            wu = fsdp_gather(wu_loc)
+            wd = fsdp_gather(wd_loc.transpose(0, 2, 1)).transpose(0, 2, 1)
+        else:
+            wg = wg_loc.astype(cdt)
+            wu = wu_loc.astype(cdt)
+            wd = wd_loc.astype(cdt)
+        he = jnp.einsum("ecd,edf->ecf", buf, wg)
+        ue = jnp.einsum("ecd,edf->ecf", buf, wu)
+        ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(he) * ue, wd)
+        # return chunks to their source data shard
+        ye = ye.reshape(E_loc, M, C, D).transpose(1, 0, 2, 3)
+        ye = ye.reshape(M, E_loc, C, D)
+        if cfg.a2a_int8:
+            ye = a2a_int8(ye, "model")
+        else:
+            ye = jax.lax.all_to_all(ye, "model", split_axis=0, concat_axis=0,
+                                    tiled=False)
+        ye = ye.reshape(E * C, D)
+        out = _combine_group(
+            ye.reshape(E, C, D), slot, tok, dropped, gates, t_loc)
+        return out, aux
+
+    out, aux = layer(x, params["router"], params["w_gate"], params["w_up"],
+                     params["w_down"])
+    if cfg.n_shared:
+        sp = params["shared"]
+        out = out + _swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return out, aux
+
+
+# --- §Perf iteration: int8-compressed EP all_to_all (both directions) -----
+
+def _quant_i8(x):
+    """Per-row (last-dim) symmetric int8 quantization."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequant_i8(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _a2a_i8_impl(x, axis_name):
+    q, s = _quant_i8(x)
+    q = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                           tiled=False)
+    s = jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0,
+                           tiled=False)
+    return _dequant_i8(q, s, x.dtype)
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(1,))
+def a2a_int8(x, axis_name):
+    """all_to_all with int8 payload on the wire, in BOTH directions (the
+    cotangent is quantized too). ~2× fewer exchange bytes than bf16 at the
+    cost of ≤0.8% per-hop relative error (measured in tests)."""
+    return _a2a_i8_impl(x, axis_name)
+
+
+def _a2a_i8_fwd(x, axis_name):
+    return _a2a_i8_impl(x, axis_name), None
+
+
+def _a2a_i8_bwd(axis_name, _, g):
+    # transpose of this all_to_all is the same all_to_all (symmetric perm)
+    return (_a2a_i8_impl(g, axis_name),)
+
+
+a2a_int8.defvjp(_a2a_i8_fwd, _a2a_i8_bwd)

@@ -1,0 +1,34 @@
+import os
+import sys
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (dry-run sets it in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _clear_jax_caches():
+    """Keep the jit-compilation cache from exhausting memory across the
+    shape-heavy parametrized sweeps."""
+    yield
+    jax.clear_caches()
+
+
+def partition_equiv(a, b) -> bool:
+    """True iff two labelings induce the same partition."""
+    a, b = np.asarray(a), np.asarray(b)
+    if a.shape != b.shape:
+        return False
+    ra, rb = {}, {}
+    for x, y in zip(a.tolist(), b.tolist()):
+        if x in ra and ra[x] != y:
+            return False
+        if y in rb and rb[y] != x:
+            return False
+        ra[x] = y
+        rb[y] = x
+    return True

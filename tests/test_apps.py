@@ -1,0 +1,93 @@
+"""Application tests: AMSF (§5.1) and SCAN GS*-Query (§5.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apps import amsf, scan
+from repro.graphs import components_oracle
+from repro.graphs import generators as gen
+from repro.graphs.generators import with_weights
+
+
+@pytest.fixture(scope="module")
+def weighted_graph():
+    g = gen.rmat(200, 900, seed=5)
+    return g, with_weights(g, seed=1)
+
+
+def test_boruvka_msf_is_spanning(weighted_graph):
+    g, w = weighted_graph
+    exact, _ = amsf.boruvka_msf(g, w)
+    ncomp = len(set(components_oracle(g).tolist()))
+    assert len(exact) == g.n - ncomp
+
+
+def test_boruvka_matches_kruskal_weight(weighted_graph):
+    g, w = weighted_graph
+    exact, _ = amsf.boruvka_msf(g, w)
+    got = amsf.forest_weight(exact, g, w)
+    # Kruskal oracle
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    wn = np.asarray(w)[: g.m]
+    order = np.argsort(wn, kind="stable")
+    parent = list(range(g.n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    total = 0.0
+    for i in order:
+        u, v = int(s[i]), int(r[i])
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[ru] = rv
+            total += float(wn[i])
+    np.testing.assert_allclose(got, total, rtol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["nf", "nf_s", "coo"])
+def test_amsf_within_eps_bound(weighted_graph, variant):
+    g, w = weighted_graph
+    eps = 0.25
+    exact, _ = amsf.boruvka_msf(g, w)
+    ew = amsf.forest_weight(exact, g, w)
+    fn = {"nf": amsf.amsf_nf, "nf_s": amsf.amsf_nf_s,
+          "coo": amsf.amsf_coo}[variant]
+    fe, P = fn(g, w, eps=eps)
+    ncomp = len(set(components_oracle(g).tolist()))
+    assert len(fe) == g.n - ncomp, variant
+    aw = amsf.forest_weight(fe, g, w)
+    assert ew - 1e-5 <= aw <= (1 + eps) * ew + 1e-5, (variant, aw, ew)
+
+
+@pytest.mark.parametrize("eps,mu", [(0.1, 3), (0.3, 2), (0.5, 4)])
+def test_scan_parallel_matches_sequential(eps, mu):
+    g = gen.planted_components(100, 3, 6.0, seed=2)
+    sims = scan.build_index(g)
+    labp, corep = scan.gs_query_parallel(g, jnp.asarray(sims), eps, mu=mu)
+    labs, cores = scan.gs_query_sequential(g, sims, eps, mu=mu)
+    np.testing.assert_array_equal(np.asarray(corep), cores)
+    np.testing.assert_array_equal(np.asarray(labp), labs)
+
+
+def test_scan_clusters_are_similar_connected():
+    g = gen.rmat(120, 500, seed=6)
+    sims = scan.build_index(g)
+    eps, mu = 0.2, 2
+    lab, core = scan.gs_query_parallel(g, jnp.asarray(sims), eps, mu=mu)
+    lab = np.asarray(lab)
+    core = np.asarray(core)
+    # every core-core eps-similar edge joins same cluster
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    sim = np.asarray(sims)[: g.m] >= eps
+    for i in np.where(sim)[0]:
+        u, v = int(s[i]), int(r[i])
+        if core[u] and core[v]:
+            assert lab[u] == lab[v]

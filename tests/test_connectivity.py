@@ -1,0 +1,85 @@
+"""Static connectivity: every finish method × every sampler vs union-find
+oracle (paper Algorithm 1 correctness across the combination space)."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import partition_equiv
+from repro.core import connectivity, finish_names, sampler_names
+from repro.core.driver import connectivity as conn
+from repro.core.primitives import most_frequent, num_components
+from repro.graphs import components_oracle
+from repro.graphs import generators as gen
+
+GRAPHS = {
+    "planted": lambda: gen.planted_components(150, 4, 4.0, seed=1),
+    "rmat": lambda: gen.rmat(200, 600, seed=2),
+    "path": lambda: gen.path(80),
+}
+
+
+@pytest.mark.parametrize("finish", finish_names())
+def test_finish_methods_match_oracle(finish):
+    g = GRAPHS["planted"]()
+    oracle = components_oracle(g)
+    labels = conn(g, finish=finish)
+    assert partition_equiv(labels, oracle), finish
+
+
+@pytest.mark.parametrize("sampler", sampler_names())
+@pytest.mark.parametrize("finish", ["uf_sync", "shiloach_vishkin",
+                                    "liu_tarjan_CRFA", "label_prop",
+                                    "stergiou"])
+def test_sampler_finish_compositions(sampler, finish):
+    g = GRAPHS["rmat"]()
+    oracle = components_oracle(g)
+    labels = conn(g, sample=sampler, finish=finish,
+                  key=jax.random.PRNGKey(3))
+    assert partition_equiv(labels, oracle), (sampler, finish)
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_graph_families(gname):
+    g = GRAPHS[gname]()
+    oracle = components_oracle(g)
+    for finish in ["uf_sync", "liu_tarjan_PRF"]:
+        labels = conn(g, sample="kout", finish=finish)
+        assert partition_equiv(labels, oracle), (gname, finish)
+
+
+def test_canonical_labels_are_component_minima():
+    g = gen.planted_components(120, 6, 3.0, seed=5)
+    labels = np.asarray(conn(g, finish="uf_sync"))
+    for comp in np.unique(labels):
+        members = np.where(labels == comp)[0]
+        assert comp == members.min()
+
+
+def test_edge_savings_from_sampling():
+    """Sampling must actually reduce finish-phase edges (paper Fig. 2)."""
+    g = gen.rmat(1 << 12, 1 << 15, seed=7)
+    labels, stats = conn(g, sample="kout", finish="uf_sync",
+                         return_stats=True)
+    assert stats.edges_finish < 0.5 * stats.edges_total, \
+        (stats.edges_finish, stats.edges_total)
+    assert stats.lmax_count > 0.5 * g.n
+
+
+def test_num_components_and_lmax():
+    g = gen.planted_components(100, 5, 4.0, seed=2)
+    from repro.core.primitives import canonical_labels, init_labels
+    from repro.core.finish import get_finish
+    P, _ = get_finish("uf_sync")(init_labels(g.n), g.senders, g.receivers)
+    P = canonical_labels(P)
+    assert int(num_components(P)) == len(set(components_oracle(g).tolist()))
+    lmax, cnt = most_frequent(P)
+    counts = np.bincount(np.asarray(P[: g.n]))
+    assert counts[int(lmax)] == int(cnt) == counts.max()
+
+
+def test_empty_and_singleton_graphs():
+    for g in [gen.empty_graph(10), gen.star(2)]:
+        oracle = components_oracle(g)
+        labels = conn(g, finish="uf_sync")
+        assert partition_equiv(labels, oracle)

@@ -1,0 +1,84 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret=True) vs ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.edge_relabel.kernel import edge_relabel
+from repro.kernels.edge_relabel.ref import edge_relabel_ref
+from repro.kernels.embedding_bag.kernel import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.pointer_jump.kernel import pointer_jump
+from repro.kernels.pointer_jump.ref import pointer_jump_ref
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n_pad,m_pad,block_m", [
+    (128, 256, 64), (1024, 4096, 1024), (512, 512, 512), (256, 1024, 128),
+    (64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.int32])
+def test_edge_relabel_sweep(n_pad, m_pad, block_m, dtype):
+    P = jnp.asarray(RNG.permutation(n_pad).astype(np.int32)).astype(dtype)
+    s = jnp.asarray(RNG.integers(0, n_pad, m_pad).astype(np.int32))
+    r = jnp.asarray(RNG.integers(0, n_pad, m_pad).astype(np.int32))
+    out = edge_relabel(P, s, r, block_m=block_m, interpret=True)
+    ref = edge_relabel_ref(P, s, r)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_edge_relabel_iterated_reaches_components():
+    from repro.graphs import generators as gen, components_oracle
+    from conftest import partition_equiv
+    g = gen.planted_components(96, 3, 4.0, seed=3)
+    P = jnp.arange(g.n + 1, dtype=jnp.int32)
+    pad = 128 - (g.n + 1) % 128 if (g.n + 1) % 128 else 0
+    P = jnp.concatenate([P, jnp.arange(g.n + 1, g.n + 1 + pad,
+                                       dtype=jnp.int32)])
+    s = jnp.where(g.edge_mask, g.senders, g.n)
+    r = jnp.where(g.edge_mask, g.receivers, g.n)
+    for _ in range(64):
+        P = edge_relabel(P, s, r, block_m=512, interpret=True)
+        P = pointer_jump(P, k=2, block=P.shape[0], interpret=True)
+    assert partition_equiv(np.asarray(P[: g.n]), components_oracle(g))
+
+
+@pytest.mark.parametrize("n_pad,block,k", [
+    (128, 64, 1), (1024, 256, 2), (512, 512, 3), (2048, 128, 4),
+])
+def test_pointer_jump_sweep(n_pad, block, k):
+    P0 = RNG.integers(0, n_pad, n_pad).astype(np.int32)
+    P0 = np.minimum(P0, np.arange(n_pad, dtype=np.int32))
+    out = pointer_jump(jnp.asarray(P0), k=k, block=block, interpret=True)
+    ref = pointer_jump_ref(jnp.asarray(P0), k=k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("V,D,B,L,bb,mode", [
+    (100, 16, 64, 4, 32, "sum"), (50, 64, 128, 8, 64, "mean"),
+    (200, 32, 32, 3, 32, "max"), (33, 8, 16, 1, 16, "sum"),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(V, D, B, L, bb, mode, dtype):
+    tab = np.zeros((V + 1, D), np.float32)
+    tab[:V] = RNG.normal(size=(V, D))
+    tab = jnp.asarray(tab, dtype)
+    idx = jnp.asarray(RNG.integers(0, V + 1, (B, L)).astype(np.int32))
+    out = embedding_bag(tab, idx, mode=mode, block_b=bb, interpret=True)
+    ref = embedding_bag_ref(tab, idx, mode=mode)
+    rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=rtol,
+                               atol=rtol)
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    P = jnp.asarray(RNG.permutation(64).astype(np.int32))
+    s = jnp.asarray(RNG.integers(0, 64, 128).astype(np.int32))
+    r = jnp.asarray(RNG.integers(0, 64, 128).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.edge_relabel(P, s, r)),
+        np.asarray(edge_relabel_ref(P, s, r)))

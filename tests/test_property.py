@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import partition_equiv
+from repro.core import connectivity as conn_mod
+from repro.core.driver import connectivity as conn
+from repro.core import streaming
+from repro.graphs import components_oracle, build_graph
+from repro.graphs import generators as gen
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def random_graphs(draw, max_n=64, max_m=160):
+    n = draw(st.integers(2, max_n))
+    m = draw(st.integers(0, max_m))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    return build_graph(np.array(edges, dtype=np.int64).reshape(-1, 2), n)
+
+
+@given(g=random_graphs(), finish=st.sampled_from(
+    ["uf_sync", "label_prop", "liu_tarjan_CRFA", "stergiou"]))
+@settings(**SETTINGS)
+def test_matches_oracle_on_random_graphs(g, finish):
+    assert partition_equiv(conn(g, finish=finish), components_oracle(g))
+
+
+@given(g=random_graphs(max_n=48, max_m=120),
+       sampler=st.sampled_from(["kout", "bfs", "ldd"]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_sampling_composition_on_random_graphs(g, sampler, seed):
+    labels = conn(g, sample=sampler, finish="uf_sync",
+                  key=jax.random.PRNGKey(seed))
+    assert partition_equiv(labels, components_oracle(g))
+
+
+@given(g=random_graphs(max_n=40, max_m=100), perm_seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_vertex_permutation_invariance(g, perm_seed):
+    """Relabeling vertices permutes the partition consistently."""
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(g.n)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    g2 = build_graph(np.stack([perm[s], perm[r]], 1), g.n)
+    lab1 = np.asarray(conn(g, finish="uf_sync"))
+    lab2 = np.asarray(conn(g2, finish="uf_sync"))
+    # lab2 on permuted ids must induce the same partition as lab1 (pulled back)
+    assert partition_equiv(lab1, lab2[perm])
+
+
+@given(g=random_graphs(max_n=40, max_m=80))
+@settings(**SETTINGS)
+def test_adding_edges_never_splits_components(g):
+    from repro.core.primitives import num_components, canonical_labels, \
+        init_labels
+    from repro.core.finish import get_finish
+    P, _ = get_finish("uf_sync")(init_labels(g.n), g.senders, g.receivers)
+    before = int(num_components(canonical_labels(P)))
+    # add one more edge
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    extra = np.array([[0, g.n - 1]])
+    edges = np.concatenate([np.stack([s, r], 1), extra]) if g.m else extra
+    g2 = build_graph(edges, g.n)
+    P2, _ = get_finish("uf_sync")(init_labels(g2.n), g2.senders, g2.receivers)
+    after = int(num_components(canonical_labels(P2)))
+    assert after <= before
+
+
+@given(g=random_graphs(max_n=48, max_m=120), order_seed=st.integers(0, 999),
+       batch=st.sampled_from([4, 16, 64]))
+@settings(**SETTINGS)
+def test_streaming_order_independence(g, order_seed, batch):
+    """Inserting the edges in any batched order yields the static partition
+    (batch-incremental correctness, paper Appendix B.4)."""
+    if g.m == 0:
+        return
+    oracle = components_oracle(g)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    perm = np.random.default_rng(order_seed).permutation(g.m)
+    s, r = s[perm], r[perm]
+    state = streaming.init_stream(g.n)
+    for i in range(0, g.m, batch):
+        bu = np.full((batch,), g.n, np.int32)
+        bv = np.full((batch,), g.n, np.int32)
+        k = min(batch, g.m - i)
+        bu[:k] = s[i: i + k]
+        bv[:k] = r[i: i + k]
+        state = streaming.insert_batch(state, jnp.asarray(bu),
+                                       jnp.asarray(bv))
+    assert partition_equiv(np.asarray(state.P[: g.n]), oracle)
+
+
+@given(n=st.integers(2, 50), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_labels_idempotent_under_rerun(n, seed):
+    g = gen.random_graph(n, 3 * n, seed=seed % 1000)
+    lab1 = np.asarray(conn(g, finish="uf_sync"))
+    lab2 = np.asarray(conn(g, finish="uf_sync"))
+    assert (lab1 == lab2).all()

@@ -1,0 +1,73 @@
+"""Batch-incremental streaming connectivity (paper §3.5 / §4.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import partition_equiv
+from repro.core import streaming
+from repro.graphs import components_oracle
+from repro.graphs import generators as gen
+
+
+@pytest.mark.parametrize("finish", ["uf_sync_full", "shiloach_vishkin",
+                                    "liu_tarjan_CRFA"])
+def test_incremental_matches_static(finish):
+    g = gen.rmat(256, 1000, seed=3)
+    oracle = components_oracle(g)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    perm = np.random.default_rng(0).permutation(g.m)
+    s, r = s[perm], r[perm]
+    state = streaming.init_stream(g.n)
+    B = 128
+    for i in range(0, g.m, B):
+        bu = np.full((B,), g.n, np.int32)
+        bv = np.full((B,), g.n, np.int32)
+        k = min(B, g.m - i)
+        bu[:k] = s[i: i + k]
+        bv[:k] = r[i: i + k]
+        state = streaming.insert_batch(state, jnp.asarray(bu),
+                                       jnp.asarray(bv), finish=finish)
+    assert partition_equiv(np.asarray(state.P[: g.n]), oracle)
+
+
+def test_queries_linearize_after_inserts():
+    g = gen.planted_components(64, 4, 3.0, seed=1)
+    oracle = components_oracle(g)
+    state = streaming.init_stream(g.n)
+    s = jnp.where(g.edge_mask, g.senders, g.n)
+    r = jnp.where(g.edge_mask, g.receivers, g.n)
+    qa = jnp.arange(32, dtype=jnp.int32)
+    qb = jnp.arange(32, 64, dtype=jnp.int32)
+    state, ans = streaming.process_batch(state, s, r, qa, qb)
+    expect = oracle[np.arange(32)] == oracle[np.arange(32, 64)]
+    np.testing.assert_array_equal(np.asarray(ans), expect)
+
+
+def test_empty_batch_is_identity():
+    state = streaming.init_stream(32)
+    bu = jnp.full((16,), 32, jnp.int32)
+    state2 = streaming.insert_batch(state, bu, bu)
+    np.testing.assert_array_equal(np.asarray(state.P), np.asarray(state2.P))
+
+
+def test_monotone_component_count():
+    g = gen.rmat(128, 600, seed=9)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    state = streaming.init_stream(g.n)
+    prev = g.n
+    B = 64
+    for i in range(0, g.m, B):
+        bu = np.full((B,), g.n, np.int32)
+        bv = np.full((B,), g.n, np.int32)
+        k = min(B, g.m - i)
+        bu[:k] = s[i: i + k]
+        bv[:k] = r[i: i + k]
+        state = streaming.insert_batch(state, jnp.asarray(bu),
+                                       jnp.asarray(bv))
+        ncomp = len(np.unique(np.asarray(state.P[: g.n])))
+        assert ncomp <= prev
+        prev = ncomp
