@@ -11,7 +11,8 @@ from .common import emit, graph_suite, timeit
 
 
 def run(quick: bool = True):
-    from repro.core.driver import connectivity
+    from repro.api import ConnectIt
+    session = ConnectIt("kout_hybrid_k2+uf_sync_naive")
     rows = []
     suite = graph_suite()
     names = list(suite)[:3 if quick else None]
@@ -32,9 +33,8 @@ def run(quick: bool = True):
         t_map = timeit(map_edges, g.senders, warmup=1, iters=3)
         t_gather = timeit(gather_edges, g.senders, g.receivers, vals,
                           warmup=1, iters=3)
-        t_conn = timeit(lambda: connectivity(
-            g, sample="kout", finish="uf_sync", key=jax.random.PRNGKey(0)),
-            warmup=1, iters=2)
+        t_conn = timeit(lambda: session.connectivity(
+            g, key=jax.random.PRNGKey(0)), warmup=1, iters=2)
         rows.append(dict(graph=gname, map_edges_s=f"{t_map:.5f}",
                          gather_edges_s=f"{t_gather:.5f}",
                          connectit_s=f"{t_conn:.5f}",

@@ -33,8 +33,12 @@ SUITES = {
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized pass (the default; explicit flag for CI)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     names = [args.only] if args.only else list(SUITES)
     t0 = time.time()
     for name in names:

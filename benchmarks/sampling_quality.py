@@ -1,29 +1,31 @@
 """Paper Figure 2 / Tables 6-7: sampling quality — coverage of the most
 frequent component (X/m analogue) and fraction of inter-component edges
-remaining after each sampling scheme."""
+remaining after each enumerated sampling configuration."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .common import emit, graph_suite
 
 
+def _sampling_specs():
+    """The enabled sampling configurations of the enumerated space."""
+    from repro.api import default_sampling_grid
+    return [s for s in default_sampling_grid() if s.enabled]
+
+
 def run(quick: bool = True):
-    from repro.core.sampling import get_sampler
     from repro.core.primitives import full_compress, most_frequent
     rows = []
     suite = graph_suite()
     if quick:
         suite = {k: suite[k] for k in list(suite)[:3]}
-    samplers = ["kout_afforest", "kout_pure", "kout_hybrid", "kout_maxdeg",
-                "bfs", "ldd"]
     for gname, build in suite.items():
         g = build()
-        for s in samplers:
-            P = get_sampler(s)(g, jax.random.PRNGKey(2))
+        for spec in _sampling_specs():
+            P = spec.build()(g, jax.random.PRNGKey(2))
             P = full_compress(P)
             lmax, cnt = most_frequent(P)
             ls = P[g.senders]
@@ -31,7 +33,7 @@ def run(quick: bool = True):
             inter = jnp.sum((ls != lr) & g.edge_mask)
             in_lmax = jnp.sum((ls == lmax) & (lr == lmax) & g.edge_mask)
             rows.append(dict(
-                graph=gname, sampler=s,
+                graph=gname, sampler=str(spec),
                 coverage_pct=f"{100 * float(cnt) / g.n:.2f}",
                 lmax_edge_frac=f"{float(in_lmax) / g.m:.4f}",
                 inter_comp_edge_frac=f"{float(inter) / g.m:.5f}"))

@@ -1,6 +1,6 @@
-"""Paper Table 3: static connectivity — finish methods × sampling schemes
-across the graph suite. Reports wall time (s) per combination and the
-speedup of each sampling scheme over no-sampling for the fastest finish."""
+"""Paper Table 3: static connectivity — the enumerated VariantSpec space
+across the graph suite. Reports wall time (s) per variant and the speedup of
+each sampling scheme over no-sampling for the fastest finish."""
 
 from __future__ import annotations
 
@@ -8,31 +8,43 @@ import jax
 
 from .common import emit, graph_suite, timeit
 
-FINISHES = ["uf_sync", "uf_sync_full", "shiloach_vishkin", "liu_tarjan_CRFA",
-            "liu_tarjan_PRF", "stergiou", "label_prop"]
-SAMPLERS = [None, "kout", "bfs", "ldd"]
+# quick mode: the paper's headline variants (default sampler per scheme ×
+# the representative finish of each family); full mode: every enumerated spec
+QUICK_SAMPLINGS = ("none", "kout_hybrid_k2", "bfs_c3", "ldd_b0.2")
+QUICK_FINISHES = ("uf_sync_naive", "uf_sync_full", "shiloach_vishkin",
+                  "liu_tarjan_CRFA")
+
+
+def _specs(quick: bool):
+    from repro.api import enumerate_variants
+    specs = enumerate_variants()
+    if quick:
+        specs = [s for s in specs
+                 if str(s.sampling) in QUICK_SAMPLINGS
+                 and s.finish_str in QUICK_FINISHES]
+    return specs
 
 
 def run(quick: bool = True):
-    from repro.core.driver import connectivity
+    from repro.api import ConnectIt
     rows = []
     suite = graph_suite()
     if quick:
         suite = {k: suite[k] for k in list(suite)[:3]}
-        finishes = FINISHES[:4]
-    else:
-        finishes = FINISHES
+    specs = _specs(quick)
     for gname, build in suite.items():
         g = build()
-        for sampler in SAMPLERS:
-            for finish in finishes:
-                def once():
-                    return connectivity(g, sample=sampler, finish=finish,
-                                        key=jax.random.PRNGKey(1))
-                t = timeit(once, warmup=1, iters=2)
-                rows.append(dict(graph=gname, n=g.n, m=g.m,
-                                 sampler=sampler or "none", finish=finish,
-                                 time_s=f"{t:.5f}"))
+        for spec in specs:
+            session = ConnectIt(spec)
+
+            def once():
+                return session.connectivity(g, key=jax.random.PRNGKey(1))
+
+            t = timeit(once, warmup=1, iters=2)
+            rows.append(dict(graph=gname, n=g.n, m=g.m,
+                             sampler=str(spec.sampling),
+                             finish=spec.finish_str,
+                             time_s=f"{t:.5f}"))
         jax.clear_caches()
     emit(rows, ["graph", "n", "m", "sampler", "finish", "time_s"])
     return rows

@@ -6,8 +6,6 @@ from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .common import emit, timeit
@@ -33,7 +31,8 @@ def _sequential_baseline(s, r, n, limit=20000):
 
 
 def run(quick: bool = True):
-    from repro.core import streaming
+    from repro.api import ConnectIt
+    session = ConnectIt("none+uf_sync_full")
     from repro.graphs import generators as gen
     rows = []
     n = 1 << 17
@@ -48,14 +47,14 @@ def run(quick: bool = True):
         nb = max(min(len(s) // B, 64), 1)
 
         def ingest():
-            st = streaming.init_stream(g.n)
+            h = session.stream(g.n)
             for i in range(nb):
-                bu = jnp.asarray(s[i * B:(i + 1) * B])
-                bv = jnp.asarray(r[i * B:(i + 1) * B])
+                bu = s[i * B:(i + 1) * B]
+                bv = r[i * B:(i + 1) * B]
                 if len(bu) < B:
                     break
-                st = streaming.insert_batch(st, bu, bv)
-            return st.P
+                h.insert(bu, bv)
+            return h.state.P
         t = timeit(ingest, warmup=1, iters=2)
         tput = nb * B / t
         rows.append(dict(batch=B, edges_per_s=f"{tput:.3e}",

@@ -8,31 +8,34 @@ import jax
 from .common import emit, timeit
 
 
+SAMPLINGS = ("none", "kout_hybrid_k2", "bfs_c3", "ldd_b0.2")
+
+
 def run(quick: bool = True):
-    from repro.core.driver import connectivity
+    from repro.api import ConnectIt
     from repro.graphs import generators as gen
     rows = []
     n_ba = 1 << 12 if quick else 1 << 14
     densities = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]
     for k in densities:
         g = gen.barabasi_albert(n_ba, k, seed=1)
-        for sampler in [None, "kout", "bfs", "ldd"]:
-            t = timeit(lambda: connectivity(
-                g, sample=sampler, finish="uf_sync",
-                key=jax.random.PRNGKey(0)), warmup=1, iters=2)
-            rows.append(dict(family="ba", param=k, sampler=sampler or "none",
+        for sampling in SAMPLINGS:
+            session = ConnectIt(f"{sampling}+uf_sync_naive")
+            t = timeit(lambda: session.connectivity(
+                g, key=jax.random.PRNGKey(0)), warmup=1, iters=2)
+            rows.append(dict(family="ba", param=k, sampler=sampling,
                              time_s=f"{t:.5f}"))
         jax.clear_caches()
     dims = [2, 3] if quick else [1, 2, 3, 4]
     for d in dims:
         side = max(2, int(round((1 << 14) ** (1.0 / d))))
         g = gen.torus((side,) * d)
-        for sampler in [None, "kout", "bfs", "ldd"]:
-            t = timeit(lambda: connectivity(
-                g, sample=sampler, finish="uf_sync",
-                key=jax.random.PRNGKey(0)), warmup=1, iters=2)
+        for sampling in SAMPLINGS:
+            session = ConnectIt(f"{sampling}+uf_sync_naive")
+            t = timeit(lambda: session.connectivity(
+                g, key=jax.random.PRNGKey(0)), warmup=1, iters=2)
             rows.append(dict(family="torus", param=d,
-                             sampler=sampler or "none", time_s=f"{t:.5f}"))
+                             sampler=sampling, time_s=f"{t:.5f}"))
         jax.clear_caches()
     emit(rows, ["family", "param", "sampler", "time_s"])
     return rows

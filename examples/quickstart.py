@@ -11,8 +11,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import (connectivity, finish_names, sampler_names,
-                        spanning_forest)
+from repro.api import ConnectIt, VariantSpec, enumerate_variants
 from repro.graphs import components_oracle, generators as gen
 
 
@@ -21,31 +20,44 @@ def main():
     g = gen.rmat(1 << 14, 1 << 17, seed=0)
     print(f"graph: n={g.n} m={g.m} (directed edges)")
 
-    # 2. one-line connectivity — any sampler × any finish method
-    labels = connectivity(g, sample="kout", finish="uf_sync",
-                          key=jax.random.PRNGKey(0))
+    # 2. pick one point of the variant space — any sampling scheme composes
+    #    with any finish method (the paper's central claim)
+    spec = VariantSpec.parse("kout_hybrid_k2+uf_sync_full")
+    ci = ConnectIt(spec)
+    labels = ci.connectivity(g, key=jax.random.PRNGKey(0))
     n_comp = len(np.unique(np.asarray(labels)))
-    print(f"components: {n_comp} "
+    print(f"{spec}: {n_comp} components "
           f"(oracle: {len(np.unique(components_oracle(g)))})")
 
-    # 3. the combination space the paper explores:
-    print(f"{len(sampler_names())} samplers × {len(finish_names())} finish "
-          f"methods available:")
-    print("  samplers:", ", ".join(sampler_names()))
-    print("  finishes:", ", ".join(finish_names()))
+    # 3. the combination space the paper explores, as one enumeration
+    specs = enumerate_variants()
+    samplings = sorted({str(s.sampling) for s in specs})
+    finishes = sorted({s.finish_str for s in specs})
+    print(f"{len(specs)} enumerable variants "
+          f"({len(samplings)} sampling × {len(finishes)} finish configs):")
+    print("  samplings:", ", ".join(samplings))
+    print("  finishes: ", ", ".join(finishes))
 
     # 4. two-phase statistics (paper Figure 2: X edges covered, Y processed)
-    labels, stats = connectivity(g, sample="kout", finish="uf_sync",
-                                 key=jax.random.PRNGKey(0),
-                                 return_stats=True)
+    stats = ci.stats
     print(f"sampling covered L_max={stats.lmax_count} vertices; finish phase "
           f"processed {stats.edges_finish}/{stats.edges_total} edges "
-          f"({100 * stats.edges_finish / stats.edges_total:.1f}%)")
+          f"({100 * stats.edges_finish / stats.edges_total:.1f}%) in "
+          f"{stats.finish_rounds} rounds")
 
-    # 5. spanning forest via root-based finish (paper §3.4)
-    forest = spanning_forest(g, sample="bfs")
+    # 5. spanning forest via root-based finish (paper §3.4) — the same
+    #    session object serves the forest workload
+    forest = ci.spanning_forest(g)
     print(f"spanning forest: {len(forest)} edges "
           f"(expect n - #components = {g.n - n_comp})")
+
+    # 6. batch-incremental connectivity (paper §3.5) — and the streaming one
+    h = ci.stream(g.n)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    h.insert(s, r)
+    print(f"stream: {h.edges_inserted} edges in {h.batches} batch -> "
+          f"{h.num_components()} components")
 
 
 if __name__ == "__main__":

@@ -10,10 +10,9 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import streaming
+from repro.api import ConnectIt
 from repro.graphs import generators as gen
 from repro.launch.ingest import run_ingest
 
@@ -28,16 +27,16 @@ def main():
     # mixed inserts + queries (paper Figure 20 shape)
     print("\n== mixed inserts/queries ==")
     g = gen.rmat(1 << 14, 1 << 17, seed=1)
-    st = streaming.init_stream(g.n)
+    h = ConnectIt("none+uf_sync_full").stream(g.n)
     s = np.asarray(g.senders)[: g.m]
     r = np.asarray(g.receivers)[: g.m]
     B, Q = 1 << 14, 1 << 10
     for i in range(4):
-        bu = jnp.asarray(s[i * B:(i + 1) * B])
-        bv = jnp.asarray(r[i * B:(i + 1) * B])
+        bu = s[i * B:(i + 1) * B]
+        bv = r[i * B:(i + 1) * B]
         qa = jax.random.randint(jax.random.PRNGKey(i), (Q,), 0, g.n)
         qb = jax.random.randint(jax.random.PRNGKey(i + 9), (Q,), 0, g.n)
-        st, ans = streaming.process_batch(st, bu, bv, qa, qb)
+        ans = h.process(bu, bv, qa, qb)
         print(f"batch {i}: inserted {B} edges, {Q} queries, "
               f"{int(ans.sum())} connected pairs")
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.core import connectivity
+from repro.api import ConnectIt
 from repro.graphs import generators as gen
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn
 
@@ -23,7 +23,7 @@ def main():
     # a "molecule batch": many small graphs as one block-diagonal graph;
     # per-graph ids come from ConnectIt (the paper's technique as substrate)
     g = gen.planted_components(512, 32, 4.0, seed=0)
-    labels = np.asarray(connectivity(g, finish="uf_sync"))
+    labels = ConnectIt("none+uf_sync_naive").connected_components(g)
     uniq, graph_ids = np.unique(labels, return_inverse=True)
     n_graphs = len(uniq)
     print(f"ConnectIt found {n_graphs} graphs in the batch")

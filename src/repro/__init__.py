@@ -1,2 +1,6 @@
-"""repro: ConnectIt (Dhulipala, Hong, Shun 2020) on JAX/TPU."""
-__version__ = "0.1.0"
+"""repro: ConnectIt (Dhulipala, Hong, Shun 2020) on JAX/TPU.
+
+Public front-end: ``repro.api`` (VariantSpec / ConnectIt /
+enumerate_variants) — see docs/API.md.
+"""
+__version__ = "0.2.0"

@@ -1,0 +1,550 @@
+"""Unified ``VariantSpec`` API: the paper's variant space as one front-end.
+
+ConnectIt's central contribution is that *any* sampling scheme composes with
+*any* finish/compression scheme (paper §3, Table 1). This module makes that
+cross-product a first-class, declarative object instead of stringly-typed
+registry keys:
+
+    spec = VariantSpec.parse("kout_hybrid_k2+uf_sync_full")
+    ci = ConnectIt(spec)
+    labels = ci.connectivity(g)          # static connectivity
+    forest = ci.spanning_forest(g)       # paper §3.4 (root-based finish only)
+    h = ci.stream(n)                     # batch-incremental handle (§3.5)
+    ci.stats                             # ConnectivityStats of the last run
+
+Spec grammar (canonical strings round-trip: ``VariantSpec.parse(str(s)) == s``):
+
+    variant  := sampling "+" finish
+    sampling := "none"
+              | "kout_" kvariant "_k" INT
+              | "bfs_c" INT ["_t" FLOAT]
+              | "ldd_b" FLOAT
+    kvariant := "afforest" | "pure" | "hybrid" | "maxdeg"
+    finish   := "uf_sync_" compress
+              | "shiloach_vishkin" | "label_prop" | "stergiou"
+              | "liu_tarjan_" LTCODE          # 16 valid rule combinations
+    compress := "naive" | "halve" | "full"
+
+``enumerate_variants()`` materializes the paper's sampling × finish ×
+compression cross-product with the paper's documented incompatibilities
+excluded (see its docstring). docs/API.md has the migration table from the
+old flat string keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import driver, streaming
+from .core.finish import (
+    COMPRESS_MODES,
+    LIU_TARJAN_VARIANTS,
+    make_finish,
+    method_names,
+)
+from .core.primitives import num_components
+from .core.sampling import KOUT_VARIANTS, make_sampler
+
+__all__ = [
+    "SamplingSpec", "FinishSpec", "VariantSpec", "ConnectIt", "Stream",
+    "enumerate_variants", "is_compatible",
+    "KOUT_VARIANTS", "COMPRESS_MODES", "LIU_TARJAN_VARIANTS",
+]
+
+SAMPLING_SCHEMES = ("none", "kout", "bfs", "ldd")
+CONNECT_RULES = ("connect", "parent", "extended")
+SHORTCUT_RULES = ("S", "F")
+
+# reverse map: Liu–Tarjan rule options -> code ("CRFA", ...)
+_LT_CODE_BY_OPTS = {opts: code for code, opts in LIU_TARJAN_VARIANTS.items()}
+
+# which SamplingSpec knobs are meaningful per scheme; the rest are pinned to
+# their defaults on construction so equality and string round-trips are
+# canonical (SamplingSpec("bfs", k=7) == SamplingSpec("bfs")).
+_SAMPLING_FIELDS = {
+    "none": (),
+    "kout": ("k", "variant"),
+    "bfs": ("num_sources", "threshold"),
+    "ldd": ("beta",),
+}
+# single source of truth for parameter defaults: the dataclass fields
+# themselves (populated right after the SamplingSpec definition below)
+_SAMPLING_DEFAULTS: dict = {}
+
+
+def _fmt_float(x: float) -> str:
+    # repr round-trips exactly through float() ("%g" would quantize to 6
+    # significant digits and break parse(str(spec)) == spec)
+    return repr(float(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingSpec:
+    """Declarative sampling-phase configuration (paper §3.2)."""
+
+    scheme: str = "none"
+    k: int = 2                 # kout: edges selected per vertex
+    variant: str = "hybrid"    # kout: afforest | pure | hybrid | maxdeg
+    beta: float = 0.2          # ldd: exponential-shift parameter
+    num_sources: int = 3       # bfs: max sources tried
+    threshold: float = 0.1     # bfs: coverage accept-gate fraction
+
+    def __post_init__(self):
+        if self.scheme not in SAMPLING_SCHEMES:
+            raise ValueError(f"unknown sampling scheme {self.scheme!r}; "
+                             f"have {SAMPLING_SCHEMES}")
+        # coerce numeric types up front; reject non-integral counts rather
+        # than silently truncating them
+        for name in ("k", "num_sources"):
+            v = getattr(self, name)
+            if int(v) != v:
+                raise ValueError(f"{name} must be an integer, got {v!r}")
+            object.__setattr__(self, name, int(v))
+        object.__setattr__(self, "beta", float(self.beta))
+        object.__setattr__(self, "threshold", float(self.threshold))
+        if self.scheme == "kout":
+            if self.variant not in KOUT_VARIANTS:
+                raise ValueError(f"unknown k-out variant {self.variant!r}; "
+                                 f"have {KOUT_VARIANTS}")
+            if not 1 <= self.k <= 64:
+                raise ValueError(f"kout k must be in [1, 64], got {self.k}")
+        if self.scheme == "ldd" and not self.beta > 0.0:
+            raise ValueError(f"ldd beta must be > 0, got {self.beta}")
+        if self.scheme == "bfs":
+            if self.num_sources < 1:
+                raise ValueError(
+                    f"bfs num_sources must be >= 1, got {self.num_sources}")
+            if not 0.0 < self.threshold <= 1.0:
+                raise ValueError(
+                    f"bfs threshold must be in (0, 1], got {self.threshold}")
+        # canonicalize: pin knobs the scheme does not use to their defaults
+        live = _SAMPLING_FIELDS[self.scheme]
+        for name, default in _SAMPLING_DEFAULTS.items():
+            if name not in live:
+                object.__setattr__(self, name, default)
+
+    @property
+    def enabled(self) -> bool:
+        return self.scheme != "none"
+
+    def factory_kwargs(self) -> dict:
+        """kwargs for ``repro.core.sampling.make_sampler(self.scheme, ...)``."""
+        if self.scheme == "kout":
+            return dict(k=self.k, variant=self.variant)
+        if self.scheme == "bfs":
+            return dict(num_sources=self.num_sources, threshold=self.threshold)
+        if self.scheme == "ldd":
+            return dict(beta=self.beta)
+        return {}
+
+    def build(self):
+        """Resolve to the (memoized) sampler callable, or None for 'none'."""
+        if not self.enabled:
+            return None
+        return make_sampler(self.scheme, **self.factory_kwargs())
+
+    def __str__(self) -> str:
+        if self.scheme == "none":
+            return "none"
+        if self.scheme == "kout":
+            return f"kout_{self.variant}_k{self.k}"
+        if self.scheme == "bfs":
+            s = f"bfs_c{self.num_sources}"
+            if self.threshold != _SAMPLING_DEFAULTS["threshold"]:
+                s += f"_t{_fmt_float(self.threshold)}"
+            return s
+        return f"ldd_b{_fmt_float(self.beta)}"
+
+    @classmethod
+    def parse(cls, text: str) -> "SamplingSpec":
+        t = text.strip()
+        if t in ("", "none"):
+            return cls()
+        parts = t.split("_")
+        scheme = parts[0]
+        if scheme == "kout":
+            kw: dict = {}
+            for p in parts[1:]:
+                if p in KOUT_VARIANTS:
+                    kw["variant"] = p
+                elif p[:1] == "k" and p[1:].isdigit():
+                    kw["k"] = int(p[1:])
+                else:
+                    raise ValueError(f"bad kout token {p!r} in {text!r}")
+            return cls("kout", **kw)
+        if scheme == "bfs":
+            kw = {}
+            for p in parts[1:]:
+                if p[:1] == "c" and p[1:].isdigit():
+                    kw["num_sources"] = int(p[1:])
+                elif p[:1] == "t":
+                    kw["threshold"] = float(p[1:])
+                else:
+                    raise ValueError(f"bad bfs token {p!r} in {text!r}")
+            return cls("bfs", **kw)
+        if scheme == "ldd":
+            kw = {}
+            for p in parts[1:]:
+                if p[:1] == "b":
+                    kw["beta"] = float(p[1:])
+                else:
+                    raise ValueError(f"bad ldd token {p!r} in {text!r}")
+            return cls("ldd", **kw)
+        raise ValueError(f"unknown sampling scheme in {text!r}; "
+                         f"have {SAMPLING_SCHEMES}")
+
+
+_SAMPLING_DEFAULTS.update({
+    f.name: f.default for f in dataclasses.fields(SamplingSpec)
+    if f.name != "scheme"
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishSpec:
+    """Declarative finish-phase configuration (paper §3.3).
+
+    ``compress`` selects the pointer-jumping aggressiveness of the uf_sync
+    family (FindNaive/FindHalve/FindCompress, DESIGN.md §2); it is pinned to
+    its default for the other methods. The Liu–Tarjan rule options live on
+    ``VariantSpec`` (connect/rootup/shortcut/alter)."""
+
+    method: str = "uf_sync"
+    compress: str = "naive"
+
+    def __post_init__(self):
+        if self.method not in method_names():
+            raise ValueError(f"unknown finish method {self.method!r}; "
+                             f"have {method_names()}")
+        if self.method == "uf_sync":
+            if self.compress not in COMPRESS_MODES:
+                raise ValueError(f"unknown compress mode {self.compress!r}; "
+                                 f"have {COMPRESS_MODES}")
+        else:
+            object.__setattr__(self, "compress", "naive")
+
+    def __str__(self) -> str:
+        if self.method == "uf_sync":
+            return f"uf_sync_{self.compress}"
+        return self.method
+
+
+def _parse_finish_part(text: str) -> tuple[FinishSpec, dict]:
+    """finish token -> (FinishSpec, Liu–Tarjan option overrides)."""
+    t = text.strip()
+    if t == "uf_sync":  # legacy alias: FindNaive analogue
+        return FinishSpec("uf_sync", "naive"), {}
+    if t.startswith("uf_sync_"):
+        return FinishSpec("uf_sync", t[len("uf_sync_"):]), {}
+    if t in ("shiloach_vishkin", "label_prop", "stergiou"):
+        return FinishSpec(t), {}
+    if t == "liu_tarjan":  # legacy alias: paper-fastest LT variant
+        t = "liu_tarjan_CRFA"
+    if t.startswith("liu_tarjan_"):
+        code = t[len("liu_tarjan_"):]
+        if code not in LIU_TARJAN_VARIANTS:
+            raise ValueError(f"unknown Liu-Tarjan code {code!r}; "
+                             f"have {sorted(LIU_TARJAN_VARIANTS)}")
+        connect, rootup, shortcut, alter = LIU_TARJAN_VARIANTS[code]
+        return FinishSpec("liu_tarjan"), dict(
+            connect=connect, rootup=rootup, shortcut=shortcut, alter=alter)
+    raise ValueError(f"unknown finish method in {text!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """One point of the paper's sampling × finish × compression space."""
+
+    sampling: SamplingSpec = SamplingSpec()
+    finish: FinishSpec = FinishSpec()
+    # Liu–Tarjan rule options (paper §3.3.2 / Appendix D.4); meaningful only
+    # when finish.method == "liu_tarjan", pinned to defaults otherwise. The
+    # defaults spell CRFA — the paper-fastest LT variant — matching the bare
+    # "liu_tarjan" alias everywhere else.
+    connect: str = "connect"   # Connect | ParentConnect | ExtendedConnect
+    rootup: bool = True        # update roots only (R) vs unconditional (U)
+    shortcut: str = "F"        # one jump round (S) vs compress to fixpoint (F)
+    alter: bool = True         # rewrite edge endpoints to parent ids
+
+    def __post_init__(self):
+        if self.finish.method == "liu_tarjan":
+            if self.connect not in CONNECT_RULES:
+                raise ValueError(f"unknown connect rule {self.connect!r}; "
+                                 f"have {CONNECT_RULES}")
+            if self.shortcut not in SHORTCUT_RULES:
+                raise ValueError(f"unknown shortcut rule {self.shortcut!r}; "
+                                 f"have {SHORTCUT_RULES}")
+            opts = (self.connect, bool(self.rootup), self.shortcut,
+                    bool(self.alter))
+            if opts not in _LT_CODE_BY_OPTS:
+                raise ValueError(
+                    f"Liu-Tarjan rule combination {opts} is not one of the "
+                    f"paper's valid variants (Table 1); valid codes: "
+                    f"{sorted(LIU_TARJAN_VARIANTS)}")
+        else:
+            object.__setattr__(self, "connect", "connect")
+            object.__setattr__(self, "rootup", True)
+            object.__setattr__(self, "shortcut", "F")
+            object.__setattr__(self, "alter", True)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def parse(cls, text: str) -> "VariantSpec":
+        """Parse ``"<sampling>+<finish>"`` (or bare ``"<finish>"``)."""
+        if "+" in text:
+            # split on the LAST '+': finish tokens never contain one, while
+            # a float sampling parameter may (repr(1e16) == '1e+16')
+            samp_part, fin_part = text.rsplit("+", 1)
+        else:
+            samp_part, fin_part = "none", text
+        sampling = SamplingSpec.parse(samp_part)
+        finish, lt_opts = _parse_finish_part(fin_part)
+        return cls(sampling=sampling, finish=finish, **lt_opts)
+
+    @classmethod
+    def liu_tarjan(cls, code: str,
+                   sampling: SamplingSpec = SamplingSpec()) -> "VariantSpec":
+        """Convenience constructor from a Liu–Tarjan variant code."""
+        if code not in LIU_TARJAN_VARIANTS:
+            raise ValueError(f"unknown Liu-Tarjan code {code!r}; "
+                             f"have {sorted(LIU_TARJAN_VARIANTS)}")
+        connect, rootup, shortcut, alter = LIU_TARJAN_VARIANTS[code]
+        return cls(sampling=sampling, finish=FinishSpec("liu_tarjan"),
+                   connect=connect, rootup=rootup, shortcut=shortcut,
+                   alter=alter)
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def lt_code(self) -> Optional[str]:
+        if self.finish.method != "liu_tarjan":
+            return None
+        return _LT_CODE_BY_OPTS[(self.connect, self.rootup, self.shortcut,
+                                 self.alter)]
+
+    @property
+    def finish_str(self) -> str:
+        if self.finish.method == "liu_tarjan":
+            return f"liu_tarjan_{self.lt_code}"
+        return str(self.finish)
+
+    def finish_kwargs(self) -> dict:
+        """kwargs for ``repro.core.finish.make_finish(self.finish.method)``."""
+        if self.finish.method == "uf_sync":
+            return dict(compress=self.finish.compress)
+        if self.finish.method == "liu_tarjan":
+            return dict(variant=self.lt_code)
+        return {}
+
+    def build_finish(self):
+        """Resolve to the (memoized) finish callable."""
+        return make_finish(self.finish.method, **self.finish_kwargs())
+
+    def __str__(self) -> str:
+        return f"{self.sampling}+{self.finish_str}"
+
+
+# ---------------------------------------------------------------------------
+# Variant-space enumeration (paper §3, Table 1 cross-product).
+# ---------------------------------------------------------------------------
+
+def is_compatible(sampling: SamplingSpec, finish_str: str) -> bool:
+    """Paper-documented composition rules for sampling × finish.
+
+    * Stergiou's two-array (prev/cur) algorithm assumes the identity
+      labeling as its starting point (paper B.2.5); the paper composes it
+      with sampling only in a modified form we do not enumerate.
+    * Invalid Liu–Tarjan rule mixes never reach this predicate: only the 16
+      paper-valid codes (LIU_TARJAN_VARIANTS) are representable/enumerated.
+    """
+    if sampling.enabled and finish_str == "stergiou":
+        return False
+    return True
+
+
+def default_sampling_grid() -> list[SamplingSpec]:
+    """The paper's sampling schemes at their Table-1 parameterizations."""
+    return (
+        [SamplingSpec()]
+        + [SamplingSpec("kout", k=2, variant=v) for v in KOUT_VARIANTS]
+        + [SamplingSpec("bfs"), SamplingSpec("ldd")]
+    )
+
+
+def default_finish_grid() -> list[str]:
+    """Every finish × compression parameterization the paper evaluates."""
+    return (
+        [f"uf_sync_{c}" for c in COMPRESS_MODES]
+        + ["shiloach_vishkin", "label_prop", "stergiou"]
+        + [f"liu_tarjan_{code}" for code in sorted(LIU_TARJAN_VARIANTS)]
+    )
+
+
+def enumerate_variants(
+    samplings: Optional[Sequence[SamplingSpec]] = None,
+    finishes: Optional[Sequence[str]] = None,
+) -> list[VariantSpec]:
+    """Materialize the sampling × finish × compression cross-product.
+
+    With the default grids this yields 7 sampling configurations × 22 finish
+    configurations minus the documented incompatibilities (``is_compatible``)
+    = 148 variants — the enumerable slice of the paper's several-hundred
+    variant space (Liu–Tarjan rule mixes outside the valid 16 are excluded
+    by construction).
+    """
+    samplings = default_sampling_grid() if samplings is None else samplings
+    finishes = default_finish_grid() if finishes is None else finishes
+    out = []
+    for s in samplings:
+        for f in finishes:
+            if not is_compatible(s, f):
+                continue
+            # construct directly from the caller's SamplingSpec (a string
+            # round-trip would quietly re-quantize float parameters)
+            finish, lt_opts = _parse_finish_part(f)
+            out.append(VariantSpec(sampling=s, finish=finish, **lt_opts))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Session front-end: one object for static, forest, and streaming paths.
+# ---------------------------------------------------------------------------
+
+SpecLike = Union[str, VariantSpec]
+
+
+class Stream:
+    """Batch-incremental connectivity handle bound to one finish variant.
+
+    Batches are device dispatches with static shapes: reuse one batch size
+    (pad with the dump id ``n``) to avoid recompilation.
+    """
+
+    def __init__(self, n: int, finish_fn, *, variant: str = ""):
+        self.n = n
+        self.variant = variant
+        self._finish = finish_fn
+        self.state = streaming.init_stream(n)
+        self.batches = 0
+        # device-side real-edge counter (pad slots point at the dump id n
+        # and must not count); accumulated lazily — no per-insert host sync
+        self._edges = jnp.int32(0)
+
+    @property
+    def edges_inserted(self) -> int:
+        """Real (non-padding) edges inserted so far (syncs on read)."""
+        return int(self._edges)
+
+    def insert(self, u, v) -> "Stream":
+        """Insert one batch of undirected edges (symmetrized internally)."""
+        u = jnp.asarray(u, jnp.int32)
+        v = jnp.asarray(v, jnp.int32)
+        self.state = streaming.insert_batch_fn(self.state, u, v, self._finish)
+        self.batches += 1
+        self._edges = self._edges + jnp.sum(u < self.n, dtype=jnp.int32)
+        return self
+
+    def query(self, qa, qb) -> jax.Array:
+        """IsConnected for each (qa[i], qb[i]) pair."""
+        return streaming.query_batch(self.state, jnp.asarray(qa, jnp.int32),
+                                     jnp.asarray(qb, jnp.int32))
+
+    def process(self, u, v, qa, qb) -> jax.Array:
+        """Inserts then queries in one dispatch (paper Algorithm 3)."""
+        u = jnp.asarray(u, jnp.int32)
+        v = jnp.asarray(v, jnp.int32)
+        self.state, ans = streaming.process_batch_fn(
+            self.state, u, v, jnp.asarray(qa, jnp.int32),
+            jnp.asarray(qb, jnp.int32), self._finish)
+        self.batches += 1
+        self._edges = self._edges + jnp.sum(u < self.n, dtype=jnp.int32)
+        return ans
+
+    @property
+    def labels(self) -> jax.Array:
+        """Current compressed labeling over real vertices (n,)."""
+        return self.state.P[: self.n]
+
+    def num_components(self) -> int:
+        return int(num_components(self.state.P))
+
+
+class ConnectIt:
+    """One variant, three workloads: static / forest / streaming connectivity.
+
+    >>> ci = ConnectIt("kout_hybrid_k2+uf_sync_full")
+    >>> labels = ci.connectivity(g)
+    >>> ci.stats.edges_finish    # finish-phase work after sampling
+    """
+
+    def __init__(self, spec: SpecLike = "none+uf_sync_naive", *,
+                 compact_pad: int = 8):
+        if isinstance(spec, str):
+            spec = VariantSpec.parse(spec)
+        if not isinstance(spec, VariantSpec):
+            raise TypeError(f"spec must be a VariantSpec or string, "
+                            f"got {type(spec).__name__}")
+        if compact_pad < 1:
+            raise ValueError(f"compact_pad must be >= 1, got {compact_pad}")
+        self.spec = spec
+        self.compact_pad = compact_pad  # finish-edge padding granularity
+        self._sampler = spec.sampling.build()
+        self._finish = spec.build_finish()
+        self._stats: Optional[driver.ConnectivityStats] = None
+
+    def __repr__(self) -> str:
+        return f"ConnectIt({str(self.spec)!r})"
+
+    def connectivity(self, g, *, key: Optional[jax.Array] = None,
+                     fused: bool = False, return_stats: bool = False):
+        """Canonical min-vertex-id connectivity labeling of ``g``.
+
+        ``fused=True`` runs the single-dispatch path (no host compaction) —
+        both paths fill the same ConnectivityStats, available as ``.stats``.
+        """
+        if fused:
+            labels, stats = driver.run_connectivity_fused(
+                g, self._sampler, self._finish, key, variant=str(self.spec))
+        else:
+            labels, stats = driver.run_connectivity(
+                g, self._sampler, self._finish, key, variant=str(self.spec),
+                compact_pad=self.compact_pad)
+        self._stats = stats
+        if return_stats:
+            return labels, stats
+        return labels
+
+    def connected_components(self, g, **kw) -> np.ndarray:
+        """Convenience: host numpy labels."""
+        return np.asarray(self.connectivity(g, **kw))
+
+    def spanning_forest(self, g, *, key: Optional[jax.Array] = None
+                        ) -> np.ndarray:
+        """Spanning forest edges, (k, 2) host array (paper §3.4).
+
+        Valid only for root-based finish methods (the uf_sync family): the
+        forest invariant needs one recorded edge per hooked root — the
+        paper's documented restriction for Algorithm 2.
+        """
+        if self.spec.finish.method != "uf_sync":
+            raise ValueError(
+                f"spanning forest requires a root-based finish (uf_sync "
+                f"family), not {self.spec.finish_str!r} — paper §3.4")
+        return driver.run_spanning_forest(
+            g, self._sampler, key, compress=self.spec.finish.compress,
+            compact_pad=self.compact_pad)
+
+    def stream(self, n: int) -> Stream:
+        """Fresh batch-incremental handle over ``n`` vertices (paper §3.5)."""
+        return Stream(n, self._finish, variant=str(self.spec))
+
+    @property
+    def stats(self) -> Optional[driver.ConnectivityStats]:
+        """ConnectivityStats of the most recent ``connectivity`` call."""
+        return self._stats

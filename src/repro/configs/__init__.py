@@ -1,1 +1,5 @@
+"""Architecture registry. ConnectIt's own workload configs live at this
+level (connectit_cfg & friends); the unrelated seed-era LM configs are
+quarantined under ``legacy/`` (still registry-loadable for the smoke
+harness — see legacy/__init__.py)."""
 from .base import Arch, all_archs, get_arch, load_all  # noqa: F401

@@ -2,8 +2,8 @@
 fine-grained experts (d_expert=1408). Deviation noted in DESIGN.md: the HF
 model's first layer is dense; here all 28 layers are MoE (scan-over-layers
 homogeneity)."""
-from ..models.transformer import TransformerConfig
-from .base import Arch, LM_SHAPES, register
+from ...models.transformer import TransformerConfig
+from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(
     name="deepseek-moe-16b", n_layers=28, d_model=2048, n_heads=16,

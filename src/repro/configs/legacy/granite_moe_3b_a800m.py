@@ -1,7 +1,7 @@
 """granite-moe-3b-a800m [hf:ibm-granite/granite-3.0 family]: 40 routed
 experts top-8, d_expert=512."""
-from ..models.transformer import TransformerConfig
-from .base import Arch, LM_SHAPES, register
+from ...models.transformer import TransformerConfig
+from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(
     name="granite-moe-3b-a800m", n_layers=32, d_model=1536, n_heads=24,

@@ -1,6 +1,6 @@
 """h2o-danube-3-4b [arXiv:2401.16818]: llama+mistral mix with SWA."""
-from ..models.transformer import TransformerConfig
-from .base import Arch, LM_SHAPES, register
+from ...models.transformer import TransformerConfig
+from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(
     name="h2o-danube-3-4b", n_layers=24, d_model=3840, n_heads=32,

@@ -1,6 +1,6 @@
 """qwen3-4b [hf:Qwen/Qwen3-8B family]: GQA + qk-norm."""
-from ..models.transformer import TransformerConfig
-from .base import Arch, LM_SHAPES, register
+from ...models.transformer import TransformerConfig
+from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(
     name="qwen3-4b", n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,

@@ -1,6 +1,6 @@
 """stablelm-3b [hf:stabilityai/stablelm family]: MHA (kv == heads)."""
-from ..models.transformer import TransformerConfig
-from .base import Arch, LM_SHAPES, register
+from ...models.transformer import TransformerConfig
+from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(
     name="stablelm-3b", n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32,

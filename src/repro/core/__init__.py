@@ -1,5 +1,19 @@
-"""ConnectIt core: the paper's contribution as composable JAX modules."""
+"""ConnectIt core: the paper's contribution as composable JAX modules.
+
+The declarative front-end lives in ``repro.api`` (VariantSpec / ConnectIt);
+this package holds the spec-parameterized factories and the thin driver /
+streaming implementations behind it. The flat string-keyed entrypoints
+re-exported here are deprecation shims.
+"""
 from . import distributed, driver, finish, primitives, sampling, streaming  # noqa: F401
-from .driver import connectivity, connectivity_fused, spanning_forest  # noqa: F401
-from .finish import finish_names, get_finish  # noqa: F401
-from .sampling import get_sampler, sampler_names  # noqa: F401
+from .driver import (  # noqa: F401
+    ConnectivityStats,
+    connectivity,
+    connectivity_fused,
+    run_connectivity,
+    run_connectivity_fused,
+    run_spanning_forest,
+    spanning_forest,
+)
+from .finish import finish_names, get_finish, make_finish, method_names  # noqa: F401
+from .sampling import get_sampler, make_sampler, sampler_names, scheme_names  # noqa: F401

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...graphs.containers import Graph
-from ..finish import get_finish
+from ..finish import resolve_finish
 from ..primitives import INT_MAX, full_compress, init_labels, write_min
 
 
@@ -58,7 +58,7 @@ def gs_query_parallel(g: Graph, sims: jax.Array, eps: float, *, mu: int = 3,
     both_core = core_pad[g.senders] & core_pad[g.receivers] & similar
     s = jnp.where(both_core, g.senders, n)
     r = jnp.where(both_core, g.receivers, n)
-    P, _ = get_finish(finish)(init_labels(n), s, r)
+    P, _ = resolve_finish(finish)(init_labels(n), s, r)
     P = full_compress(P)
     # attach border vertices to the min adjacent core cluster
     att = similar & core_pad[g.receivers] & ~core_pad[g.senders]

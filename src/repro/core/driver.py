@@ -1,6 +1,7 @@
 """ConnectIt two-phase driver (paper Algorithm 1 / Algorithm 2).
 
-``connectivity(graph, sample, finish)`` is the host-level orchestrator:
+``run_connectivity(g, sampler_fn, finish_fn, key)`` is the host-level
+orchestrator behind the ``repro.api.ConnectIt`` session object:
 
   1. run the sampling phase (jit) → partial labeling P
   2. identify L_max (most frequent label) and pin it to the virtual minimum
@@ -11,73 +12,198 @@
   4. run the finish phase (jit) on the compacted edges
   5. compress + restore -1 → canonical min-vertex-id labels
 
-``connectivity_fused`` is the fully-jitted single-dispatch variant (no host
-compaction; L_max-internal edges are no-ops under write_min) used by the
-distributed/dry-run paths.
+``run_connectivity_fused`` is the fully-jitted single-dispatch variant (no
+host compaction; L_max-internal edges are no-ops under write_min) used by the
+distributed/dry-run paths. Both paths fill the same ``ConnectivityStats``.
+
+The string-keyed ``connectivity(g, sample=..., finish=...)`` /
+``spanning_forest`` entrypoints remain as thin deprecation shims.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Any, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.containers import Graph, round_up
-from .finish import ForestState, get_finish, uf_sync_forest
+from .finish import resolve_finish, uf_sync_forest
 from .primitives import (
-    canonical_labels,
     full_compress,
     init_labels,
+    min_vertex_labels,
     most_frequent,
-    num_components,
     relabel_lmax,
     restore_lmax,
 )
-from .sampling import get_sampler
+from .sampling import resolve_sampler
 
 
 @dataclasses.dataclass
 class ConnectivityStats:
-    """Paper Figure 2 quantities: sampling coverage X and cost Y."""
+    """Paper Figure 2 quantities, consistent across the compacted and fused
+    execution paths.
 
-    lmax_count: int = 0
-    edges_total: int = 0
-    edges_finish: int = 0
-    finish_rounds: int = 0
+    ``edges_finish`` is always the number of *real* directed edges handed to
+    the finish phase (``edges_total`` when nothing was dropped), and
+    ``edges_finish_padded`` the static dispatch size actually scattered —
+    the seed reported the compacted count only on the sampled path and lost
+    ``finish_rounds`` entirely on the fused path.
+    """
+
+    variant: str = ""          # canonical VariantSpec string ("" for legacy)
+    edges_total: int = 0       # real directed edges in the input graph
+    edges_finish: int = 0      # real directed edges processed by finish
+    edges_finish_padded: int = 0  # static padded finish-phase dispatch size
+    lmax_count: int = 0        # vertices in L_max after sampling (0 = none)
+    finish_rounds: int = 0     # rounds the finish method ran
+    fused: bool = False        # single-dispatch path (no host compaction)
 
 
-@partial(jax.jit, static_argnames=("finish",))
-def _finish_phase(P, senders, receivers, finish: str):
-    P, rounds = get_finish(finish)(P, senders, receivers)
+@partial(jax.jit, static_argnames=("finish_fn",))
+def _finish_phase(P, senders, receivers, finish_fn):
+    P, rounds = finish_fn(P, senders, receivers)
     P = full_compress(P)
-    P = restore_lmax(P)
+    P = min_vertex_labels(restore_lmax(P))
     return P, rounds
 
 
 @jax.jit
 def _prep_sampled(P, senders, receivers):
+    n = P.shape[0] - 1
     P = full_compress(P)
     lmax, cnt = most_frequent(P)
-    keep = ~((P[senders] == lmax) & (P[receivers] == lmax))
+    # drop L_max-internal edges AND the dump-slot padding (senders == n) so
+    # the compacted list — and edges_finish — counts real edges only
+    keep = ~((P[senders] == lmax) & (P[receivers] == lmax)) & (senders < n)
     P = relabel_lmax(P, lmax)
     return P, keep, lmax, cnt
 
 
-def _compact(senders, receivers, keep, n_dump: int):
+def _compact(senders, receivers, keep, n_dump: int, pad_multiple: int = 8):
     keep_np = np.asarray(keep)
     s = np.asarray(senders)[keep_np]
     r = np.asarray(receivers)[keep_np]
     kept = int(s.shape[0])
-    m_pad = max(round_up(kept, 8), 8)
+    m_pad = max(round_up(kept, pad_multiple), pad_multiple)
     s_out = np.full((m_pad,), n_dump, np.int32)
     r_out = np.full((m_pad,), n_dump, np.int32)
     s_out[:kept] = s
     r_out[:kept] = r
     return jnp.asarray(s_out), jnp.asarray(r_out), kept
+
+
+def run_connectivity(
+    g: Graph,
+    sampler_fn: Optional[Callable],
+    finish_fn: Callable,
+    key: Optional[jax.Array] = None,
+    *,
+    variant: str = "",
+    compact_pad: int = 8,
+) -> tuple[jax.Array, ConnectivityStats]:
+    """Two-phase connectivity on resolved callables → (labels, stats).
+
+    ``compact_pad`` sets the padding granularity of the compacted finish-phase
+    edge list — coarser values bucket the dispatch shapes (fewer recompiles
+    across graphs) at the cost of scattering a few more dump-slot edges.
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    stats = ConnectivityStats(variant=variant, edges_total=g.m)
+    if sampler_fn is None:
+        P = init_labels(g.n)
+        senders, receivers = g.senders, g.receivers
+        stats.edges_finish = g.m
+        stats.edges_finish_padded = g.m_pad
+    else:
+        P = sampler_fn(g, key)
+        P, keep, lmax, cnt = _prep_sampled(P, g.senders, g.receivers)
+        senders, receivers, kept = _compact(g.senders, g.receivers, keep, g.n,
+                                            compact_pad)
+        stats.lmax_count = int(cnt)
+        stats.edges_finish = kept
+        stats.edges_finish_padded = int(senders.shape[0])
+    P, rounds = _finish_phase(P, senders, receivers, finish_fn)
+    stats.finish_rounds = int(rounds)
+    return P[: g.n], stats
+
+
+@partial(jax.jit, static_argnames=("finish_fn", "sampled"))
+def _fused_phase(P, senders, receivers, finish_fn, sampled: bool):
+    if sampled:
+        P = full_compress(P)
+        lmax, cnt = most_frequent(P)
+        P = relabel_lmax(P, lmax)
+    else:
+        cnt = jnp.int32(0)
+    P, rounds = finish_fn(P, senders, receivers)
+    P = full_compress(P)
+    P = min_vertex_labels(restore_lmax(P))
+    return P, rounds, cnt
+
+
+def run_connectivity_fused(
+    g: Graph,
+    sampler_fn: Optional[Callable],
+    finish_fn: Callable,
+    key: Optional[jax.Array] = None,
+    *,
+    variant: str = "",
+) -> tuple[jax.Array, ConnectivityStats]:
+    """Single-dispatch connectivity (no host compaction) → (labels, stats)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    stats = ConnectivityStats(variant=variant, edges_total=g.m, fused=True,
+                              edges_finish=g.m, edges_finish_padded=g.m_pad)
+    if sampler_fn is None:
+        P = init_labels(g.n)
+        sampled = False
+    else:
+        P = sampler_fn(g, key)
+        sampled = True
+    P, rounds, cnt = _fused_phase(P, g.senders, g.receivers, finish_fn, sampled)
+    stats.finish_rounds = int(rounds)
+    stats.lmax_count = int(cnt)
+    return P[: g.n], stats
+
+
+def run_spanning_forest(
+    g: Graph,
+    sampler_fn: Optional[Callable],
+    key: Optional[jax.Array] = None,
+    *,
+    compress: str = "full",
+    compact_pad: int = 8,
+) -> np.ndarray:
+    """Spanning forest via root-based finish (paper Algorithm 2). Returns a
+    host-side (k, 2) array of forest edges."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    if sampler_fn is None:
+        P = init_labels(g.n)
+        st, _ = uf_sync_forest(P, g.senders, g.receivers, compress=compress)
+    else:
+        st0 = sampler_fn(g, key, want_forest=True)
+        P, keep, lmax, cnt = _prep_sampled(st0.P, g.senders, g.receivers)
+        senders, receivers, _ = _compact(g.senders, g.receivers, keep, g.n,
+                                         compact_pad)
+        st, _ = uf_sync_forest(P, senders, receivers,
+                               fu=st0.fu, fv=st0.fv, compress=compress)
+    fu = np.asarray(st.fu)
+    fv = np.asarray(st.fv)
+    sel = (fu >= 0) & (fv >= 0)
+    return np.stack([fu[sel], fv[sel]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Legacy string-keyed entrypoints (deprecation shims over the impl above).
+# ---------------------------------------------------------------------------
+
+_DEPRECATION = ("%s with flat string keys is deprecated; build a "
+                "repro.api.VariantSpec and use repro.api.ConnectIt instead")
 
 
 def connectivity(
@@ -88,38 +214,32 @@ def connectivity(
     key: Optional[jax.Array] = None,
     return_stats: bool = False,
 ):
-    """Compute a canonical connectivity labeling (component id = min vertex)."""
-    key = jax.random.PRNGKey(0) if key is None else key
-    stats = ConnectivityStats(edges_total=g.m)
-    if sample is None:
-        P = init_labels(g.n)
-        senders, receivers = g.senders, g.receivers
-        stats.edges_finish = g.m
-    else:
-        P = get_sampler(sample)(g, key)
-        P, keep, lmax, cnt = _prep_sampled(P, g.senders, g.receivers)
-        senders, receivers, kept = _compact(g.senders, g.receivers, keep, g.n)
-        stats.lmax_count = int(cnt)
-        stats.edges_finish = kept
-    P, rounds = _finish_phase(P, senders, receivers, finish)
-    stats.finish_rounds = int(rounds)
-    labels = P[: g.n]
+    """Deprecated: use ``repro.api.ConnectIt(spec).connectivity(g)``."""
+    warnings.warn(_DEPRECATION % "connectivity(g, sample=..., finish=...)",
+                  DeprecationWarning, stacklevel=2)
+    sampler_fn = None if sample is None else resolve_sampler(sample)
+    labels, stats = run_connectivity(
+        g, sampler_fn, resolve_finish(finish), key,
+        variant=f"{sample or 'none'}+{finish}")
     if return_stats:
         return labels, stats
     return labels
 
 
-@partial(jax.jit, static_argnames=("finish", "use_sampling_relabel"))
 def connectivity_fused(P, senders, receivers, finish: str = "uf_sync",
                        use_sampling_relabel: bool = False):
-    """Single-dispatch connectivity on a (possibly pre-sampled) labeling."""
-    if use_sampling_relabel:
-        P = full_compress(P)
-        lmax, _ = most_frequent(P)
-        P = relabel_lmax(P, lmax)
-    P, rounds = get_finish(finish)(P, senders, receivers)
-    P = full_compress(P)
-    P = restore_lmax(P)
+    """Deprecated single-dispatch connectivity on a (pre-sampled) labeling.
+
+    ``run_connectivity_fused`` (or ``ConnectIt(spec).connectivity(g,
+    fused=True)``) is the replacement and also reports ``finish_rounds``/
+    ``lmax_count`` via ConnectivityStats. Note: labels are now min-vertex-id
+    canonical (the representative of each component may differ from the seed's
+    arbitrary-member output).
+    """
+    warnings.warn(_DEPRECATION % "connectivity_fused(..., finish=...)",
+                  DeprecationWarning, stacklevel=2)
+    P, rounds, _ = _fused_phase(P, senders, receivers, resolve_finish(finish),
+                                use_sampling_relabel)
     return P, rounds
 
 
@@ -129,24 +249,15 @@ def spanning_forest(
     sample: Optional[str] = None,
     key: Optional[jax.Array] = None,
 ) -> np.ndarray:
-    """Spanning forest via root-based finish (paper Algorithm 2). Returns a
-    host-side (k, 2) array of forest edges."""
-    key = jax.random.PRNGKey(0) if key is None else key
-    if sample is None:
-        P = init_labels(g.n)
-        st, _ = uf_sync_forest(P, g.senders, g.receivers, compress="full")
-    else:
-        st0 = get_sampler(sample)(g, key, want_forest=True)
-        P, keep, lmax, cnt = _prep_sampled(st0.P, g.senders, g.receivers)
-        senders, receivers, _ = _compact(g.senders, g.receivers, keep, g.n)
-        st, _ = uf_sync_forest(P, senders, receivers,
-                               fu=st0.fu, fv=st0.fv, compress="full")
-    fu = np.asarray(st.fu)
-    fv = np.asarray(st.fv)
-    sel = (fu >= 0) & (fv >= 0)
-    return np.stack([fu[sel], fv[sel]], axis=1)
+    """Deprecated: use ``repro.api.ConnectIt(spec).spanning_forest(g)``."""
+    warnings.warn(_DEPRECATION % "spanning_forest(g, sample=...)",
+                  DeprecationWarning, stacklevel=2)
+    sampler_fn = None if sample is None else resolve_sampler(sample)
+    return run_spanning_forest(g, sampler_fn, key)
 
 
 def connected_components(g: Graph, **kw) -> np.ndarray:
-    """Convenience: numpy canonical labels."""
-    return np.asarray(connectivity(g, **kw))
+    """Convenience: numpy canonical labels (delegates to the legacy shim)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return np.asarray(connectivity(g, **kw))

@@ -10,6 +10,17 @@ COO edge arrays (padded edges point at the dump slot ``n``). All methods are
 label used for L_max skipping, so any of them composes with any sampling
 scheme — the paper's central claim.
 
+The registry maps *method names* to spec-parameterized factories::
+
+    make_finish("uf_sync", compress="full")   -> FinishFn
+    make_finish("liu_tarjan", variant="CRFA") -> FinishFn
+
+rather than one registration per (method, parameter) combination. Factories
+are memoized so equal parameterizations share one callable — this keeps
+``jax.jit`` caches (which key on the callable's identity when it is a static
+argument) stable across calls. The old flat string keys ("uf_sync_full",
+"liu_tarjan_CRFA", ...) survive as a deprecation shim: ``get_finish``.
+
 TPU adaptation (DESIGN.md §2): the asynchronous CAS union-find variants
 (UF-Rem-CAS etc.) become the synchronous ``uf_sync`` family, where the paper's
 find/compression options map onto per-round pointer-jumping aggressiveness:
@@ -24,14 +35,13 @@ are already synchronous (MPC) algorithms and port rule-for-rule.
 
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .primitives import (
-    INT_MAX,
     full_compress,
     hook_and_record,
     init_forest,
@@ -39,26 +49,27 @@ from .primitives import (
     parents_of,
     write_min,
 )
+from .registry import FactoryRegistry, make_legacy_resolver
 
 FinishFn = Callable[..., tuple[jax.Array, jax.Array]]
-_REGISTRY: dict[str, FinishFn] = {}
+
+COMPRESS_MODES = ("naive", "halve", "full")
+
+_REGISTRY = FactoryRegistry("finish method")
+register_method = _REGISTRY.register
 
 
-def register(name: str):
-    def deco(fn):
-        _REGISTRY[name] = fn
-        return fn
-    return deco
+def method_names() -> list[str]:
+    return _REGISTRY.names()
 
 
-def get_finish(name: str) -> FinishFn:
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown finish method {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name]
+def make_finish(method: str, **params) -> FinishFn:
+    """Build (or fetch the memoized) finish callable for a parameterization.
 
-
-def finish_names() -> list[str]:
-    return sorted(_REGISTRY)
+    Cache keys are normalized with the factory's defaults, so e.g.
+    ``make_finish("uf_sync")`` ≡ ``make_finish("uf_sync", compress="naive")``
+    share one callable (stable jit-cache identity)."""
+    return _REGISTRY.make(method, **params)
 
 
 def _loop(body, P, max_rounds: int):
@@ -81,7 +92,6 @@ def _loop(body, P, max_rounds: int):
 # Label propagation (paper B.2.6): frontier-based scatter-min.
 # ---------------------------------------------------------------------------
 
-@register("label_prop")
 def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
     n = P.shape[0] - 1
 
@@ -92,7 +102,7 @@ def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
     def body(st):
         P, frontier, i = st
         act = frontier[senders]
-        cand = jnp.where(act, P[senders], INT_MAX)
+        cand = jnp.where(act, P[senders], jnp.iinfo(P.dtype).max)
         P2 = write_min(P, receivers, cand, act)
         return P2, P2 != P, i + 1
 
@@ -101,11 +111,15 @@ def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
     return P, rounds
 
 
+@register_method("label_prop")
+def make_label_prop() -> FinishFn:
+    return label_prop
+
+
 # ---------------------------------------------------------------------------
 # Shiloach–Vishkin (paper B.2.4): min-hook roots + full compression per round.
 # ---------------------------------------------------------------------------
 
-@register("shiloach_vishkin")
 def shiloach_vishkin(P, senders, receivers, *, max_rounds: int = 1 << 20):
     def body(P):
         pu = P[senders]
@@ -116,6 +130,11 @@ def shiloach_vishkin(P, senders, receivers, *, max_rounds: int = 1 << 20):
         return full_compress(P)
 
     return _loop(body, P, max_rounds)
+
+
+@register_method("shiloach_vishkin")
+def make_shiloach_vishkin() -> FinishFn:
+    return shiloach_vishkin
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +151,12 @@ def _compress(P, how: str):
     raise ValueError(how)
 
 
+@register_method("uf_sync")
 def make_uf_sync(compress: str = "naive") -> FinishFn:
+    if compress not in COMPRESS_MODES:
+        raise ValueError(
+            f"unknown compress mode {compress!r}; have {COMPRESS_MODES}")
+
     def uf_sync(P, senders, receivers, *, max_rounds: int = 1 << 20):
         def body(P):
             pu = P[senders]
@@ -148,18 +172,15 @@ def make_uf_sync(compress: str = "naive") -> FinishFn:
     return uf_sync
 
 
-register("uf_sync_naive")(make_uf_sync("naive"))
-register("uf_sync_halve")(make_uf_sync("halve"))
-register("uf_sync_full")(make_uf_sync("full"))
-_REGISTRY["uf_sync"] = _REGISTRY["uf_sync_naive"]  # paper-fastest analogue
-
-
 # ---------------------------------------------------------------------------
-# Liu–Tarjan rule framework (paper §3.3.2 + Appendix D.4): 16 variants.
+# Liu–Tarjan rule framework (paper §3.3.2 + Appendix D.4): 16 valid variants.
 # connect ∈ {C: Connect, P: ParentConnect, E: ExtendedConnect}
 # root-up ∈ {U: unconditional, R: only roots updated}
 # shortcut ∈ {S: one round, F: to fixpoint}
 # alter    ∈ {A: rewrite edges to parent ids, -: keep}
+# The combinations NOT listed here are the paper's documented-invalid rule
+# mixes (Table 1); ``repro.api.enumerate_variants`` therefore only ever
+# enumerates this set.
 # ---------------------------------------------------------------------------
 
 LIU_TARJAN_VARIANTS: dict[str, tuple[str, bool, str, bool]] = {
@@ -221,7 +242,11 @@ def _lt_connect(P, u, v, connect: str, rootup: bool):
     return P
 
 
-def make_liu_tarjan(variant: str) -> FinishFn:
+@register_method("liu_tarjan")
+def make_liu_tarjan(variant: str = "CRFA") -> FinishFn:
+    if variant not in LIU_TARJAN_VARIANTS:
+        raise ValueError(f"unknown Liu-Tarjan variant {variant!r}; "
+                         f"have {sorted(LIU_TARJAN_VARIANTS)}")
     connect, rootup, shortcut, alter = LIU_TARJAN_VARIANTS[variant]
 
     def liu_tarjan(P, senders, receivers, *, max_rounds: int = 1 << 20):
@@ -252,16 +277,10 @@ def make_liu_tarjan(variant: str) -> FinishFn:
     return liu_tarjan
 
 
-for _v in LIU_TARJAN_VARIANTS:
-    register(f"liu_tarjan_{_v}")(make_liu_tarjan(_v))
-_REGISTRY["liu_tarjan"] = _REGISTRY["liu_tarjan_CRFA"]  # paper-fastest LT variant
-
-
 # ---------------------------------------------------------------------------
 # Stergiou (paper B.2.5): ParentConnect with a two-array (prev/cur) labeling.
 # ---------------------------------------------------------------------------
 
-@register("stergiou")
 def stergiou(P, senders, receivers, *, max_rounds: int = 1 << 20):
     def cond(st):
         _, changed, i = st
@@ -279,6 +298,56 @@ def stergiou(P, senders, receivers, *, max_rounds: int = 1 << 20):
 
     P, _, rounds = jax.lax.while_loop(cond, body, (P, jnp.bool_(True), 0))
     return P, rounds
+
+
+@register_method("stergiou")
+def make_stergiou() -> FinishFn:
+    return stergiou
+
+
+# ---------------------------------------------------------------------------
+# Legacy string-keyed entrypoints (deprecation shims).
+#
+# The seed exposed one registration per (method, parameter) combination;
+# those flat names remain valid through ``get_finish`` (warns) and
+# ``resolve_finish`` (internal, silent — for code paths that accept legacy
+# names on their own deprecated surface and must not double-warn).
+# ---------------------------------------------------------------------------
+
+_LEGACY_FINISH: dict[str, tuple[str, dict]] = {
+    "uf_sync": ("uf_sync", {}),  # paper-fastest analogue (FindNaive)
+    "uf_sync_naive": ("uf_sync", {"compress": "naive"}),
+    "uf_sync_halve": ("uf_sync", {"compress": "halve"}),
+    "uf_sync_full": ("uf_sync", {"compress": "full"}),
+    "shiloach_vishkin": ("shiloach_vishkin", {}),
+    "label_prop": ("label_prop", {}),
+    "stergiou": ("stergiou", {}),
+    "liu_tarjan": ("liu_tarjan", {}),  # paper-fastest LT variant (CRFA)
+}
+_LEGACY_FINISH.update({
+    f"liu_tarjan_{v}": ("liu_tarjan", {"variant": v})
+    for v in LIU_TARJAN_VARIANTS
+})
+
+
+# silent resolver (for code paths that accept legacy names on their own
+# deprecated surface and must not double-warn)
+resolve_finish = make_legacy_resolver(_LEGACY_FINISH, make_finish,
+                                      "finish method")
+
+
+def get_finish(name: str) -> FinishFn:
+    """Deprecated: use ``make_finish(method, **params)`` or ``repro.api``."""
+    warnings.warn(
+        "get_finish(name) with flat string keys is deprecated; use "
+        "make_finish(method, **params) or repro.api.FinishSpec/VariantSpec",
+        DeprecationWarning, stacklevel=2)
+    return resolve_finish(name)
+
+
+def finish_names() -> list[str]:
+    """Legacy flat name list (kept for the string-keyed shim surface)."""
+    return sorted(_LEGACY_FINISH)
 
 
 # ---------------------------------------------------------------------------

@@ -108,10 +108,26 @@ def restore_lmax(P: jax.Array) -> jax.Array:
     return jnp.where(P == -1, rep, P)
 
 
+def min_vertex_labels(P: jax.Array) -> jax.Array:
+    """Relabel every component to its minimum member vertex id.
+
+    A compressed labeling is partition-correct but its representative may be
+    an arbitrary member (e.g. LDD cluster centers, BFS sources). One
+    scatter-min over real vertices + one gather makes it canonical.
+    """
+    n = P.shape[0] - 1
+    ids = jnp.arange(n + 1, dtype=P.dtype)
+    real = (P >= 0) & (ids < n)
+    tgt = jnp.where(real, P, n)
+    reps = jnp.full((n + 1,), n, P.dtype).at[tgt].min(jnp.where(real, ids, n))
+    safe = jnp.minimum(jnp.maximum(P, 0), n)
+    return jnp.where(P >= 0, reps[safe], P).at[n].set(n)
+
+
 @partial(jax.jit, static_argnames=("max_rounds",))
 def canonical_labels(P: jax.Array, max_rounds: int = 64) -> jax.Array:
     P = full_compress(P, max_rounds)
-    return restore_lmax(P)
+    return min_vertex_labels(restore_lmax(P))
 
 
 def hook_and_record(P, idx, vals, mask, eu, ev, fu, fv):

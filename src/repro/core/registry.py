@@ -1,0 +1,66 @@
+"""Shared spec-parameterized factory registry (sampling + finish schemes).
+
+Both ``core.sampling`` and ``core.finish`` expose the same shape: a map from
+scheme/method names to parameterized factories, with memoized instantiation
+so equal parameterizations share one callable — jit caches key on the static
+callable's identity, so this keeps compile caches stable across call sites.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Optional
+
+
+def normalized_params_key(factory: Callable, params: dict) -> tuple:
+    """Fill in factory defaults so equal parameterizations share one cache
+    key (e.g. make("uf_sync") ≡ make("uf_sync", compress="naive"))."""
+    bound = inspect.signature(factory).bind_partial(**params)
+    bound.apply_defaults()
+    return tuple(sorted(bound.arguments.items()))
+
+
+class FactoryRegistry:
+    """name → spec-parameterized factory, with memoized instantiation."""
+
+    def __init__(self, kind: str, wrap: Optional[Callable] = None):
+        self.kind = kind          # for error messages ("finish method", ...)
+        self._wrap = wrap         # post-hook applied once per instance (jit)
+        self._factories: dict[str, Callable] = {}
+        self._instances: dict[tuple, Callable] = {}
+
+    def register(self, name: str):
+        def deco(factory):
+            self._factories[name] = factory
+            return factory
+        return deco
+
+    def names(self) -> list[str]:
+        return sorted(self._factories)
+
+    def factory(self, name: str) -> Callable:
+        if name not in self._factories:
+            raise KeyError(f"unknown {self.kind} {name!r}; have {self.names()}")
+        return self._factories[name]
+
+    def make(self, name: str, **params) -> Callable:
+        key = (name, normalized_params_key(self.factory(name), params))
+        if key not in self._instances:
+            fn = self._factories[name](**dict(key[1]))
+            if self._wrap is not None:
+                fn = self._wrap(fn)
+            self._instances[key] = fn
+        return self._instances[key]
+
+
+def make_legacy_resolver(aliases: dict[str, tuple[str, dict]],
+                         make: Callable, kind: str) -> Callable:
+    """Silent resolver for the flat seed-era string keys → memoized callable."""
+
+    def resolve(name: str):
+        if name not in aliases:
+            raise KeyError(f"unknown {kind} {name!r}; have {sorted(aliases)}")
+        base, params = aliases[name]
+        return make(base, **params)
+
+    return resolve

@@ -1,6 +1,6 @@
 """Parallel batch-incremental connectivity (paper §3.5 / Appendix B.4).
 
-``process_batch`` applies one batch of edge insertions and connectivity
+``process_batch_fn`` applies one batch of edge insertions and connectivity
 queries as a single synchronous dispatch — the TPU-native realization of the
 paper's Type (1)/(2) streaming algorithms (DESIGN.md §2). The labeling array
 is the persistent state; queries are answered against the post-insertion
@@ -11,17 +11,22 @@ queries — our phase split matches the paper's Type (3) phase-concurrency).
 The labeling is kept *fully compressed* between batches so queries are O(1)
 gathers — mirroring the paper's observation that compression work shifts
 latency from queries to inserts.
+
+The ``*_fn`` functions take a resolved finish *callable* (static jit arg);
+they back the ``repro.api.ConnectIt(spec).stream(n)`` handle. The old
+string-keyed ``insert_batch``/``process_batch`` remain as deprecation shims.
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .finish import get_finish
+from .finish import resolve_finish
 from .primitives import full_compress, init_labels
 
 
@@ -33,16 +38,16 @@ def init_stream(n: int, dtype=jnp.int32) -> StreamState:
     return StreamState(init_labels(n, dtype))
 
 
-@partial(jax.jit, static_argnames=("finish",))
-def insert_batch(state: StreamState, batch_u, batch_v,
-                 finish: str = "uf_sync_full") -> StreamState:
+@partial(jax.jit, static_argnames=("finish_fn",))
+def insert_batch_fn(state: StreamState, batch_u, batch_v,
+                    finish_fn: Callable) -> StreamState:
     """Apply a batch of edge insertions. Batches are symmetrized internally
     (min-based finish methods hook along the lower-endpoint direction, so
     both directions must be visible — static graphs carry both by
     construction). Padded slots must point at the dump id n."""
     u = jnp.concatenate([batch_u, batch_v])
     v = jnp.concatenate([batch_v, batch_u])
-    P, _ = get_finish(finish)(state.P, u, v)
+    P, _ = finish_fn(state.P, u, v)
     return StreamState(full_compress(P))
 
 
@@ -52,9 +57,35 @@ def query_batch(state: StreamState, qa, qb) -> jax.Array:
     return state.P[qa] == state.P[qb]
 
 
-@partial(jax.jit, static_argnames=("finish",))
+@partial(jax.jit, static_argnames=("finish_fn",))
+def process_batch_fn(state: StreamState, batch_u, batch_v, qa, qb,
+                     finish_fn: Callable):
+    """Inserts then queries, one dispatch (paper Algorithm 3 ProcessBatch)."""
+    state = insert_batch_fn(state, batch_u, batch_v, finish_fn)
+    return state, query_batch(state, qa, qb)
+
+
+# ---------------------------------------------------------------------------
+# Legacy string-keyed entrypoints (deprecation shims).
+# ---------------------------------------------------------------------------
+
+_DEPRECATION = ("%s with flat string finish keys is deprecated; use "
+                "repro.api.ConnectIt(spec).stream(n) or the *_fn variants "
+                "with a resolved finish callable")
+
+
+def insert_batch(state: StreamState, batch_u, batch_v,
+                 finish: str = "uf_sync_full") -> StreamState:
+    """Deprecated: use ``insert_batch_fn`` / ``repro.api`` stream handles."""
+    warnings.warn(_DEPRECATION % "insert_batch(..., finish=...)",
+                  DeprecationWarning, stacklevel=2)
+    return insert_batch_fn(state, batch_u, batch_v, resolve_finish(finish))
+
+
 def process_batch(state: StreamState, batch_u, batch_v, qa, qb,
                   finish: str = "uf_sync_full"):
-    """Inserts then queries, one dispatch (paper Algorithm 3 ProcessBatch)."""
-    state = insert_batch(state, batch_u, batch_v, finish=finish)
-    return state, query_batch(state, qa, qb)
+    """Deprecated: use ``process_batch_fn`` / ``repro.api`` stream handles."""
+    warnings.warn(_DEPRECATION % "process_batch(..., finish=...)",
+                  DeprecationWarning, stacklevel=2)
+    return process_batch_fn(state, batch_u, batch_v, qa, qb,
+                            resolve_finish(finish))

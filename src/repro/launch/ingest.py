@@ -22,6 +22,7 @@ import numpy as np
 
 from .. import checkpoint as ckpt
 from ..core import streaming
+from ..core.finish import resolve_finish
 from ..data import EdgeStream
 from ..graphs import generators as gen
 
@@ -48,16 +49,17 @@ def run_ingest(n: int, edges: int, batch: int, finish: str = "uf_sync_full",
     b0 = stream.batch_at(start)
     qa = jnp.zeros((nq,), jnp.int32)
     qb = jnp.zeros((nq,), jnp.int32)
-    streaming.process_batch(state, b0["u"], b0["v"], qa, qb,
-                            finish=finish)[0].P.block_until_ready()
+    finish_fn = resolve_finish(finish)
+    streaming.process_batch_fn(state, b0["u"], b0["v"], qa, qb,
+                               finish_fn)[0].P.block_until_ready()
     t0 = time.time()
     total_edges = 0
     for step in range(start, stream.num_batches()):
         b = stream.batch_at(step)
         qa = jax.random.randint(jax.random.PRNGKey(step), (nq,), 0, g.n)
         qb = jax.random.randint(jax.random.PRNGKey(step + 1), (nq,), 0, g.n)
-        state, ans = streaming.process_batch(state, b["u"], b["v"], qa, qb,
-                                             finish=finish)
+        state, ans = streaming.process_batch_fn(state, b["u"], b["v"], qa, qb,
+                                                finish_fn)
         total_edges += batch
         if manager:
             manager.maybe_save((state,), step + 1)

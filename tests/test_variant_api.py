@@ -1,0 +1,240 @@
+"""Unified VariantSpec API: full cross-product vs scipy ground truth, spec
+string round-tripping, session behavior, and legacy-shim deprecation."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import connected_components as scipy_cc
+
+from repro.api import (
+    ConnectIt,
+    FinishSpec,
+    SamplingSpec,
+    VariantSpec,
+    enumerate_variants,
+)
+from repro.graphs import build_graph
+from repro.graphs import generators as gen
+
+SPECS = enumerate_variants()
+
+# All test graphs share (n, m_pad) so jit caches are reused across the sweep.
+N = 20
+PAD = 256
+
+
+@pytest.fixture(autouse=True)
+def _clear_jax_caches():
+    """Shadow conftest's per-test cache clearing: this module sweeps one tiny
+    uniform shape, so keeping the jit cache across items avoids recompiling
+    every sampler for each finish group. Cleared once per module below."""
+    yield
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches_once():
+    yield
+    jax.clear_caches()
+
+
+def _two_clique():
+    half = N // 2
+    edges = [(i, j) for i in range(half) for j in range(i + 1, half)]
+    edges += [(half + i, half + j) for i in range(half)
+              for j in range(i + 1, half)]
+    return np.array(edges, dtype=np.int64)
+
+
+def _graphs():
+    rng = np.random.default_rng(0)
+    return {
+        "random": build_graph(rng.integers(0, N, size=(30, 2)), N,
+                              pad_multiple=PAD),
+        "path": build_graph(
+            np.stack([np.arange(N - 1), np.arange(1, N)], 1), N,
+            pad_multiple=PAD),
+        "star": build_graph(
+            np.stack([np.zeros(N - 1, np.int64), np.arange(1, N)], 1), N,
+            pad_multiple=PAD),
+        "two_clique": build_graph(_two_clique(), N, pad_multiple=PAD),
+    }
+
+
+GRAPHS = _graphs()
+
+
+def scipy_canonical(g) -> np.ndarray:
+    """scipy connected_components relabeled to min-vertex-id canonical form."""
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    mat = csr_matrix((np.ones(len(s)), (s, r)), shape=(g.n, g.n))
+    _, lab = scipy_cc(mat, directed=False)
+    reps = np.full(lab.max() + 1, g.n, dtype=np.int64)
+    np.minimum.at(reps, lab, np.arange(g.n))
+    return reps[lab]
+
+
+# ---------------------------------------------------------------------------
+# The full cross-product, grouped by finish configuration so each test item
+# shares one compiled finish across all sampling schemes and graphs.
+# ---------------------------------------------------------------------------
+
+FINISH_GROUPS = sorted({spec.finish_str for spec in SPECS})
+
+
+@pytest.mark.parametrize("finish_str", FINISH_GROUPS)
+def test_every_variant_matches_scipy(finish_str):
+    specs = [s for s in SPECS if s.finish_str == finish_str]
+    assert specs
+    for gname, g in GRAPHS.items():
+        expect = scipy_canonical(g)
+        for spec in specs:
+            # coarse compact_pad buckets the compacted-edge shapes so the
+            # whole sweep shares a handful of compiled finish dispatches
+            session = ConnectIt(spec, compact_pad=PAD)
+            labels = session.connectivity(g, key=jax.random.PRNGKey(7))
+            np.testing.assert_array_equal(
+                np.asarray(labels), expect,
+                err_msg=f"variant {spec} on graph {gname!r}")
+            stats = session.stats
+            assert stats.variant == str(spec)
+            assert stats.edges_total == g.m
+            assert 0 <= stats.edges_finish <= stats.edges_finish_padded
+
+
+def test_enumeration_is_large_unique_and_excludes_incompatibles():
+    assert len(SPECS) >= 60
+    strs = [str(s) for s in SPECS]
+    assert len(set(strs)) == len(strs)
+    # paper-documented exclusion: stergiou never composes with sampling
+    assert "none+stergiou" in strs
+    assert not any(s.sampling.enabled and s.finish.method == "stergiou"
+                   for s in SPECS)
+
+
+def test_roundtrip_holds_for_all_enumerated_specs():
+    for spec in SPECS:
+        assert VariantSpec.parse(str(spec)) == spec, str(spec)
+
+
+def test_parse_examples_and_canonicalization():
+    spec = VariantSpec.parse("kout_hybrid_k2+uf_sync_full")
+    assert spec.sampling == SamplingSpec("kout", k=2, variant="hybrid")
+    assert spec.finish == FinishSpec("uf_sync", "full")
+    assert str(spec) == "kout_hybrid_k2+uf_sync_full"
+    # legacy flat aliases parse to their canonical spec
+    assert str(VariantSpec.parse("kout+uf_sync")) == \
+        "kout_hybrid_k2+uf_sync_naive"
+    assert str(VariantSpec.parse("liu_tarjan")) == "none+liu_tarjan_CRFA"
+    lt = VariantSpec.parse("ldd_b0.2+liu_tarjan_CRFA")
+    assert (lt.connect, lt.rootup, lt.shortcut, lt.alter) == \
+        ("connect", True, "F", True)
+    assert lt.lt_code == "CRFA"
+    # knobs irrelevant to a scheme are pinned (canonical equality)
+    assert SamplingSpec("bfs", k=9) == SamplingSpec("bfs")
+    assert FinishSpec("label_prop", compress="full") == \
+        FinishSpec("label_prop")
+
+
+def test_invalid_specs_rejected():
+    with pytest.raises(ValueError):
+        SamplingSpec("quantum")
+    with pytest.raises(ValueError):
+        SamplingSpec("kout", variant="nope")
+    with pytest.raises(ValueError):
+        SamplingSpec("bfs", threshold=0.0)
+    with pytest.raises(ValueError):
+        FinishSpec("uf_sync", compress="never")
+    with pytest.raises(ValueError):
+        # CUS is not one of the paper's 16 valid Liu-Tarjan rule mixes
+        VariantSpec(finish=FinishSpec("liu_tarjan"), connect="connect",
+                    rootup=False, shortcut="S", alter=False)
+    # bare liu_tarjan defaults to the paper-fastest CRFA
+    assert VariantSpec(finish=FinishSpec("liu_tarjan")).lt_code == "CRFA"
+    with pytest.raises(ValueError):
+        VariantSpec.parse("kout+uf_sync+extra")
+    with pytest.raises(ValueError):
+        VariantSpec.parse("none+liu_tarjan_ZZZZ")
+
+
+def test_old_entrypoints_work_and_warn():
+    from repro.core import connectivity, spanning_forest, streaming
+    from repro.core.finish import get_finish
+    from repro.core.sampling import get_sampler
+    g = GRAPHS["path"]
+    expect = scipy_canonical(g)
+    with pytest.warns(DeprecationWarning):
+        labels = connectivity(g, sample="kout", finish="uf_sync")
+    np.testing.assert_array_equal(np.asarray(labels), expect)
+    with pytest.warns(DeprecationWarning):
+        forest = spanning_forest(g)
+    assert len(forest) == N - 1
+    with pytest.warns(DeprecationWarning):
+        assert callable(get_finish("uf_sync_full"))
+    with pytest.warns(DeprecationWarning):
+        assert callable(get_sampler("kout_hybrid"))
+    st = streaming.init_stream(N)
+    u = jnp.asarray(np.arange(N - 1), jnp.int32)
+    v = jnp.asarray(np.arange(1, N), jnp.int32)
+    with pytest.warns(DeprecationWarning):
+        st2 = streaming.insert_batch(st, u, v, finish="uf_sync_full")
+    assert int(st2.P[: N].max()) == 0
+    qa = jnp.zeros((4,), jnp.int32)
+    qb = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    with pytest.warns(DeprecationWarning):
+        _, ans = streaming.process_batch(st, u, v, qa, qb)
+    assert bool(np.asarray(ans).all())
+
+
+def test_session_stream_matches_static():
+    g = GRAPHS["random"]
+    expect = scipy_canonical(g)
+    ci = ConnectIt("none+uf_sync_full")
+    h = ci.stream(g.n)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    h.insert(s, r)
+    assert h.num_components() == len(np.unique(expect))
+    assert h.batches == 1 and h.edges_inserted == g.m
+    ans = h.query(np.zeros(g.n, np.int32), np.arange(g.n, dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(ans), expect == expect[0])
+
+
+def test_session_forest_and_restriction():
+    g = gen.planted_components(60, 3, 4.0, seed=4)
+    ci = ConnectIt("kout_hybrid_k2+uf_sync_full")
+    forest = ci.spanning_forest(g, key=jax.random.PRNGKey(2))
+    ncomp = len(np.unique(scipy_canonical(g)))
+    assert len(forest) == g.n - ncomp
+    with pytest.raises(ValueError):
+        ConnectIt("none+shiloach_vishkin").spanning_forest(g)
+
+
+def test_stats_consistent_across_paths():
+    g = gen.rmat(256, 1024, seed=6)
+    key = jax.random.PRNGKey(0)
+    ci = ConnectIt("kout_hybrid_k2+uf_sync_naive")
+    _, compacted = ci.connectivity(g, key=key, return_stats=True)
+    _, fused = ci.connectivity(g, key=key, fused=True, return_stats=True)
+    for stats in (compacted, fused):
+        assert stats.variant == "kout_hybrid_k2+uf_sync_naive"
+        assert stats.edges_total == g.m
+        assert stats.finish_rounds >= 0
+        assert stats.lmax_count > 0
+        assert stats.edges_finish <= stats.edges_finish_padded
+    assert not compacted.fused and fused.fused
+    # compaction must never hand the finish phase more real edges than fused
+    assert compacted.edges_finish <= fused.edges_finish == g.m
+
+
+def test_bfs_sampler_is_jittable():
+    """The accept-gate must not force a host sync (satellite: trace-safety)."""
+    g = GRAPHS["two_clique"]
+    sampler = SamplingSpec("bfs", num_sources=3, threshold=0.1).build()
+    eager = sampler(g, jax.random.PRNGKey(11))
+    jitted = jax.jit(lambda key: sampler(g, key))(jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
