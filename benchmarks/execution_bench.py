@@ -1,0 +1,66 @@
+"""Execution placements head-to-head: the same VariantSpec dispatched under
+every ExecutionSpec placement (single / replicated / sharded, compacted vs
+fused), static connectivity and streaming. On a 1-device host this measures
+the dispatch-layer overhead of each placement; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` it exercises the real
+collectives. ``python -m benchmarks.run --exec [SPEC]`` runs just this suite
+(optionally restricted to one spec)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .common import emit, timeit
+
+QUICK_EXECS = ("single", "single:fused", "replicated(x)", "sharded(x)",
+               "sharded(x):fused")
+FULL_EXECS = QUICK_EXECS + ("replicated(pod,data)", "sharded(pod,data|model)",
+                            "sharded(pod,data|model):fused")
+
+VARIANT = "kout_hybrid_k2+uf_sync_naive"
+
+
+def run(quick: bool = True, execs=None):
+    from repro.api import ConnectIt, ExecutionSpec
+    from repro.graphs import generators as gen
+
+    if execs is None:
+        execs = QUICK_EXECS if quick else FULL_EXECS
+    # fail loudly on a bad spec string (a typo must not turn the CI smoke
+    # step into a silent no-op)
+    execs = [str(ExecutionSpec.parse(e)) for e in execs]
+    n, m = (1 << 13, 1 << 16) if quick else (1 << 16, 1 << 20)
+    g = gen.rmat(n, m, seed=7)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    rows = []
+    for exec_str in execs:
+        session = ConnectIt(VARIANT, exec=exec_str)
+
+        def static_once():
+            return session.connectivity(g, key=jax.random.PRNGKey(1))
+
+        t_static = timeit(static_once, warmup=1, iters=2)
+        stats = session.stats
+
+        def stream_pass():
+            h = session.stream(g.n)
+            B = 1 << 12
+            for i in range(0, g.m, B):
+                h.insert(s[i:i + B], r[i:i + B])
+            return h.labels
+
+        t_stream = timeit(stream_pass, warmup=1, iters=1)
+        rows.append(dict(
+            exec=exec_str, devices=stats.devices, n=g.n, m=g.m,
+            static_s=f"{t_static:.5f}", stream_s=f"{t_stream:.5f}",
+            finish_rounds=stats.finish_rounds,
+            dispatch=stats.edges_finish_padded))
+    emit(rows, ["exec", "devices", "n", "m", "static_s", "stream_s",
+                "finish_rounds", "dispatch"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

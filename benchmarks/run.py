@@ -3,6 +3,8 @@
 ``python -m benchmarks.run``           quick pass (CI-sized)
 ``python -m benchmarks.run --full``    paper-scale pass
 ``python -m benchmarks.run --only streaming_throughput``
+``python -m benchmarks.run --exec``    execution-placement sweep only
+``python -m benchmarks.run --exec "sharded(x)"``   one ExecutionSpec
 
 Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
 from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
@@ -14,8 +16,8 @@ import argparse
 import sys
 import time
 
-from . import (amsf_bench, gather_edges, sampling_quality, scan_bench,
-               static_connectivity, streaming_batchsize,
+from . import (amsf_bench, execution_bench, gather_edges, sampling_quality,
+               scan_bench, static_connectivity, streaming_batchsize,
                streaming_throughput, synthetic_families)
 
 SUITES = {
@@ -27,6 +29,7 @@ SUITES = {
     "amsf": amsf_bench.run,                             # Figure 6
     "scan": scan_bench.run,                             # Figure 7
     "gather_edges": gather_edges.run,                   # Table 8 / C.5.1
+    "execution": execution_bench.run,                   # placements sweep
 }
 
 
@@ -35,15 +38,28 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized pass (the default; explicit flag for CI)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, choices=sorted(SUITES),
+                    metavar="SUITE")
+    ap.add_argument("--exec", nargs="?", const="sweep", default=None,
+                    metavar="SPEC", dest="exec_spec",
+                    help="run the execution-placement suite only; with an "
+                         "argument, restrict it to that ExecutionSpec "
+                         "string (e.g. 'sharded(x):fused')")
     args = ap.parse_args(argv)
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
-    names = [args.only] if args.only else list(SUITES)
     t0 = time.time()
-    for name in names:
-        print(f"\n### {name} " + "#" * max(0, 60 - len(name)))
-        SUITES[name](quick=not args.full)
+    if args.exec_spec is not None:
+        if args.only:
+            ap.error("--exec and --only are mutually exclusive")
+        execs = None if args.exec_spec == "sweep" else (args.exec_spec,)
+        print("\n### execution " + "#" * 51)
+        execution_bench.run(quick=not args.full, execs=execs)
+    else:
+        names = [args.only] if args.only else list(SUITES)
+        for name in names:
+            print(f"\n### {name} " + "#" * max(0, 60 - len(name)))
+            SUITES[name](quick=not args.full)
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
     return 0
 

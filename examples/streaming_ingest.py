@@ -40,6 +40,22 @@ def main():
         print(f"batch {i}: inserted {B} edges, {Q} queries, "
               f"{int(ans.sum())} connected pairs")
 
+    # the same stream under a distributed placement (ExecutionSpec): insert
+    # and query batches shard over the mesh edge axes; on a 1-device host
+    # this runs the same program on a 1-device mesh
+    print("\n== execution-aware stream (exec='sharded(x)') ==")
+    hd = ConnectIt("none+uf_sync_full", exec="sharded(x)").stream(g.n)
+    for i in range(4):
+        bu = s[i * B:(i + 1) * B]
+        bv = r[i * B:(i + 1) * B]
+        qa = jax.random.randint(jax.random.PRNGKey(i), (Q,), 0, g.n)
+        qb = jax.random.randint(jax.random.PRNGKey(i + 9), (Q,), 0, g.n)
+        hd.process(bu, bv, qa, qb)
+    st = hd.stats
+    print(f"exec={st.exec} devices={st.devices} "
+          f"edges/device={st.edges_per_device} "
+          f"batch shapes={st.batch_shapes} rounds={st.finish_rounds}")
+
     # restartable ingest (checkpointed labeling)
     print("\n== checkpointed ingest ==")
     run_ingest(n=1 << 14, edges=1 << 16, batch=1 << 12,

@@ -1,18 +1,21 @@
-"""Unified ``VariantSpec`` API: the paper's variant space as one front-end.
+"""Unified ``VariantSpec`` × ``ExecutionSpec`` API: one declarative front-end.
 
 ConnectIt's central contribution is that *any* sampling scheme composes with
 *any* finish/compression scheme (paper §3, Table 1). This module makes that
 cross-product a first-class, declarative object instead of stringly-typed
-registry keys:
+registry keys — and pairs it with an *execution* spec that says where and
+how the variant dispatches (single device, replicated labels, or sharded
+labels over a named mesh):
 
     spec = VariantSpec.parse("kout_hybrid_k2+uf_sync_full")
-    ci = ConnectIt(spec)
+    ci = ConnectIt(spec, exec="sharded(x)")
     labels = ci.connectivity(g)          # static connectivity
     forest = ci.spanning_forest(g)       # paper §3.4 (root-based finish only)
     h = ci.stream(n)                     # batch-incremental handle (§3.5)
     ci.stats                             # ConnectivityStats of the last run
 
-Spec grammar (canonical strings round-trip: ``VariantSpec.parse(str(s)) == s``):
+Variant grammar (canonical strings round-trip,
+``VariantSpec.parse(str(s)) == s``):
 
     variant  := sampling "+" finish
     sampling := "none"
@@ -25,10 +28,19 @@ Spec grammar (canonical strings round-trip: ``VariantSpec.parse(str(s)) == s``):
               | "liu_tarjan_" LTCODE          # 16 valid rule combinations
     compress := "naive" | "halve" | "full"
 
+Execution grammar (same round-trip discipline; see core/execution.py):
+
+    exec      := placement [ "(" axes ")" ] [ ":" opt ("," opt)* ]
+    placement := "single" | "replicated" | "sharded"
+    axes      := axis ("," axis)* [ "|" label_axis ]     # sharded only
+    opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+
 ``enumerate_variants()`` materializes the paper's sampling × finish ×
 compression cross-product with the paper's documented incompatibilities
-excluded (see its docstring). docs/API.md has the migration table from the
-old flat string keys.
+excluded (see its docstring); every enumerated variant runs under every
+placement. docs/API.md has the grammar reference and the migration tables
+from the old flat string keys and ``make_replicated_*``/``make_sharded_*``
+factories.
 """
 
 from __future__ import annotations
@@ -40,20 +52,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .core import driver, streaming
+from .core import driver
+from .core.execution import (
+    ExecutionSpec,
+    PLACEMENTS,
+    as_execution_spec,
+    make_backend,
+)
 from .core.finish import (
     COMPRESS_MODES,
     LIU_TARJAN_VARIANTS,
     make_finish,
     method_names,
 )
-from .core.primitives import num_components
 from .core.sampling import KOUT_VARIANTS, make_sampler
 
 __all__ = [
-    "SamplingSpec", "FinishSpec", "VariantSpec", "ConnectIt", "Stream",
-    "enumerate_variants", "is_compatible",
-    "KOUT_VARIANTS", "COMPRESS_MODES", "LIU_TARJAN_VARIANTS",
+    "SamplingSpec", "FinishSpec", "VariantSpec", "ExecutionSpec",
+    "ConnectIt", "Stream", "enumerate_variants", "is_compatible",
+    "KOUT_VARIANTS", "COMPRESS_MODES", "LIU_TARJAN_VARIANTS", "PLACEMENTS",
 ]
 
 SAMPLING_SCHEMES = ("none", "kout", "bfs", "ldd")
@@ -417,104 +434,190 @@ def enumerate_variants(
 # ---------------------------------------------------------------------------
 
 SpecLike = Union[str, VariantSpec]
+ExecLike = Union[str, ExecutionSpec]
 
 
 class Stream:
-    """Batch-incremental connectivity handle bound to one finish variant.
+    """Batch-incremental connectivity handle bound to one finish variant and
+    one execution placement (paper §3.5 / Algorithm 3).
 
-    Batches are device dispatches with static shapes: reuse one batch size
-    (pad with the dump id ``n``) to avoid recompilation.
+    Batches are device dispatches with static shapes. Incoming batches are
+    bucketed under the ExecutionSpec pad policy (power-of-two by default) so
+    a ragged final batch reuses an existing compiled shape instead of
+    triggering a fresh jit compile, and are padded with the dump id ``n``.
+    Under a distributed placement, insert and query batches are sharded over
+    the spec's edge axes (labels replicated or sharded per the placement).
     """
 
-    def __init__(self, n: int, finish_fn, *, variant: str = ""):
+    def __init__(self, n: int, finish_fn, *, backend=None, variant: str = ""):
         self.n = n
         self.variant = variant
-        self._finish = finish_fn
-        self.state = streaming.init_stream(n)
+        self._backend = make_backend() if backend is None else backend
+        self._ops = self._backend.stream_ops(n, finish_fn)
+        self.state = self._ops.init()
         self.batches = 0
-        # device-side real-edge counter (pad slots point at the dump id n
-        # and must not count); accumulated lazily — no per-insert host sync
+        self._dispatch_sizes: list[int] = []
+        # device-side counters (pad slots point at the dump id n and must
+        # not count); accumulated lazily — no per-batch host sync
         self._edges = jnp.int32(0)
+        self._edges_dev = jnp.zeros((self._ops.edge_shards,), jnp.int32)
+        self._rounds = jnp.int32(0)
+
+    # -- shape bucketing -----------------------------------------------------
+
+    def _pad_batch(self, u, v):
+        u = jnp.asarray(u, jnp.int32)
+        v = jnp.asarray(v, jnp.int32)
+        k = int(u.shape[0])
+        size = self._ops.batch_size(k)
+        if size != k:
+            u = jnp.pad(u, (0, size - k), constant_values=self.n)
+            v = jnp.pad(v, (0, size - k), constant_values=self.n)
+        return u, v, size
+
+    def _pad_queries(self, qa, qb):
+        qa = jnp.asarray(qa, jnp.int32)
+        qb = jnp.asarray(qb, jnp.int32)
+        k = int(qa.shape[0])
+        size = self._ops.batch_size(k)
+        if size != k:
+            qa = jnp.pad(qa, (0, size - k))
+            qb = jnp.pad(qb, (0, size - k))
+        return qa, qb, k
+
+    def _account(self, u, size: int, rounds) -> None:
+        self.batches += 1
+        self._dispatch_sizes.append(size)
+        real = u < self.n
+        self._edges = self._edges + jnp.sum(real, dtype=jnp.int32)
+        # per-shard directed counts: each edge shard mirrors its own chunk
+        # locally (both directions stay on the shard), hence the factor 2
+        self._edges_dev = self._edges_dev + 2 * jnp.sum(
+            real.reshape(self._ops.edge_shards, -1), axis=1, dtype=jnp.int32)
+        self._rounds = self._rounds + jnp.asarray(rounds, jnp.int32)
+
+    # -- operations ----------------------------------------------------------
+
+    def insert(self, u, v) -> "Stream":
+        """Insert one batch of undirected edges (symmetrized internally)."""
+        u, v, size = self._pad_batch(u, v)
+        self.state, rounds = self._ops.insert(self.state, u, v)
+        self._account(u, size, rounds)
+        return self
+
+    def query(self, qa, qb) -> jax.Array:
+        """IsConnected for each (qa[i], qb[i]) pair."""
+        qa, qb, k = self._pad_queries(qa, qb)
+        return self._ops.query(self.state, qa, qb)[:k]
+
+    def process(self, u, v, qa, qb) -> jax.Array:
+        """Inserts then queries in one dispatch (paper Algorithm 3)."""
+        u, v, size = self._pad_batch(u, v)
+        qa, qb, k = self._pad_queries(qa, qb)
+        self.state, ans, rounds = self._ops.process(self.state, u, v, qa, qb)
+        self._account(u, size, rounds)
+        return ans[:k]
+
+    # -- views ---------------------------------------------------------------
 
     @property
     def edges_inserted(self) -> int:
         """Real (non-padding) edges inserted so far (syncs on read)."""
         return int(self._edges)
 
-    def insert(self, u, v) -> "Stream":
-        """Insert one batch of undirected edges (symmetrized internally)."""
-        u = jnp.asarray(u, jnp.int32)
-        v = jnp.asarray(v, jnp.int32)
-        self.state = streaming.insert_batch_fn(self.state, u, v, self._finish)
-        self.batches += 1
-        self._edges = self._edges + jnp.sum(u < self.n, dtype=jnp.int32)
-        return self
-
-    def query(self, qa, qb) -> jax.Array:
-        """IsConnected for each (qa[i], qb[i]) pair."""
-        return streaming.query_batch(self.state, jnp.asarray(qa, jnp.int32),
-                                     jnp.asarray(qb, jnp.int32))
-
-    def process(self, u, v, qa, qb) -> jax.Array:
-        """Inserts then queries in one dispatch (paper Algorithm 3)."""
-        u = jnp.asarray(u, jnp.int32)
-        v = jnp.asarray(v, jnp.int32)
-        self.state, ans = streaming.process_batch_fn(
-            self.state, u, v, jnp.asarray(qa, jnp.int32),
-            jnp.asarray(qb, jnp.int32), self._finish)
-        self.batches += 1
-        self._edges = self._edges + jnp.sum(u < self.n, dtype=jnp.int32)
-        return ans
-
     @property
     def labels(self) -> jax.Array:
         """Current compressed labeling over real vertices (n,)."""
-        return self.state.P[: self.n]
+        return self._ops.labels(self.state)
 
     def num_components(self) -> int:
-        return int(num_components(self.state.P))
+        return int(self._ops.ncomp(self.state))
+
+    @property
+    def stats(self) -> driver.ConnectivityStats:
+        """Unified ConnectivityStats of the stream so far (syncs on read).
+
+        Field invariants match the connectivity path: batches are
+        symmetrized before dispatch, so the finish phase processes directed
+        entries — ``edges_finish`` is twice ``edges_inserted``,
+        ``edges_per_device`` sums to it, and ``dispatch_sizes`` (padded per
+        edge shard, cumulative over batches) sums to
+        ``edges_finish_padded``. ``batch_shapes`` is the distinct padded
+        batch shapes compiled — under the default pow2 policy its length
+        stays logarithmic in the batch-size spread."""
+        spec = self._backend.spec
+        shards = self._ops.edge_shards
+        padded = 2 * sum(self._dispatch_sizes)
+        stats = driver.ConnectivityStats(
+            variant=self.variant, exec=str(spec), placement=spec.placement,
+            devices=self._backend.devices, fused=spec.fused,
+            edges_total=self.edges_inserted,
+            edges_finish=2 * self.edges_inserted,
+            edges_finish_padded=padded,
+            edges_per_device=tuple(np.asarray(self._edges_dev).tolist()),
+            dispatch_sizes=(padded // shards,) * shards,
+            batch_shapes=tuple(sorted(set(self._dispatch_sizes))),
+            finish_rounds=int(self._rounds))
+        return stats
 
 
 class ConnectIt:
-    """One variant, three workloads: static / forest / streaming connectivity.
+    """One variant × one execution placement, three workloads: static /
+    forest / streaming connectivity.
 
-    >>> ci = ConnectIt("kout_hybrid_k2+uf_sync_full")
+    >>> ci = ConnectIt("kout_hybrid_k2+uf_sync_full", exec="sharded(x)")
     >>> labels = ci.connectivity(g)
-    >>> ci.stats.edges_finish    # finish-phase work after sampling
+    >>> ci.stats.edges_per_device   # finish-phase work per edge shard
+
+    The backend is planned once at construction (mesh resolution, shard_map
+    program builds are memoized per (spec, mesh)); ``.connectivity``,
+    ``.spanning_forest``, and ``.stream`` all dispatch through it. Pass
+    ``mesh=`` to pin an explicit ``jax.sharding.Mesh`` (it must provide the
+    spec's axis names); otherwise the spec's axes are laid out over all
+    available devices.
     """
 
-    def __init__(self, spec: SpecLike = "none+uf_sync_naive", *,
-                 compact_pad: int = 8):
+    def __init__(self, spec: SpecLike = "none+uf_sync_naive",
+                 exec: ExecLike = "single", *, mesh=None,
+                 compact_pad: Optional[int] = None):
         if isinstance(spec, str):
             spec = VariantSpec.parse(spec)
         if not isinstance(spec, VariantSpec):
             raise TypeError(f"spec must be a VariantSpec or string, "
                             f"got {type(spec).__name__}")
-        if compact_pad < 1:
-            raise ValueError(f"compact_pad must be >= 1, got {compact_pad}")
+        exec_spec = as_execution_spec(exec)
+        if compact_pad is not None:
+            # convenience override: fixed-granularity compaction padding
+            if compact_pad < 1:
+                raise ValueError(
+                    f"compact_pad must be >= 1, got {compact_pad}")
+            exec_spec = dataclasses.replace(exec_spec, pad="multiple",
+                                            pad_multiple=compact_pad)
         self.spec = spec
-        self.compact_pad = compact_pad  # finish-edge padding granularity
+        self.exec = exec_spec
+        self._backend = make_backend(exec_spec, mesh=mesh)
         self._sampler = spec.sampling.build()
         self._finish = spec.build_finish()
         self._stats: Optional[driver.ConnectivityStats] = None
 
     def __repr__(self) -> str:
-        return f"ConnectIt({str(self.spec)!r})"
+        if self.exec == ExecutionSpec():
+            return f"ConnectIt({str(self.spec)!r})"
+        return f"ConnectIt({str(self.spec)!r}, exec={str(self.exec)!r})"
 
     def connectivity(self, g, *, key: Optional[jax.Array] = None,
-                     fused: bool = False, return_stats: bool = False):
+                     fused: Optional[bool] = None,
+                     return_stats: bool = False):
         """Canonical min-vertex-id connectivity labeling of ``g``.
 
-        ``fused=True`` runs the single-dispatch path (no host compaction) —
-        both paths fill the same ConnectivityStats, available as ``.stats``.
+        Dispatches through the planned execution backend; every path fills
+        the same ConnectivityStats, available as ``.stats``. ``fused`` (an
+        ExecutionSpec knob, overridable per call on the single placement)
+        selects the single-dispatch path with no host compaction.
         """
-        if fused:
-            labels, stats = driver.run_connectivity_fused(
-                g, self._sampler, self._finish, key, variant=str(self.spec))
-        else:
-            labels, stats = driver.run_connectivity(
-                g, self._sampler, self._finish, key, variant=str(self.spec),
-                compact_pad=self.compact_pad)
+        labels, stats = self._backend.connectivity(
+            g, self._sampler, self._finish, key, variant=str(self.spec),
+            fused=fused)
         self._stats = stats
         if return_stats:
             return labels, stats
@@ -530,19 +633,22 @@ class ConnectIt:
 
         Valid only for root-based finish methods (the uf_sync family): the
         forest invariant needs one recorded edge per hooked root — the
-        paper's documented restriction for Algorithm 2.
+        paper's documented restriction for Algorithm 2. Distributed
+        placements currently run the forest on the single-device driver
+        (edge recording needs cross-shard tie-breaking; see docs/API.md).
         """
         if self.spec.finish.method != "uf_sync":
             raise ValueError(
                 f"spanning forest requires a root-based finish (uf_sync "
                 f"family), not {self.spec.finish_str!r} — paper §3.4")
-        return driver.run_spanning_forest(
-            g, self._sampler, key, compress=self.spec.finish.compress,
-            compact_pad=self.compact_pad)
+        return self._backend.spanning_forest(
+            g, self._sampler, key, compress=self.spec.finish.compress)
 
     def stream(self, n: int) -> Stream:
-        """Fresh batch-incremental handle over ``n`` vertices (paper §3.5)."""
-        return Stream(n, self._finish, variant=str(self.spec))
+        """Fresh batch-incremental handle over ``n`` vertices (paper §3.5),
+        executing under this session's placement."""
+        return Stream(n, self._finish, backend=self._backend,
+                      variant=str(self.spec))
 
     @property
     def stats(self) -> Optional[driver.ConnectivityStats]:

@@ -5,7 +5,16 @@ this package holds the spec-parameterized factories and the thin driver /
 streaming implementations behind it. The flat string-keyed entrypoints
 re-exported here are deprecation shims.
 """
-from . import distributed, driver, finish, primitives, sampling, streaming  # noqa: F401
+from . import (  # noqa: F401
+    distributed,
+    driver,
+    execution,
+    finish,
+    primitives,
+    sampling,
+    streaming,
+)
+from .execution import ExecutionSpec, make_backend  # noqa: F401
 from .driver import (  # noqa: F401
     ConnectivityStats,
     connectivity,

@@ -1,32 +1,294 @@
-"""Multi-pod distributed connectivity (DESIGN.md §5).
+"""Mesh programs for distributed connectivity (DESIGN.md §5).
 
-Two regimes, both shard_map programs over the production mesh:
+Two placements, both shard_map programs over a named mesh, now parameterized
+by a *finish callable* drawn from the ``VariantSpec`` layer (any of the
+paper's finish × compression methods) instead of hardwired pointer-jumping:
 
   * **replicated labels** (n ≤ ~16M): edges sharded over every mesh axis,
-    labels replicated. Per round each shard computes local scatter-min
-    proposals into an (n+1,) buffer which is merged with ``lax.pmin`` over
-    all axes; pointer jumping is local (replicated).
+    labels replicated. Per outer round each shard runs the finish method to
+    a local fixpoint on its edge shard, then the labelings are merged with
+    an elementwise ``lax.pmin`` over all edge axes. Every finish method is
+    min-based and monotone, so the merged labeling is again a valid partial
+    labeling and the outer loop converges to the global fixpoint.
 
-  * **sharded labels** (hyperlink-scale): labels sharded over the "model"
-    axis, edges over ("pod","data"). Per round: all-gather labels along
-    "model" → local proposals → min-reduce. Baseline merges with a full
-    ``pmin``; the optimized variant (§Perf) uses all_to_all + local min,
-    i.e. a min-reduce-scatter, which moves 1/|model| of the bytes.
+  * **sharded labels** (hyperlink-scale): labels sharded over one axis,
+    edges over the remaining axes (or the same axis on a 1-D mesh). Per
+    outer round: all-gather labels along the label axis → local finish →
+    min-merge back to shards. The baseline merge is a full ``pmin`` + slice;
+    the ``reduce_scatter`` variant is all_to_all + local min (a
+    min-reduce-scatter, ~1/|label axis| of the wire bytes).
 
-These are the programs lowered by the connectit dry-run cells.
+The outer loop runs to a global fixpoint by default (``rounds=0``) or for a
+fixed number of rounds (dry-run / throughput programs). Correctness argument
+for the merge: labels only decrease, every value a shard writes is the id of
+a vertex in the same component (or the virtual minimum ``-1``), and the
+merged labeling is stable only when every shard's finish is a no-op — i.e.
+when every edge in the graph is satisfied.
+
+The planning layer that picks meshes, pads dispatches, and exposes these as
+``ConnectIt(spec, exec=...)`` lives in ``repro.core.execution``. The old
+``make_replicated_step`` / ``make_sharded_step`` / ``make_streaming_ingest``
+factories (fixed ``jumps=2`` pointer-jumping, no spec integration) remain
+below as ``DeprecationWarning`` shims.
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
-from typing import Sequence
+from math import prod
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from .primitives import INT_MAX
+from .primitives import full_compress
+
+# Fixpoint-detection cap floor for the outer merge loop (rounds=0). Label
+# information crosses at least one shard boundary per outer round, so the
+# worst case is the edge-shard count; the cap defaults to that count (plus
+# slack) and never below this floor.
+DEFAULT_OUTER_ROUNDS = 256
+
+
+def _fixpoint_cap(mesh: Mesh, edge_axes: Sequence[str],
+                  max_rounds: Optional[int]) -> int:
+    """Default outer-round cap: enough for the min label to cross every edge
+    shard even when it moves one shard boundary per merge round."""
+    if max_rounds is not None:
+        return max_rounds
+    shards = prod(mesh.shape[a] for a in edge_axes)
+    return max(DEFAULT_OUTER_ROUNDS, 2 * shards + 8)
+
+
+def _outer_loop(body, labels, rounds: int, max_rounds: int,
+                changed_fn: Callable = lambda ch: ch):
+    """Run ``body: labels -> labels`` for ``rounds`` fixed iterations, or to
+    fixpoint (``rounds=0``) capped at ``max_rounds``. Returns (labels, k).
+
+    The while condition must be uniform across the mesh: pass a
+    ``changed_fn`` that reduces the local changed flag over the mesh axes
+    when the labels carried are per-shard (the default identity is for
+    merged, device-identical labelings)."""
+    if rounds > 0:
+        out = jax.lax.fori_loop(0, rounds, lambda i, L: body(L), labels)
+        return out, jnp.int32(rounds)
+
+    def cond(st):
+        _, changed, i = st
+        return changed & (i < max_rounds)
+
+    def step(st):
+        L, _, i = st
+        L2 = body(L)
+        return L2, changed_fn(jnp.any(L2 != L)), i + 1
+
+    out, _, k = jax.lax.while_loop(
+        cond, step, (labels, jnp.bool_(True), jnp.int32(0)))
+    return out, k
+
+
+# ---------------------------------------------------------------------------
+# Replicated-label programs (spec-parameterized).
+# ---------------------------------------------------------------------------
+
+def make_replicated_finish(mesh: Mesh, axes: Sequence[str],
+                           finish_fn: Callable, *, rounds: int = 0,
+                           max_rounds: Optional[int] = None,
+                           symmetrize: bool = False):
+    """Distributed finish: edges sharded over ``axes``, labels replicated.
+
+    Returns a jit-able ``(labels, senders, receivers) -> (labels, rounds)``
+    on ``(n + 1,)`` labels and dump-padded COO shards (sentinel ``n``).
+
+    ``symmetrize=True`` mirrors each edge shard locally inside the program
+    (streaming batches carry one direction per edge; min-based hooks need
+    both visible). Local mirroring keeps (u, v) and (v, u) in the same shard
+    — an equally valid edge distribution — and avoids resharding a globally
+    concatenated array."""
+    axes = tuple(axes)
+    espec = P(axes)
+    cap = _fixpoint_cap(mesh, axes, max_rounds)
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(), espec, espec),
+             out_specs=(P(), P()), check_rep=False)
+    def program(labels, s, r):
+        if symmetrize:
+            s, r = (jnp.concatenate([s, r]), jnp.concatenate([r, s]))
+
+        def body(L):
+            L2, _ = finish_fn(L, s, r)
+            return jax.lax.pmin(L2, axes)
+
+        return _outer_loop(body, labels, rounds, cap)
+
+    return program
+
+
+# ---------------------------------------------------------------------------
+# Sharded-label programs (spec-parameterized).
+# ---------------------------------------------------------------------------
+
+def make_sharded_finish(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
+                        finish_fn: Callable, *, reduce_scatter: bool = False,
+                        rounds: int = 0,
+                        max_rounds: Optional[int] = None,
+                        symmetrize: bool = False):
+    """Distributed finish with labels sharded over ``label_axis``.
+
+    The label array length must divide evenly by the label-axis size (pad
+    with self-rooted slots above the dump row; see execution.py). On a 1-D
+    mesh ``edge_axes`` may equal ``(label_axis,)``: edges and labels then
+    shard over the same axis and the merge reduces over it once.
+    ``symmetrize`` mirrors edge shards locally (see make_replicated_finish)."""
+    edge_axes = tuple(edge_axes)
+    extra_axes = tuple(a for a in edge_axes if a != label_axis)
+    merge_axes = tuple(dict.fromkeys(edge_axes + (label_axis,)))
+    nshards = mesh.shape[label_axis]
+    espec = P(edge_axes)
+    lspec = P(label_axis)
+    cap = _fixpoint_cap(mesh, edge_axes, max_rounds)
+
+    # fixpoint detection must be mesh-uniform: the labels carried are
+    # per-shard, so every device reduces its local changed flag over all
+    # mesh axes before the while cond
+    def all_devices_changed(ch):
+        ch = jax.lax.pmax(ch.astype(jnp.int32), tuple(mesh.axis_names))
+        return ch > 0
+
+    @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
+             out_specs=(lspec, P()), check_rep=False)
+    def program(lab_shard, s, r):
+        if symmetrize:
+            s, r = (jnp.concatenate([s, r]), jnp.concatenate([r, s]))
+        shard_len = lab_shard.shape[0]
+        idx = jax.lax.axis_index(label_axis)
+
+        def body(shard):
+            full = jax.lax.all_gather(shard, label_axis, tiled=True)
+            full2, _ = finish_fn(full, s, r)
+            if reduce_scatter:
+                # min-reduce-scatter: all_to_all over label chunks + local
+                # min moves 1/|label| of the bytes of a full all-reduce
+                chunks = full2.reshape(nshards, shard_len)
+                mine = jax.lax.all_to_all(chunks, label_axis, split_axis=0,
+                                          concat_axis=0, tiled=False)
+                mine = jnp.min(mine, axis=0)
+                if extra_axes:
+                    mine = jax.lax.pmin(mine, extra_axes)
+            else:
+                merged = jax.lax.pmin(full2, merge_axes)
+                mine = jax.lax.dynamic_slice_in_dim(
+                    merged, idx * shard_len, shard_len)
+            return jnp.minimum(shard, mine)
+
+        return _outer_loop(body, lab_shard, rounds, cap,
+                           changed_fn=all_devices_changed)
+
+    return program
+
+
+def make_sharded_compress(mesh: Mesh, label_axis: str):
+    """Full pointer-jump compression of a label-sharded array (one gather)."""
+    lspec = P(label_axis)
+
+    @partial(shard_map, mesh=mesh, in_specs=(lspec,), out_specs=lspec,
+             check_rep=False)
+    def compress(lab_shard):
+        shard_len = lab_shard.shape[0]
+        idx = jax.lax.axis_index(label_axis)
+        full = jax.lax.all_gather(lab_shard, label_axis, tiled=True)
+        full = full_compress(full)
+        return jax.lax.dynamic_slice_in_dim(full, idx * shard_len, shard_len)
+
+    return compress
+
+
+# ---------------------------------------------------------------------------
+# Streaming programs (paper §3.5 / Algorithm 3 at mesh scale).
+# ---------------------------------------------------------------------------
+
+class StreamPrograms(NamedTuple):
+    """Mesh programs behind an execution-aware ``repro.api.Stream``."""
+
+    insert: Callable   # (labels, u, v) -> (labels, rounds)
+    query: Callable    # (labels, qa, qb) -> bool[q]
+    process: Callable  # (labels, u, v, qa, qb) -> (labels, ans, rounds)
+
+
+def make_replicated_stream(mesh: Mesh, axes: Sequence[str],
+                           finish_fn: Callable, *, rounds: int = 0,
+                           max_rounds: Optional[int] = None
+                           ) -> StreamPrograms:
+    """Batch insert+query with labels replicated, batches/queries sharded."""
+    axes = tuple(axes)
+    espec = P(axes)
+    run = make_replicated_finish(mesh, axes, finish_fn, rounds=rounds,
+                                 max_rounds=max_rounds, symmetrize=True)
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(), espec, espec),
+             out_specs=espec, check_rep=False)
+    def query(labels, qa, qb):
+        return labels[qa] == labels[qb]
+
+    def insert(labels, u, v):
+        labels, k = run(labels, u, v)
+        # keep the labeling fully compressed between batches (O(1) queries)
+        return full_compress(labels), k
+
+    def process(labels, u, v, qa, qb):
+        labels, k = insert(labels, u, v)
+        return labels, query(labels, qa, qb), k
+
+    return StreamPrograms(insert, query, process)
+
+
+def make_sharded_stream(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
+                        finish_fn: Callable, *, reduce_scatter: bool = False,
+                        rounds: int = 0,
+                        max_rounds: Optional[int] = None
+                        ) -> StreamPrograms:
+    """Batch insert+query with labels sharded over ``label_axis``."""
+    edge_axes = tuple(edge_axes)
+    espec = P(edge_axes)
+    lspec = P(label_axis)
+    run = make_sharded_finish(mesh, edge_axes, label_axis, finish_fn,
+                              reduce_scatter=reduce_scatter, rounds=rounds,
+                              max_rounds=max_rounds, symmetrize=True)
+    compress = make_sharded_compress(mesh, label_axis)
+
+    @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
+             out_specs=espec, check_rep=False)
+    def query(lab_shard, qa, qb):
+        full = jax.lax.all_gather(lab_shard, label_axis, tiled=True)
+        return full[qa] == full[qb]
+
+    def insert(labels, u, v):
+        labels, k = run(labels, u, v)
+        return compress(labels), k
+
+    def process(labels, u, v, qa, qb):
+        labels, k = insert(labels, u, v)
+        return labels, query(labels, qa, qb), k
+
+    return StreamPrograms(insert, query, process)
+
+
+# ---------------------------------------------------------------------------
+# Legacy factories (deprecation shims; pre-ExecutionSpec behavior preserved).
+#
+# These hardwire ``jumps``-round pointer jumping, run a fixed number of
+# rounds, and share no stats with the session layer. New code should build an
+# ``repro.api.ExecutionSpec`` (or use ``repro.core.execution.make_backend``)
+# so the finish/compression comes from the VariantSpec.
+# ---------------------------------------------------------------------------
+
+_DEPRECATION = (
+    "%s is deprecated; declare the placement with repro.api.ExecutionSpec "
+    "(e.g. ConnectIt(spec, exec='replicated(x)')) or build programs via "
+    "repro.core.execution.make_backend — see docs/API.md")
 
 
 def _local_proposals(labels, s, r, big):
@@ -38,9 +300,12 @@ def _local_proposals(labels, s, r, big):
     return buf
 
 
-def make_replicated_step(mesh: Mesh, axes: Sequence[str], *, jumps: int = 2):
-    """One label-propagation round, edges sharded over `axes`, labels
-    replicated. Returns a jit-able fn (labels, senders, receivers) -> labels."""
+def make_replicated_step(mesh: Mesh, axes: Sequence[str], *, jumps: int = 2,
+                         _warn: bool = True):
+    """Deprecated: one fixed pointer-jump round; see make_replicated_finish."""
+    if _warn:
+        warnings.warn(_DEPRECATION % "make_replicated_step",
+                      DeprecationWarning, stacklevel=2)
     axes = tuple(axes)
     espec = P(axes)
 
@@ -60,8 +325,10 @@ def make_replicated_step(mesh: Mesh, axes: Sequence[str], *, jumps: int = 2):
 
 def make_replicated_connectivity(mesh: Mesh, axes: Sequence[str], *,
                                  rounds: int, jumps: int = 2):
-    """Fixed-round distributed connectivity (dry-run / throughput program)."""
-    step = make_replicated_step(mesh, axes, jumps=jumps)
+    """Deprecated: fixed-round replicated connectivity (pre-ExecutionSpec)."""
+    warnings.warn(_DEPRECATION % "make_replicated_connectivity",
+                  DeprecationWarning, stacklevel=2)
+    step = make_replicated_step(mesh, axes, jumps=jumps, _warn=False)
 
     def run(labels, senders, receivers):
         def body(i, labels):
@@ -72,8 +339,12 @@ def make_replicated_connectivity(mesh: Mesh, axes: Sequence[str], *,
 
 
 def make_sharded_step(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
-                      *, jumps: int = 2, use_reduce_scatter: bool = False):
-    """One round with labels sharded over `label_axis` (huge-n regime)."""
+                      *, jumps: int = 2, use_reduce_scatter: bool = False,
+                      _warn: bool = True):
+    """Deprecated: one sharded-label pointer-jump round."""
+    if _warn:
+        warnings.warn(_DEPRECATION % "make_sharded_step",
+                      DeprecationWarning, stacklevel=2)
     edge_axes = tuple(edge_axes)
     espec = P(edge_axes)
     lspec = P(label_axis)
@@ -84,11 +355,9 @@ def make_sharded_step(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
     def step(labels_shard, s, r):
         dtype = labels_shard.dtype
         big = jnp.asarray(jnp.iinfo(dtype).max, dtype)
-        # gather the full labeling for arbitrary-index edge gathers
         labels = jax.lax.all_gather(labels_shard, label_axis, tiled=True)
         prop = _local_proposals(labels, s, r, big)
         if use_reduce_scatter:
-            # min-reduce-scatter = all_to_all over label chunks + local min
             shard_len = labels_shard.shape[0]
             chunks = prop.reshape(nshards, shard_len)
             mine = jax.lax.all_to_all(
@@ -102,7 +371,6 @@ def make_sharded_step(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
             prop_local = jax.lax.dynamic_slice_in_dim(
                 prop, idx * shard_len, shard_len)
         new_shard = jnp.minimum(labels_shard, prop_local)
-        # pointer jumping needs the full array again: one all-gather, k jumps
         full = jax.lax.all_gather(new_shard, label_axis, tiled=True)
         for _ in range(jumps):
             full = jnp.minimum(full, full[full])
@@ -116,8 +384,12 @@ def make_sharded_step(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
 def make_sharded_connectivity(mesh: Mesh, edge_axes: Sequence[str],
                               label_axis: str, *, rounds: int, jumps: int = 2,
                               use_reduce_scatter: bool = False):
+    """Deprecated: fixed-round sharded connectivity (pre-ExecutionSpec)."""
+    warnings.warn(_DEPRECATION % "make_sharded_connectivity",
+                  DeprecationWarning, stacklevel=2)
     step = make_sharded_step(mesh, edge_axes, label_axis, jumps=jumps,
-                             use_reduce_scatter=use_reduce_scatter)
+                             use_reduce_scatter=use_reduce_scatter,
+                             _warn=False)
 
     def run(labels, senders, receivers):
         def body(i, labels):
@@ -128,17 +400,12 @@ def make_sharded_connectivity(mesh: Mesh, edge_axes: Sequence[str],
 
 
 def make_sharded_step_fused(mesh: Mesh, edge_axes: Sequence[str],
-                            label_axis: str, *, jumps: int = 2):
-    """§Perf-optimized sharded-label round (beyond-paper; see EXPERIMENTS.md).
-
-    vs. make_sharded_step baseline:
-      1. ONE all-gather per round: pointer jumping reuses the same gathered
-         array (Jacobi jumps against round-start labels — same fixpoint),
-         instead of a second all-gather after the merge;
-      2. the proposal merge is a min-reduce-scatter built from all_to_all +
-         local min (≈½ the wire bytes of the baseline's full all-reduce),
-         then a pmin of only the 1/|model| shard across the edge axes.
-    """
+                            label_axis: str, *, jumps: int = 2,
+                            _warn: bool = True):
+    """Deprecated: single-gather sharded round (use ExecutionSpec ':fused')."""
+    if _warn:
+        warnings.warn(_DEPRECATION % "make_sharded_step_fused",
+                      DeprecationWarning, stacklevel=2)
     edge_axes = tuple(edge_axes)
     espec = P(edge_axes)
     lspec = P(label_axis)
@@ -150,15 +417,11 @@ def make_sharded_step_fused(mesh: Mesh, edge_axes: Sequence[str],
         dtype = labels_shard.dtype
         big = jnp.asarray(jnp.iinfo(dtype).max, dtype)
         shard_len = labels_shard.shape[0]
-        # single gather per round
         labels = jax.lax.all_gather(labels_shard, label_axis, tiled=True)
         prop = _local_proposals(labels, s, r, big)
-        # fold `jumps` Jacobi pointer jumps into the proposals using the
-        # already-gathered round-start labels (no second all-gather)
         jumped = jnp.minimum(labels, prop)
         for _ in range(jumps):
             jumped = jnp.minimum(jumped, labels[jumped])
-        # min-reduce-scatter over the label axis: all_to_all + local min
         chunks = jumped.reshape(nshards, shard_len)
         mine = jax.lax.all_to_all(chunks, label_axis, split_axis=0,
                                   concat_axis=0, tiled=False)
@@ -172,7 +435,11 @@ def make_sharded_step_fused(mesh: Mesh, edge_axes: Sequence[str],
 def make_sharded_connectivity_fused(mesh: Mesh, edge_axes: Sequence[str],
                                     label_axis: str, *, rounds: int,
                                     jumps: int = 2):
-    step = make_sharded_step_fused(mesh, edge_axes, label_axis, jumps=jumps)
+    """Deprecated: fixed-round fused sharded connectivity."""
+    warnings.warn(_DEPRECATION % "make_sharded_connectivity_fused",
+                  DeprecationWarning, stacklevel=2)
+    step = make_sharded_step_fused(mesh, edge_axes, label_axis, jumps=jumps,
+                                   _warn=False)
 
     def run(labels, senders, receivers):
         def body(i, labels):
@@ -184,11 +451,11 @@ def make_sharded_connectivity_fused(mesh: Mesh, edge_axes: Sequence[str],
 
 def make_streaming_ingest(mesh: Mesh, axes: Sequence[str], *, rounds: int = 4,
                           jumps: int = 2):
-    """Distributed batch-incremental ingest + query (paper §4.4 at pod scale).
-
-    Batch edges sharded over `axes`; labels replicated; queries sharded too.
-    """
-    step = make_replicated_step(mesh, axes, jumps=jumps)
+    """Deprecated: folded into the execution-aware ``repro.api.Stream``
+    (``ConnectIt(spec, exec='replicated(...)').stream(n)``)."""
+    warnings.warn(_DEPRECATION % "make_streaming_ingest",
+                  DeprecationWarning, stacklevel=2)
+    step = make_replicated_step(mesh, axes, jumps=jumps, _warn=False)
     axes = tuple(axes)
     qspec = P(axes)
 

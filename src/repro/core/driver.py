@@ -46,23 +46,30 @@ from .sampling import resolve_sampler
 
 @dataclasses.dataclass
 class ConnectivityStats:
-    """Paper Figure 2 quantities, consistent across the compacted and fused
-    execution paths.
+    """Paper Figure 2 quantities, consistent across every execution path
+    (compacted, fused, replicated, sharded — one stats object for all).
 
     ``edges_finish`` is always the number of *real* directed edges handed to
     the finish phase (``edges_total`` when nothing was dropped), and
-    ``edges_finish_padded`` the static dispatch size actually scattered —
-    the seed reported the compacted count only on the sampled path and lost
-    ``finish_rounds`` entirely on the fused path.
+    ``edges_finish_padded`` the static dispatch size actually scattered.
+    ``edges_per_device``/``dispatch_sizes`` break those down per edge shard
+    (single-device paths report one entry each). ``exec`` is the canonical
+    ``ExecutionSpec`` string of the backend that produced the run.
     """
 
     variant: str = ""          # canonical VariantSpec string ("" for legacy)
+    exec: str = "single"       # canonical ExecutionSpec string
+    placement: str = "single"  # single | replicated | sharded
+    devices: int = 1           # mesh size the dispatch ran on
     edges_total: int = 0       # real directed edges in the input graph
     edges_finish: int = 0      # real directed edges processed by finish
     edges_finish_padded: int = 0  # static padded finish-phase dispatch size
+    edges_per_device: tuple = ()  # real finish edges per edge shard
+    dispatch_sizes: tuple = ()    # padded dispatch size per edge shard
+    batch_shapes: tuple = ()      # streams: distinct compiled batch shapes
     lmax_count: int = 0        # vertices in L_max after sampling (0 = none)
-    finish_rounds: int = 0     # rounds the finish method ran
-    fused: bool = False        # single-dispatch path (no host compaction)
+    finish_rounds: int = 0     # (outer) rounds the finish dispatch ran
+    fused: bool = False        # single: one-dispatch; sharded: rs-merge
 
 
 @partial(jax.jit, static_argnames=("finish_fn",))
@@ -85,12 +92,32 @@ def _prep_sampled(P, senders, receivers):
     return P, keep, lmax, cnt
 
 
-def _compact(senders, receivers, keep, n_dump: int, pad_multiple: int = 8):
+def bucket_size(k: int, *, pad: str = "pow2", pad_multiple: int = 8,
+                shards: int = 1, floor: int = 8) -> int:
+    """Static dispatch size for ``k`` real elements under an ExecutionSpec
+    pad policy — the single definition shared by host compaction here and
+    the mesh/stream dispatch sizing in ``core.execution``.
+
+    ``pow2`` buckets to the next power of two (one compiled shape per
+    doubling — a ragged final batch reuses an earlier bucket instead of
+    triggering a fresh compile); ``multiple`` rounds up to ``pad_multiple``.
+    The result is always a positive multiple of ``shards`` so distributed
+    dispatches split evenly across edge shards."""
+    k = max(int(k), 1)
+    if pad == "pow2":
+        size = max(floor, 1 << (k - 1).bit_length())
+    else:
+        size = max(round_up(k, pad_multiple), pad_multiple)
+    return round_up(size, shards)
+
+
+def _compact(senders, receivers, keep, n_dump: int, pad_multiple: int = 8,
+             pad: str = "multiple"):
     keep_np = np.asarray(keep)
     s = np.asarray(senders)[keep_np]
     r = np.asarray(receivers)[keep_np]
     kept = int(s.shape[0])
-    m_pad = max(round_up(kept, pad_multiple), pad_multiple)
+    m_pad = bucket_size(kept, pad=pad, pad_multiple=pad_multiple)
     s_out = np.full((m_pad,), n_dump, np.int32)
     r_out = np.full((m_pad,), n_dump, np.int32)
     s_out[:kept] = s
@@ -106,12 +133,14 @@ def run_connectivity(
     *,
     variant: str = "",
     compact_pad: int = 8,
+    pad: str = "multiple",
 ) -> tuple[jax.Array, ConnectivityStats]:
     """Two-phase connectivity on resolved callables → (labels, stats).
 
-    ``compact_pad`` sets the padding granularity of the compacted finish-phase
-    edge list — coarser values bucket the dispatch shapes (fewer recompiles
-    across graphs) at the cost of scattering a few more dump-slot edges.
+    ``compact_pad``/``pad`` set the padding policy of the compacted
+    finish-phase edge list — ``pad="multiple"`` rounds up to ``compact_pad``,
+    ``pad="pow2"`` buckets to the next power of two (fewer distinct compiled
+    shapes across graphs, a few more dump-slot scatters).
     """
     key = jax.random.PRNGKey(0) if key is None else key
     stats = ConnectivityStats(variant=variant, edges_total=g.m)
@@ -124,12 +153,14 @@ def run_connectivity(
         P = sampler_fn(g, key)
         P, keep, lmax, cnt = _prep_sampled(P, g.senders, g.receivers)
         senders, receivers, kept = _compact(g.senders, g.receivers, keep, g.n,
-                                            compact_pad)
+                                            compact_pad, pad)
         stats.lmax_count = int(cnt)
         stats.edges_finish = kept
         stats.edges_finish_padded = int(senders.shape[0])
     P, rounds = _finish_phase(P, senders, receivers, finish_fn)
     stats.finish_rounds = int(rounds)
+    stats.edges_per_device = (stats.edges_finish,)
+    stats.dispatch_sizes = (stats.edges_finish_padded,)
     return P[: g.n], stats
 
 
@@ -168,6 +199,8 @@ def run_connectivity_fused(
     P, rounds, cnt = _fused_phase(P, g.senders, g.receivers, finish_fn, sampled)
     stats.finish_rounds = int(rounds)
     stats.lmax_count = int(cnt)
+    stats.edges_per_device = (stats.edges_finish,)
+    stats.dispatch_sizes = (stats.edges_finish_padded,)
     return P[: g.n], stats
 
 
@@ -178,6 +211,7 @@ def run_spanning_forest(
     *,
     compress: str = "full",
     compact_pad: int = 8,
+    pad: str = "multiple",
 ) -> np.ndarray:
     """Spanning forest via root-based finish (paper Algorithm 2). Returns a
     host-side (k, 2) array of forest edges."""
@@ -189,7 +223,7 @@ def run_spanning_forest(
         st0 = sampler_fn(g, key, want_forest=True)
         P, keep, lmax, cnt = _prep_sampled(st0.P, g.senders, g.receivers)
         senders, receivers, _ = _compact(g.senders, g.receivers, keep, g.n,
-                                         compact_pad)
+                                         compact_pad, pad)
         st, _ = uf_sync_forest(P, senders, receivers,
                                fu=st0.fu, fv=st0.fv, compress=compress)
     fu = np.asarray(st.fu)

@@ -1,0 +1,607 @@
+"""ExecutionSpec: one declarative execution surface for connectivity.
+
+``repro.api.VariantSpec`` says *what* to run (sampling × finish ×
+compression); ``ExecutionSpec`` says *where and how* to dispatch it:
+
+    placement := single | replicated | sharded
+    exec      := placement [ "(" axes ")" ] [ ":" opt ("," opt)* ]
+    axes      := axis ("," axis)* [ "|" label_axis ]      # sharded only
+    opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+
+Examples (canonical strings round-trip, ``ExecutionSpec.parse(str(s)) == s``):
+
+    single                     one device, compacted finish dispatch
+    single:fused               one device, single-dispatch (no compaction)
+    single:pad=256             compacted list padded to multiples of 256
+    replicated(pod,data)       edges sharded over pod×data, labels replicated
+    sharded(x)                 1-D mesh: edges AND labels sharded over x
+    sharded(pod,data|model)    edges over pod×data, labels over model
+    sharded(x):fused,rounds=8  min-reduce-scatter merge, 8 fixed rounds
+
+Knob semantics per placement (unused knobs are pinned to their defaults on
+construction, so equality and round-trips are canonical — same discipline as
+``VariantSpec``):
+
+  * ``fused`` — single: one-dispatch path (no host compaction of the
+    finish-phase edge list); sharded: merge labelings with an all_to_all
+    min-reduce-scatter instead of a full pmin (≈1/|label| wire bytes).
+    Pinned False for replicated (its merge is already a single pmin).
+  * ``pad`` — dispatch-shape bucketing for the compacted finish edge list
+    and stream batches: ``pow2`` (default) buckets to the next power of two,
+    ``pad=N`` to multiples of N. Either way distributed dispatches are
+    rounded up to a multiple of the edge-shard count.
+  * ``donate`` — donate the label buffer to the finish dispatch (in-place
+    update on backends that support donation; a no-op warning on CPU).
+    Pinned False for single.
+  * ``rounds`` — fixed outer merge rounds for distributed placements
+    (dry-run / fixed-budget programs); ``0`` runs to a global fixpoint.
+    Pinned 0 for single (finish methods run to their own fixpoint).
+
+Backends are planned once per (spec, mesh) and memoized: the same
+``FactoryRegistry`` machinery that keeps sampler/finish callables stable for
+jit caches (core/registry.py) keeps execution programs stable across
+sessions. ``ConnectIt(spec, exec=...)`` is the front-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..graphs.containers import round_up
+from . import driver, streaming
+from .distributed import (
+    make_replicated_finish,
+    make_replicated_stream,
+    make_sharded_finish,
+    make_sharded_stream,
+)
+from .primitives import (
+    canonical_labels,
+    init_labels,
+    num_components,
+)
+from .registry import FactoryRegistry
+
+__all__ = [
+    "ExecutionSpec", "PLACEMENTS", "make_backend", "plan_mesh",
+    "make_axis_mesh", "bucket_size", "StreamOps",
+]
+
+PLACEMENTS = ("single", "replicated", "sharded")
+PAD_POLICIES = ("pow2", "multiple")
+
+_AXIS_RE = re.compile(r"[a-z][a-z0-9_]*")
+_HEAD_RE = re.compile(r"([a-z_]+)(?:\((.*)\))?")
+
+# pinned defaults per placement (the rest of the fields stay meaningful);
+# single source of truth for canonicalization in __post_init__
+_PINNED = {
+    "single": ("axes", "label_axis", "donate", "rounds"),
+    "replicated": ("label_axis", "fused"),
+    "sharded": (),
+}
+_EXEC_DEFAULTS: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """Declarative execution configuration (placement + dispatch policy)."""
+
+    placement: str = "single"
+    axes: tuple = ()            # mesh axes carrying edges
+    label_axis: str = ""        # sharded: mesh axis carrying labels
+    fused: bool = False
+    pad: str = "pow2"           # dispatch-shape bucketing policy
+    pad_multiple: int = 8       # pad="multiple": granularity
+    donate: bool = False
+    rounds: int = 0             # distributed outer rounds; 0 = fixpoint
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {self.placement!r}; "
+                             f"have {PLACEMENTS}")
+        object.__setattr__(self, "axes", tuple(self.axes))
+        for name in ("pad_multiple", "rounds"):
+            v = getattr(self, name)
+            if int(v) != v:
+                raise ValueError(f"{name} must be an integer, got {v!r}")
+            object.__setattr__(self, name, int(v))
+        if self.pad not in PAD_POLICIES:
+            raise ValueError(f"unknown pad policy {self.pad!r}; have "
+                             f"{PAD_POLICIES} (or pad=<int> in spec strings)")
+        if self.pad_multiple < 1:
+            raise ValueError(f"pad_multiple must be >= 1, "
+                             f"got {self.pad_multiple}")
+        if self.rounds < 0:
+            raise ValueError(f"rounds must be >= 0, got {self.rounds}")
+        if self.placement != "single":
+            axes = self.axes or ("x",)
+            for a in axes:
+                if not _AXIS_RE.fullmatch(a):
+                    raise ValueError(f"bad mesh axis name {a!r}")
+            if len(set(axes)) != len(axes):
+                raise ValueError(f"duplicate mesh axes in {axes}")
+            object.__setattr__(self, "axes", tuple(axes))
+        if self.placement == "sharded":
+            lab = self.label_axis or self.axes[-1]
+            if not _AXIS_RE.fullmatch(lab):
+                raise ValueError(f"bad label axis name {lab!r}")
+            object.__setattr__(self, "label_axis", lab)
+        # canonicalize: pin knobs the placement does not use to their defaults
+        for name in _PINNED[self.placement]:
+            object.__setattr__(self, name, _EXEC_DEFAULTS[name])
+        if self.pad == "pow2":
+            object.__setattr__(self, "pad_multiple",
+                               _EXEC_DEFAULTS["pad_multiple"])
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def mesh_axes(self) -> tuple:
+        """All mesh axis names this placement needs, in mesh order."""
+        if self.placement == "single":
+            return ()
+        if self.placement == "replicated":
+            return self.axes
+        return tuple(dict.fromkeys(self.axes + (self.label_axis,)))
+
+    def __str__(self) -> str:
+        if self.placement == "single":
+            head = "single"
+        elif self.placement == "replicated":
+            head = f"replicated({','.join(self.axes)})"
+        elif self.axes == (self.label_axis,):
+            head = f"sharded({self.label_axis})"
+        else:
+            head = f"sharded({','.join(self.axes)}|{self.label_axis})"
+        opts = []
+        if self.fused:
+            opts.append("fused")
+        if self.pad == "multiple":
+            opts.append(f"pad={self.pad_multiple}")
+        if self.donate:
+            opts.append("donate")
+        if self.rounds:
+            opts.append(f"rounds={self.rounds}")
+        return head + (":" + ",".join(opts) if opts else "")
+
+    @classmethod
+    def parse(cls, text: str) -> "ExecutionSpec":
+        t = text.strip()
+        head, _, optpart = t.partition(":")
+        m = _HEAD_RE.fullmatch(head.strip())
+        if not m:
+            raise ValueError(f"bad execution spec {text!r}")
+        placement, axespart = m.group(1), m.group(2)
+        if placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r} in {text!r}; "
+                             f"have {PLACEMENTS}")
+        kw: dict = {}
+        if axespart is not None:
+            if placement == "single":
+                raise ValueError(
+                    f"placement 'single' takes no mesh axes: {text!r}")
+            if not axespart.strip():
+                raise ValueError(f"empty mesh axis list in {text!r}")
+            epart, bar, lpart = axespart.partition("|")
+            names = tuple(a.strip() for a in epart.split(","))
+            if bar:
+                if placement != "sharded":
+                    raise ValueError(
+                        f"'|label_axis' is only valid for sharded: {text!r}")
+                kw["axes"] = names
+                kw["label_axis"] = lpart.strip()
+            elif placement == "sharded":
+                # without '|': last axis carries labels; a 1-D mesh shards
+                # edges and labels over the same axis
+                kw["label_axis"] = names[-1]
+                kw["axes"] = names if len(names) == 1 else names[:-1]
+            else:
+                kw["axes"] = names
+        for opt in filter(None, (o.strip() for o in optpart.split(","))):
+            key, eq, val = opt.partition("=")
+            if key == "fused" and not eq:
+                kw["fused"] = True
+            elif key == "donate" and not eq:
+                kw["donate"] = True
+            elif key == "rounds" and eq:
+                kw["rounds"] = int(val)
+            elif key == "pad" and eq:
+                if val == "pow2":
+                    kw["pad"] = "pow2"
+                else:
+                    kw["pad"] = "multiple"
+                    kw["pad_multiple"] = int(val)
+            else:
+                raise ValueError(f"bad execution option {opt!r} in {text!r}")
+        return cls(placement=placement, **kw)
+
+
+_EXEC_DEFAULTS.update({
+    f.name: f.default for f in dataclasses.fields(ExecutionSpec)
+    if f.name != "placement"
+})
+
+def as_execution_spec(exec) -> ExecutionSpec:  # noqa: A002 - mirrors the API
+    if isinstance(exec, str):
+        return ExecutionSpec.parse(exec)
+    if isinstance(exec, ExecutionSpec):
+        return exec
+    raise TypeError(f"exec must be an ExecutionSpec or string, "
+                    f"got {type(exec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Mesh planning.
+# ---------------------------------------------------------------------------
+
+def _balanced_factors(ndev: int, naxes: int) -> tuple:
+    """Split ``ndev`` into ``naxes`` integer factors, as balanced as the
+    prime factorization allows (8, 3 → (2, 2, 2); 12, 2 → (4, 3))."""
+    primes = []
+    d, k = 2, ndev
+    while d * d <= k:
+        while k % d == 0:
+            primes.append(d)
+            k //= d
+        d += 1
+    if k > 1:
+        primes.append(k)
+    sizes = [1] * naxes
+    for p in sorted(primes, reverse=True):
+        sizes[int(np.argmin(sizes))] *= p
+    return tuple(sorted(sizes, reverse=True))
+
+
+def make_axis_mesh(axis_names: Sequence[str],
+                   devices: Optional[Sequence] = None) -> Mesh:
+    """Build a mesh over ``axis_names`` from the available devices, with the
+    device count factored as evenly as possible across the axes. Works on
+    every jax version we support (no AxisType dependency)."""
+    axis_names = tuple(axis_names)
+    devices = list(jax.devices()) if devices is None else list(devices)
+    sizes = _balanced_factors(len(devices), len(axis_names))
+    return Mesh(np.asarray(devices).reshape(sizes), axis_names)
+
+
+def plan_mesh(spec: ExecutionSpec, mesh: Optional[Mesh] = None
+              ) -> Optional[Mesh]:
+    """Resolve the device mesh for a spec: validate a user-provided mesh or
+    build one over all available devices."""
+    names = spec.mesh_axes
+    if not names:
+        return None
+    if mesh is not None:
+        missing = [a for a in names if a not in mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} do not provide {missing} "
+                f"required by {str(spec)!r}")
+        return mesh
+    return make_axis_mesh(names)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-shape bucketing (pad policy).
+# ---------------------------------------------------------------------------
+
+bucket_size = driver.bucket_size  # one pad-policy definition (driver.py)
+
+
+def _pad_edges_np(s: np.ndarray, r: np.ndarray, dump: int, size: int):
+    out_s = np.full((size,), dump, np.int32)
+    out_r = np.full((size,), dump, np.int32)
+    out_s[: s.shape[0]] = s
+    out_r[: r.shape[0]] = r
+    return jnp.asarray(out_s), jnp.asarray(out_r)
+
+
+def _per_chunk_counts(k: int, size: int, shards: int) -> tuple:
+    """Real-element count per contiguous shard chunk of a padded dispatch
+    whose first ``k`` slots are real (padding is always a suffix)."""
+    per = size // shards
+    return tuple(max(min((i + 1) * per, k) - i * per, 0)
+                 for i in range(shards))
+
+
+# ---------------------------------------------------------------------------
+# Stream ops: the backend-facing surface behind ``repro.api.Stream``.
+# ---------------------------------------------------------------------------
+
+class StreamOps(NamedTuple):
+    """Planned streaming programs for one (ExecutionSpec, finish) pair."""
+
+    init: Callable       # () -> state
+    insert: Callable     # (state, u, v) -> (state, rounds)
+    process: Callable    # (state, u, v, qa, qb) -> (state, ans, rounds)
+    query: Callable      # (state, qa, qb) -> ans
+    labels: Callable     # (state) -> (n,) labels
+    ncomp: Callable      # (state) -> component count (device scalar)
+    edge_shards: int     # devices a batch dispatch splits across
+    batch_size: Callable  # (k) -> padded dispatch size under the pad policy
+
+
+# ---------------------------------------------------------------------------
+# Backends.
+# ---------------------------------------------------------------------------
+
+class _Backend:
+    """Shared planning state: one backend per (ExecutionSpec, mesh)."""
+
+    def __init__(self, spec: ExecutionSpec, mesh: Optional[Mesh] = None):
+        self.spec = spec
+        self.mesh = plan_mesh(spec, mesh)
+        self._programs: dict = {}
+
+    @property
+    def devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.size
+
+    @property
+    def edge_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.spec.axes]))
+
+    def _bucket(self, k: int) -> int:
+        return bucket_size(k, pad=self.spec.pad,
+                           pad_multiple=self.spec.pad_multiple,
+                           shards=self.edge_shards)
+
+    def _base_stats(self, variant: str) -> driver.ConnectivityStats:
+        return driver.ConnectivityStats(
+            variant=variant, exec=str(self.spec),
+            placement=self.spec.placement, devices=self.devices,
+            fused=self.spec.fused)
+
+
+class SingleBackend(_Backend):
+    """One-device dispatch: the two-phase driver (compacted or fused)."""
+
+    placement = "single"
+
+    def connectivity(self, g, sampler_fn, finish_fn, key=None, *,
+                     variant: str = "", fused: Optional[bool] = None):
+        fused = self.spec.fused if fused is None else fused
+        if fused:
+            labels, stats = driver.run_connectivity_fused(
+                g, sampler_fn, finish_fn, key, variant=variant)
+        else:
+            labels, stats = driver.run_connectivity(
+                g, sampler_fn, finish_fn, key, variant=variant,
+                compact_pad=self.spec.pad_multiple, pad=self.spec.pad)
+        # report the spec that actually ran: a per-call fused override must
+        # show up in stats.exec, not just stats.fused
+        stats.exec = str(dataclasses.replace(self.spec, fused=fused))
+        stats.placement = "single"
+        stats.devices = 1
+        return labels, stats
+
+    def spanning_forest(self, g, sampler_fn, key=None, *,
+                        compress: str = "full"):
+        return driver.run_spanning_forest(
+            g, sampler_fn, key, compress=compress,
+            compact_pad=self.spec.pad_multiple, pad=self.spec.pad)
+
+    def stream_ops(self, n: int, finish_fn) -> StreamOps:
+        def insert(state, u, v):
+            return streaming.insert_batch_rounds_fn(state, u, v, finish_fn)
+
+        def process(state, u, v, qa, qb):
+            return streaming.process_batch_rounds_fn(state, u, v, qa, qb,
+                                                     finish_fn)
+
+        return StreamOps(
+            init=lambda: streaming.init_stream(n),
+            insert=insert,
+            process=process,
+            query=streaming.query_batch,
+            labels=lambda state: state.P[:n],
+            ncomp=lambda state: num_components(state.P),
+            edge_shards=1,
+            batch_size=self._bucket,
+        )
+
+
+class _MeshBackend(_Backend):
+    """Shared distributed machinery: edge dispatch prep + canonicalization."""
+
+    def _finish_program(self, finish_fn) -> Callable:
+        key = ("finish", finish_fn)
+        if key not in self._programs:
+            prog = self._build_finish(finish_fn)
+            donate = (0,) if self.spec.donate else ()
+            self._programs[key] = jax.jit(prog, donate_argnums=donate)
+        return self._programs[key]
+
+    def finish_program(self, finish_fn) -> Callable:
+        """Raw (labels, senders, receivers) -> (labels, rounds) mesh program
+        (for dry-run lowering; ``connectivity`` is the session path)."""
+        return self._finish_program(finish_fn)
+
+    def _prep_edges(self, g, sampler_fn, key, stats):
+        """Sampling phase + host compaction + shard-even padding.
+
+        Without sampling there is nothing to compact, so the graph's
+        device-resident COO arrays are resized on device (pad slots carry
+        the dump id ``n`` by construction) — no device→host round-trip of
+        the edge list in the very regime the mesh placements target."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        if sampler_fn is None:
+            P0 = init_labels(g.n)
+            kept = g.m
+            size = self._bucket(kept)
+            senders, receivers = g.senders, g.receivers
+            if size > g.m_pad:
+                tail = jnp.full((size - g.m_pad,), g.n, senders.dtype)
+                senders = jnp.concatenate([senders, tail])
+                receivers = jnp.concatenate([receivers, tail])
+            elif size < g.m_pad:  # bucket >= m, so only dump pad is dropped
+                senders = senders[:size]
+                receivers = receivers[:size]
+        else:
+            P0 = sampler_fn(g, key)
+            P0, keep, _, cnt = driver._prep_sampled(P0, g.senders, g.receivers)
+            keep = np.asarray(keep)
+            s = np.asarray(g.senders)[keep]
+            r = np.asarray(g.receivers)[keep]
+            stats.lmax_count = int(cnt)
+            kept = int(s.shape[0])
+            size = self._bucket(kept)
+            senders, receivers = _pad_edges_np(s, r, g.n, size)
+        stats.edges_finish = kept
+        stats.edges_finish_padded = size
+        shards = self.edge_shards
+        stats.edges_per_device = _per_chunk_counts(kept, size, shards)
+        stats.dispatch_sizes = (size // shards,) * shards
+        return P0, senders, receivers
+
+    def connectivity(self, g, sampler_fn, finish_fn, key=None, *,
+                     variant: str = "", fused: Optional[bool] = None):
+        if fused is not None and fused != self.spec.fused:
+            if self.spec.placement == "replicated":
+                raise ValueError(
+                    "the replicated placement has no fused variant (its "
+                    "merge is already a single pmin); drop the fused "
+                    "override or use a sharded placement")
+            want = dataclasses.replace(self.spec, fused=fused)
+            raise ValueError(
+                "fused is part of the ExecutionSpec for distributed "
+                f"placements — build the session with exec={str(want)!r} "
+                "instead of overriding per call")
+        stats = self._base_stats(variant)
+        stats.edges_total = g.m
+        P0, senders, receivers = self._prep_edges(g, sampler_fn, key, stats)
+        program = self._finish_program(finish_fn)
+        labels, rounds = program(self._place_labels(P0), senders, receivers)
+        stats.finish_rounds = int(rounds)
+        labels = canonical_labels(labels[: g.n + 1])
+        return labels[: g.n], stats
+
+    def spanning_forest(self, g, sampler_fn, key=None, *,
+                        compress: str = "full"):
+        # Forest-edge recording needs tie-breaking across shards (one edge
+        # per hooked root, paper §3.4); the mesh variant is future work, so
+        # the forest path runs the single-device driver (documented in
+        # docs/API.md).
+        return driver.run_spanning_forest(
+            g, sampler_fn, key, compress=compress,
+            compact_pad=self.spec.pad_multiple, pad=self.spec.pad)
+
+    def _stream_programs(self, n: int, finish_fn):
+        key = ("stream", n, finish_fn)
+        if key not in self._programs:
+            progs = self._build_stream(n, finish_fn)
+            donate = (0,) if self.spec.donate else ()
+            self._programs[key] = (
+                jax.jit(progs.insert, donate_argnums=donate),
+                jax.jit(progs.process, donate_argnums=donate),
+                jax.jit(progs.query),
+            )
+        return self._programs[key]
+
+    def stream_ops(self, n: int, finish_fn) -> StreamOps:
+        insert, process, query = self._stream_programs(n, finish_fn)
+
+        return StreamOps(
+            init=lambda: self._init_state(n),
+            insert=insert,
+            process=process,
+            query=query,
+            labels=lambda state: state[:n],
+            ncomp=lambda state: num_components(state[: n + 1]),
+            edge_shards=self.edge_shards,
+            batch_size=self._bucket,
+        )
+
+
+class ReplicatedBackend(_MeshBackend):
+    """Edges sharded over every spec axis, labels replicated per device."""
+
+    placement = "replicated"
+
+    def _build_finish(self, finish_fn):
+        return make_replicated_finish(self.mesh, self.spec.axes, finish_fn,
+                                      rounds=self.spec.rounds)
+
+    def _build_stream(self, n, finish_fn):
+        return make_replicated_stream(self.mesh, self.spec.axes, finish_fn,
+                                      rounds=self.spec.rounds)
+
+    def _place_labels(self, P0):
+        return jax.device_put(P0, NamedSharding(self.mesh, P()))
+
+    def _init_state(self, n):
+        return self._place_labels(init_labels(n))
+
+
+class ShardedBackend(_MeshBackend):
+    """Labels sharded over ``label_axis``; the huge-n regime."""
+
+    placement = "sharded"
+
+    @property
+    def label_shards(self) -> int:
+        return self.mesh.shape[self.spec.label_axis]
+
+    def _build_finish(self, finish_fn):
+        return make_sharded_finish(
+            self.mesh, self.spec.axes, self.spec.label_axis, finish_fn,
+            reduce_scatter=self.spec.fused, rounds=self.spec.rounds)
+
+    def _build_stream(self, n, finish_fn):
+        return make_sharded_stream(
+            self.mesh, self.spec.axes, self.spec.label_axis, finish_fn,
+            reduce_scatter=self.spec.fused, rounds=self.spec.rounds)
+
+    def _place_labels(self, P0):
+        # pad (n + 1,) to divide the label axis; extra slots are self-rooted
+        # ids above the dump row, so they are fixed points of every finish
+        n1 = P0.shape[0]
+        L = round_up(n1, self.label_shards)
+        if L != n1:
+            tail = jnp.arange(n1, L, dtype=P0.dtype)
+            P0 = jnp.concatenate([P0, tail])
+        sharding = NamedSharding(self.mesh, P(self.spec.label_axis))
+        return jax.device_put(P0, sharding)
+
+    def _init_state(self, n):
+        return self._place_labels(init_labels(n))
+
+
+# ---------------------------------------------------------------------------
+# Backend registry (memoized planning, same machinery as sampler/finish).
+# ---------------------------------------------------------------------------
+
+_BACKENDS = FactoryRegistry("execution backend")
+
+
+@_BACKENDS.register("single")
+def _make_single(spec: ExecutionSpec = ExecutionSpec(), mesh=None):
+    return SingleBackend(spec, mesh)
+
+
+@_BACKENDS.register("replicated")
+def _make_replicated(spec: ExecutionSpec = None, mesh=None):
+    return ReplicatedBackend(spec, mesh)
+
+
+@_BACKENDS.register("sharded")
+def _make_sharded(spec: ExecutionSpec = None, mesh=None):
+    return ShardedBackend(spec, mesh)
+
+
+def make_backend(exec="single", mesh: Optional[Mesh] = None):
+    """Plan (or fetch the memoized) execution backend for a spec.
+
+    Backends are memoized per (placement, spec, mesh) so equal
+    parameterizations share shard_map programs and jit caches."""
+    spec = as_execution_spec(exec)
+    return _BACKENDS.make(spec.placement, spec=spec, mesh=mesh)

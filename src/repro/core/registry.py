@@ -8,14 +8,23 @@ callable's identity, so this keeps compile caches stable across call sites.
 
 from __future__ import annotations
 
+import functools
 import inspect
 from typing import Callable, Optional
+
+
+@functools.lru_cache(maxsize=None)
+def _signature(factory: Callable) -> inspect.Signature:
+    # signature resolution walks wrappers and builds Parameter objects; the
+    # registries normalize params on every make() call (ConnectIt sessions
+    # resolve their backend through here), so cache per factory
+    return inspect.signature(factory)
 
 
 def normalized_params_key(factory: Callable, params: dict) -> tuple:
     """Fill in factory defaults so equal parameterizations share one cache
     key (e.g. make("uf_sync") ≡ make("uf_sync", compress="naive"))."""
-    bound = inspect.signature(factory).bind_partial(**params)
+    bound = _signature(factory).bind_partial(**params)
     bound.apply_defaults()
     return tuple(sorted(bound.arguments.items()))
 

@@ -65,6 +65,27 @@ def process_batch_fn(state: StreamState, batch_u, batch_v, qa, qb,
     return state, query_batch(state, qa, qb)
 
 
+# Rounds-reporting variants: same dispatches, but the finish round count is
+# returned (lazily, as a device scalar) so the execution-aware
+# ``repro.api.Stream`` can fill ConnectivityStats without a host sync per
+# batch. Kept separate so the established *_fn return shapes stay stable.
+
+@partial(jax.jit, static_argnames=("finish_fn",))
+def insert_batch_rounds_fn(state: StreamState, batch_u, batch_v,
+                           finish_fn: Callable):
+    u = jnp.concatenate([batch_u, batch_v])
+    v = jnp.concatenate([batch_v, batch_u])
+    P, rounds = finish_fn(state.P, u, v)
+    return StreamState(full_compress(P)), rounds
+
+
+@partial(jax.jit, static_argnames=("finish_fn",))
+def process_batch_rounds_fn(state: StreamState, batch_u, batch_v, qa, qb,
+                            finish_fn: Callable):
+    state, rounds = insert_batch_rounds_fn(state, batch_u, batch_v, finish_fn)
+    return state, query_batch(state, qa, qb), rounds
+
+
 # ---------------------------------------------------------------------------
 # Legacy string-keyed entrypoints (deprecation shims).
 # ---------------------------------------------------------------------------

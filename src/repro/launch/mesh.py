@@ -15,20 +15,30 @@ clusters (not exercisable on one CPU host):
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and on older
+    releases ``jax.sharding.AxisType`` itself) does not exist everywhere, so
+    fall back to a plain device-array ``Mesh`` when it is missing."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    ndev = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

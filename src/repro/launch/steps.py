@@ -19,7 +19,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import optim
 from ..configs.base import Arch
-from ..core import distributed as cdist
+from ..core import execution as cexec
+from ..core.finish import make_finish
 from ..graphs.containers import round_up
 from ..models import dlrm as dlrm_mod
 from ..models import gnn as gnn_mod
@@ -406,48 +407,65 @@ def _dlrm_cell(arch: Arch, shape_name: str, mesh) -> Cell:
 
 
 # ---------------------------------------------------------------------------
-# ConnectIt production cells (the paper's own workload on the mesh)
+# ConnectIt production cells (the paper's own workload on the mesh).
+#
+# Cells are declared through the ExecutionSpec layer: the shape dict's
+# ``labels``/``variant`` keys translate to a placement spec, the finish
+# method comes from the arch's VariantSpec (``ConnectItConfig.finish``) —
+# the same spec-parameterized programs the ``repro.api`` session dispatches.
+# Labels are ``(n + 1,)`` (dump-row convention, padded to divide the label
+# axis for sharded placements).
 # ---------------------------------------------------------------------------
+
+def _connectit_exec_spec(spec: dict, mesh) -> cexec.ExecutionSpec:
+    rounds = spec.get("rounds", 8)
+    if spec.get("labels", "replicated") == "replicated" or \
+            spec["kind"] == "ingest":
+        return cexec.ExecutionSpec("replicated", axes=all_axes(mesh),
+                                   rounds=rounds)
+    return cexec.ExecutionSpec(
+        "sharded", axes=data_axes(mesh), label_axis="model", rounds=rounds,
+        fused=(spec.get("variant") == "fused"
+               or spec.get("use_reduce_scatter", False)))
+
+
+def _connectit_finish(arch: Arch):
+    return make_finish(getattr(arch.model, "finish", "uf_sync"))
+
 
 def _connectit_cell(arch: Arch, shape_name: str, mesh) -> Cell:
     spec = arch.shapes[shape_name]
     n, rounds = spec["n"], spec.get("rounds", 8)
-    labels = sds((n,), jnp.int32)
+    exec_spec = _connectit_exec_spec(spec, mesh)
+    backend = cexec.make_backend(exec_spec, mesh=mesh)
+    finish_fn = _connectit_finish(arch)
     kind = spec["kind"]
 
+    if exec_spec.placement == "sharded":
+        n1 = round_up(n + 1, mesh.shape["model"])
+        lshard = NamedSharding(mesh, P("model"))
+    else:
+        n1 = n + 1
+        lshard = NamedSharding(mesh, P())
+    labels = sds((n1,), jnp.int32)
+    eshard = NamedSharding(mesh, P(exec_spec.axes))
+
     if kind == "static":
-        m = spec["m"]
+        m = round_up(spec["m"], backend.edge_shards)
         s_spec = sds((m,), jnp.int32)
-        if spec["labels"] == "replicated":
-            axes = all_axes(mesh)
-            fn = cdist.make_replicated_connectivity(mesh, axes, rounds=rounds)
-            lshard = NamedSharding(mesh, P())
-            eshard = NamedSharding(mesh, P(axes))
-        else:
-            eaxes = data_axes(mesh)
-            if spec.get("variant") == "fused":
-                fn = cdist.make_sharded_connectivity_fused(
-                    mesh, eaxes, "model", rounds=rounds,
-                    jumps=spec.get("jumps", 2))
-            else:
-                fn = cdist.make_sharded_connectivity(
-                    mesh, eaxes, "model", rounds=rounds,
-                    use_reduce_scatter=spec.get("use_reduce_scatter", False))
-            lshard = NamedSharding(mesh, P("model"))
-            eshard = NamedSharding(mesh, P(eaxes))
+        fn = backend.finish_program(finish_fn)
         return Cell(arch.name, shape_name, fn, (labels, s_spec, s_spec),
                     (lshard, eshard, eshard), donate=(0,),
                     meta=dict(edges=m, model_flops=0, loop_trips=rounds,
                               bytes_touched=rounds * (m * 8 + n * 8)))
 
     if kind == "ingest":
-        bsz, q = spec["batch"], spec["queries"]
-        axes = all_axes(mesh)
-        fn = cdist.make_streaming_ingest(mesh, axes, rounds=rounds)
-        eshard = NamedSharding(mesh, P(axes))
+        bsz = round_up(spec["batch"], backend.edge_shards)
+        q = round_up(spec["queries"], backend.edge_shards)
+        fn = backend.stream_ops(n, finish_fn).process
         args = (labels, sds((bsz,), jnp.int32), sds((bsz,), jnp.int32),
                 sds((q,), jnp.int32), sds((q,), jnp.int32))
-        shards = (NamedSharding(mesh, P()), eshard, eshard, eshard, eshard)
+        shards = (lshard, eshard, eshard, eshard, eshard)
         return Cell(arch.name, shape_name, fn, args, shards, donate=(0,),
                     meta=dict(edges=bsz, model_flops=0, loop_trips=rounds,
                               bytes_touched=rounds * (bsz * 8 + n * 8)))

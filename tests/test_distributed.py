@@ -1,153 +1,225 @@
-"""Distributed (shard_map) paths on 8 host devices.
+"""Distributed (shard_map) paths as parametrized in-process pytest asserts.
 
-XLA fixes the device count at first jax import, and the main test process
-must see 1 device (see conftest) — so these tests run their bodies in a
-subprocess with --xla_force_host_platform_device_count=8.
+The mesh is built over whatever devices the process has: 1 on the plain
+tier-1 run (shard_map over a 1-device mesh), 8 in the dedicated CI step
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) so every collective
+actually crosses device boundaries there. Device count is fixed at first
+jax import, so the 8-device pass is a separate pytest invocation (see
+.github/workflows/ci.yml) rather than a fixture.
 """
 
-import os
-import subprocess
-import sys
-
+import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def run_in_subprocess(body: str):
-    prelude = (
-        "import os\n"
-        "os.environ['XLA_FLAGS'] = "
-        "'--xla_force_host_platform_device_count=8'\n"
-        "import jax, jax.numpy as jnp, numpy as np\n"
-        "mesh = jax.make_mesh((2,2,2), ('pod','data','model'), "
-        "axis_types=(jax.sharding.AxisType.Auto,)*3)\n"
-    )
-    env = dict(os.environ, PYTHONPATH=SRC)
-    r = subprocess.run([sys.executable, "-c", prelude + body], env=env,
-                       capture_output=True, text=True, timeout=560)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
-
-
-def test_distributed_connectivity_matches_oracle():
-    run_in_subprocess("""
-from repro.core.distributed import (make_replicated_connectivity,
-    make_sharded_connectivity, make_sharded_connectivity_fused)
-from repro.graphs import generators as gen, components_oracle
-g = gen.planted_components(256, 4, 4.0, seed=2)
-oracle = components_oracle(g)
-sp = np.asarray(g.senders).copy(); rp = np.asarray(g.receivers).copy()
-sp[g.m:] = 0; rp[g.m:] = 0
-mpad = (len(sp)//8)*8
-sp, rp = sp[:mpad], rp[:mpad]
-def equiv(a, b):
-    ra={};rb={}
-    for x,y in zip(a.tolist(), b.tolist()):
-        if x in ra and ra[x]!=y: return False
-        if y in rb and rb[y]!=x: return False
-        ra[x]=y; rb[y]=x
-    return True
-lab0 = jnp.arange(256, dtype=jnp.int32)
-for maker, kw in [
-        (make_replicated_connectivity, dict(axes=('pod','data','model'))),
-        (make_sharded_connectivity, dict(edge_axes=('pod','data'),
-                                         label_axis='model')),
-        (make_sharded_connectivity_fused, dict(edge_axes=('pod','data'),
-                                               label_axis='model'))]:
-    fn = maker(mesh, rounds=40, **kw)
-    with mesh:
-        out = jax.jit(fn)(lab0, jnp.asarray(sp), jnp.asarray(rp))
-    assert equiv(np.asarray(out), oracle), maker
-print('distributed connectivity OK')
-""")
-
-
-def test_spmd_moe_matches_oracle():
-    run_in_subprocess("""
-from repro.models.moe import MoEConfig, moe_init, moe_apply_spmd, moe_ref
-cfg = MoEConfig(d_model=32, d_expert=64, n_experts=16, top_k=2, n_shared=1,
-                capacity_factor=8.0)
-p = moe_init(jax.random.PRNGKey(1), cfg)
-x = jax.random.normal(jax.random.PRNGKey(2), (64, 32), jnp.float32)
-yr = moe_ref(p, x, cfg)
-with mesh:
-    y, aux = jax.jit(lambda p, x: moe_apply_spmd(p, x, cfg, mesh,
-                                                 ('pod','data')))(p, x)
-np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=5e-4,
-                           atol=5e-5)
-# int8 a2a stays within 2% of exact
-cfg8 = MoEConfig(d_model=32, d_expert=64, n_experts=16, top_k=2, n_shared=1,
-                 capacity_factor=8.0, a2a_int8=True)
-with mesh:
-    y8, _ = jax.jit(lambda p, x: moe_apply_spmd(p, x, cfg8, mesh,
-                                                ('pod','data')))(p, x)
-rel = float(jnp.linalg.norm(y8 - yr) / jnp.linalg.norm(yr))
-assert rel < 0.02, rel
-print('spmd moe OK', rel)
-""")
-
-
-def test_spmd_gnn_losses_match_dense():
-    run_in_subprocess("""
-from repro.models.gnn import GNNConfig, init_gnn, gnn_loss
-from repro.models.nequip import NequIPConfig, init_nequip, nequip_loss
-from repro.models.gnn_spmd import make_spmd_gnn_loss
+from conftest import partition_equiv
+from repro.api import ConnectIt
+from repro.core import distributed as cdist
+from repro.core.execution import make_axis_mesh
+from repro.graphs import components_oracle
 from repro.graphs import generators as gen
-g = gen.rmat(255, 1000, seed=1)
-n1 = g.n + 1
-mpad = g.m_pad - (g.m_pad % 8)
-s = jnp.where(jnp.arange(mpad) < g.m, g.senders[:mpad], g.n)
-r = jnp.where(jnp.arange(mpad) < g.m, g.receivers[:mpad], g.n)
-key = jax.random.PRNGKey(0)
-feats = jax.random.normal(key, (n1, 12))
-coords = jax.random.normal(jax.random.fold_in(key, 1), (n1, 3))
-labels = jax.random.randint(jax.random.fold_in(key, 2), (n1,), 0, 4)
-for kind in ['gin', 'pna', 'egnn']:
+
+EXECS = [
+    "replicated(pod,data,model)",
+    "sharded(x)",
+    "sharded(pod,data|model)",
+    "sharded(pod,data|model):fused",
+]
+
+VARIANTS = [
+    "none+uf_sync_full",
+    "kout_hybrid_k2+uf_sync_naive",
+    "none+shiloach_vishkin",
+    "ldd_b0.2+liu_tarjan_CRFA",
+]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gen.planted_components(256, 4, 4.0, seed=2)
+
+
+@pytest.fixture(scope="module")
+def oracle(graph):
+    return components_oracle(graph)
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_distributed_connectivity_matches_oracle(graph, oracle, exec_str,
+                                                 variant):
+    ci = ConnectIt(variant, exec=exec_str)
+    labels = ci.connectivity(graph, key=jax.random.PRNGKey(7))
+    # canonical min-vertex-id labels equal the host union-find oracle exactly
+    np.testing.assert_array_equal(np.asarray(labels), oracle)
+    stats = ci.stats
+    assert stats.exec == exec_str
+    assert stats.placement == exec_str.split("(")[0]
+    assert stats.devices == jax.device_count()
+    assert stats.variant == variant
+    assert sum(stats.edges_per_device) == stats.edges_finish
+    assert sum(stats.dispatch_sizes) == stats.edges_finish_padded
+    assert stats.finish_rounds >= 1
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_distributed_rounds_budget_and_donation(graph, oracle, exec_str):
+    """Fixed-round programs run exactly `rounds` outer rounds; donation is
+    accepted (a no-op on backends without buffer donation support)."""
+    sep = "," if ":" in exec_str else ":"
+    ci = ConnectIt("none+uf_sync_full",
+                   exec=f"{exec_str}{sep}donate,rounds=16")
+    labels = ci.connectivity(graph)
+    np.testing.assert_array_equal(np.asarray(labels), oracle)
+    assert ci.stats.finish_rounds == 16
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_distributed_stream_mixed_batches(graph, oracle, exec_str):
+    """Sharded insert+query batches (paper §3.5 / Algorithm 3) linearize
+    inserts before queries and fill the unified stats."""
+    g = graph
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    h = ConnectIt("none+uf_sync_full", exec=exec_str).stream(g.n)
+    B = 200
+    last = None
+    for i in range(0, g.m, B):
+        k = min(B, g.m - i)
+        last = h.process(s[i:i + k], r[i:i + k],
+                         np.arange(64), np.arange(64, 128))
+    assert partition_equiv(np.asarray(h.labels), oracle)
+    assert h.num_components() == len(np.unique(oracle))
+    assert h.edges_inserted == g.m
+    expect = oracle[np.arange(64)] == oracle[np.arange(64, 128)]
+    np.testing.assert_array_equal(np.asarray(last), expect)
+    stats = h.stats
+    assert stats.exec == exec_str
+    assert stats.edges_total == g.m
+    # same invariants as the connectivity path: the finish phase processes
+    # directed (symmetrized) entries and the per-shard breakdowns sum up
+    assert stats.edges_finish == 2 * g.m
+    assert sum(stats.edges_per_device) == stats.edges_finish
+    assert sum(stats.dispatch_sizes) == stats.edges_finish_padded
+    assert stats.finish_rounds >= h.batches
+    # pow2 bucketing: ragged batches share a handful of compiled shapes
+    assert all(sz & (sz - 1) == 0 for sz in stats.batch_shapes)
+    assert len(stats.batch_shapes) <= 2
+
+
+def test_legacy_factories_warn_and_still_run(graph, oracle):
+    """Pre-ExecutionSpec make_* factories survive as deprecation shims."""
+    g = graph
+    mesh = make_axis_mesh(("pod", "data", "model"))
+    sp = np.asarray(g.senders).copy()
+    rp = np.asarray(g.receivers).copy()
+    sp[g.m:] = 0
+    rp[g.m:] = 0
+    mpad = (len(sp) // 8) * 8
+    lab0 = jnp.arange(g.n, dtype=jnp.int32)
+    for maker, kw in [
+            (cdist.make_replicated_connectivity,
+             dict(axes=("pod", "data", "model"))),
+            (cdist.make_sharded_connectivity,
+             dict(edge_axes=("pod", "data"), label_axis="model")),
+            (cdist.make_sharded_connectivity_fused,
+             dict(edge_axes=("pod", "data"), label_axis="model"))]:
+        with pytest.warns(DeprecationWarning):
+            fn = maker(mesh, rounds=40, **kw)
+        with mesh:
+            out = jax.jit(fn)(lab0, jnp.asarray(sp[:mpad]),
+                              jnp.asarray(rp[:mpad]))
+        assert partition_equiv(np.asarray(out), oracle)
+    with pytest.warns(DeprecationWarning):
+        ingest = cdist.make_streaming_ingest(mesh, ("pod", "data", "model"),
+                                             rounds=40)
+    qa = jnp.arange(64, dtype=jnp.int32)
+    qb = jnp.arange(64, 128, dtype=jnp.int32)
+    with mesh:
+        _, ans = jax.jit(ingest)(jnp.arange(g.n, dtype=jnp.int32),
+                                 jnp.asarray(sp[:mpad]),
+                                 jnp.asarray(rp[:mpad]), qa, qb)
+    expect = oracle[np.arange(64)] == oracle[np.arange(64, 128)]
+    np.testing.assert_array_equal(np.asarray(ans), expect)
+
+
+# ---------------------------------------------------------------------------
+# SPMD model paths (kept from the subprocess-era file, now in-process).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh3():
+    return make_axis_mesh(("pod", "data", "model"))
+
+
+def test_spmd_moe_matches_ref(mesh3):
+    from repro.models.moe import MoEConfig, moe_apply_spmd, moe_init, moe_ref
+    cfg = MoEConfig(d_model=32, d_expert=64, n_experts=16, top_k=2,
+                    n_shared=1, capacity_factor=8.0)
+    p = moe_init(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 32), jnp.float32)
+    yr = moe_ref(p, x, cfg)
+    with mesh3:
+        y, _ = jax.jit(lambda p, x: moe_apply_spmd(
+            p, x, cfg, mesh3, ("pod", "data")))(p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=5e-4,
+                               atol=5e-5)
+    # int8 a2a stays within 2% of exact
+    cfg8 = MoEConfig(d_model=32, d_expert=64, n_experts=16, top_k=2,
+                     n_shared=1, capacity_factor=8.0, a2a_int8=True)
+    with mesh3:
+        y8, _ = jax.jit(lambda p, x: moe_apply_spmd(
+            p, x, cfg8, mesh3, ("pod", "data")))(p, x)
+    rel = float(jnp.linalg.norm(y8 - yr) / jnp.linalg.norm(yr))
+    assert rel < 0.02, rel
+
+
+@pytest.mark.parametrize("kind", ["gin", "pna", "egnn"])
+def test_spmd_gnn_loss_matches_dense(mesh3, kind):
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn
+    from repro.models.gnn_spmd import make_spmd_gnn_loss
+    g = gen.rmat(255, 1000, seed=1)
+    n1 = g.n + 1
+    mpad = g.m_pad - (g.m_pad % 8)
+    s = jnp.where(jnp.arange(mpad) < g.m, g.senders[:mpad], g.n)
+    r = jnp.where(jnp.arange(mpad) < g.m, g.receivers[:mpad], g.n)
+    key = jax.random.PRNGKey(0)
+    feats = jax.random.normal(key, (n1, 12))
+    coords = jax.random.normal(jax.random.fold_in(key, 1), (n1, 3))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (n1,), 0, 4)
     mcfg = GNNConfig(name=kind, kind=kind, n_layers=2, d_hidden=16, d_in=12,
                      n_classes=4)
     params = init_gnn(jax.random.PRNGKey(3), mcfg)
     mask = (jnp.arange(g.n) < g.n).astype(jnp.float32)
-    dense = gnn_loss(params, mcfg, feats, s, r, labels[:g.n],
-                     coords=coords if kind == 'egnn' else None,
+    dense = gnn_loss(params, mcfg, feats, s, r, labels[: g.n],
+                     coords=coords if kind == "egnn" else None,
                      label_mask=mask)
-    loss_fn, _ = make_spmd_gnn_loss(mesh, mcfg, n1=n1, n_real=g.n,
-                                    dax=('pod', 'data'))
-    with mesh:
+    loss_fn, _ = make_spmd_gnn_loss(mesh3, mcfg, n1=n1, n_real=g.n,
+                                    dax=("pod", "data"))
+    with mesh3:
         spmd = jax.jit(loss_fn)(params, feats, coords, s, r, labels)
-    assert np.isclose(float(dense), float(spmd), rtol=2e-3), kind
-ncfg = NequIPConfig(name='nequip', n_layers=2, channels=8, n_rbf=4,
-                    n_species=3)
-npar = init_nequip(jax.random.PRNGKey(5), ncfg)
-species = jax.random.randint(jax.random.fold_in(key, 3), (n1,), 0, 3)
-targets = jnp.asarray([1.5])
-dense = nequip_loss(npar, ncfg, species, coords, s, r, targets)
-loss_fn, _ = make_spmd_gnn_loss(mesh, ncfg, n1=n1, n_real=g.n,
-                                dax=('pod', 'data'))
-with mesh:
-    spmd = jax.jit(loss_fn)(npar, species, coords, s, r, targets)
-assert np.isclose(float(dense), float(spmd), rtol=2e-3)
-print('spmd gnn OK')
-""")
+    assert np.isclose(float(dense), float(spmd), rtol=2e-3)
 
 
-def test_distributed_ingest_answers_queries():
-    run_in_subprocess("""
-from repro.core.distributed import make_streaming_ingest
-from repro.graphs import generators as gen, components_oracle
-g = gen.planted_components(128, 4, 4.0, seed=5)
-oracle = components_oracle(g)
-sp = np.asarray(g.senders).copy(); rp = np.asarray(g.receivers).copy()
-sp[g.m:] = 0; rp[g.m:] = 0
-mpad = (len(sp)//8)*8
-ingest = make_streaming_ingest(mesh, ('pod','data','model'), rounds=40)
-qa = jnp.arange(64, dtype=jnp.int32)
-qb = jnp.arange(64, 128, dtype=jnp.int32)
-with mesh:
-    labels, ans = jax.jit(ingest)(jnp.arange(128, dtype=jnp.int32),
-                                  jnp.asarray(sp[:mpad]),
-                                  jnp.asarray(rp[:mpad]), qa, qb)
-expect = oracle[np.arange(64)] == oracle[np.arange(64, 128)]
-np.testing.assert_array_equal(np.asarray(ans), expect)
-print('distributed ingest OK')
-""")
+def test_spmd_nequip_loss_matches_dense(mesh3):
+    from repro.models.gnn_spmd import make_spmd_gnn_loss
+    from repro.models.nequip import NequIPConfig, init_nequip, nequip_loss
+    g = gen.rmat(255, 1000, seed=1)
+    n1 = g.n + 1
+    mpad = g.m_pad - (g.m_pad % 8)
+    s = jnp.where(jnp.arange(mpad) < g.m, g.senders[:mpad], g.n)
+    r = jnp.where(jnp.arange(mpad) < g.m, g.receivers[:mpad], g.n)
+    key = jax.random.PRNGKey(0)
+    coords = jax.random.normal(jax.random.fold_in(key, 1), (n1, 3))
+    ncfg = NequIPConfig(name="nequip", n_layers=2, channels=8, n_rbf=4,
+                        n_species=3)
+    npar = init_nequip(jax.random.PRNGKey(5), ncfg)
+    species = jax.random.randint(jax.random.fold_in(key, 3), (n1,), 0, 3)
+    targets = jnp.asarray([1.5])
+    dense = nequip_loss(npar, ncfg, species, coords, s, r, targets)
+    loss_fn, _ = make_spmd_gnn_loss(mesh3, ncfg, n1=n1, n_real=g.n,
+                                    dax=("pod", "data"))
+    with mesh3:
+        spmd = jax.jit(loss_fn)(npar, species, coords, s, r, targets)
+    assert np.isclose(float(dense), float(spmd), rtol=2e-3)

@@ -1,0 +1,238 @@
+"""ExecutionSpec grammar + cross-placement equivalence.
+
+The equivalence sweep is the acceptance bar for the execution redesign: the
+same VariantSpec must produce *identical* canonical labels under single,
+replicated, and sharded placements, verified against scipy's
+connected_components on the synthetic graph families.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import scipy_canonical, variant_grid_graphs
+from repro.api import ConnectIt, ExecutionSpec
+from repro.core.execution import (
+    bucket_size,
+    make_axis_mesh,
+    make_backend,
+    plan_mesh,
+)
+from repro.graphs import generators as gen
+
+# ---------------------------------------------------------------------------
+# Grammar: canonical strings round-trip exactly; invalid specs are rejected.
+# ---------------------------------------------------------------------------
+
+ROUNDTRIP = [
+    "single",
+    "single:fused",
+    "single:pad=256",
+    "single:fused,pad=16",
+    "replicated(x)",
+    "replicated(pod,data,model)",
+    "replicated(pod,data):donate,rounds=8",
+    "sharded(x)",
+    "sharded(x):fused",
+    "sharded(pod,data|model)",
+    "sharded(pod,data|model):fused,pad=32,donate,rounds=4",
+    "sharded(x,y|x)",
+]
+
+
+@pytest.mark.parametrize("text", ROUNDTRIP)
+def test_roundtrip_exact(text):
+    spec = ExecutionSpec.parse(text)
+    assert ExecutionSpec.parse(str(spec)) == spec
+    # the inputs above are already canonical
+    assert str(spec) == text
+
+
+def test_parse_normalizes_aliases():
+    # bare placements get the default 1-axis mesh
+    assert str(ExecutionSpec.parse("replicated")) == "replicated(x)"
+    assert str(ExecutionSpec.parse("sharded")) == "sharded(x)"
+    # sharded without '|': last axis carries labels
+    assert str(ExecutionSpec.parse("sharded(pod,data,model)")) == \
+        "sharded(pod,data|model)"
+    # pad=pow2 is the default (omitted from the canonical string)
+    assert str(ExecutionSpec.parse("single:pad=pow2")) == "single"
+    # constructor mirrors the grammar
+    assert ExecutionSpec("sharded", axes=("pod", "data"),
+                         label_axis="model") == \
+        ExecutionSpec.parse("sharded(pod,data|model)")
+
+
+def test_unused_knobs_are_pinned():
+    # single ignores mesh/donation/rounds knobs (canonical equality)
+    assert ExecutionSpec("single", donate=True, rounds=7) == ExecutionSpec()
+    # replicated pins fused and label_axis
+    assert ExecutionSpec("replicated", fused=True) == \
+        ExecutionSpec("replicated")
+    # pow2 pins the multiple granularity
+    assert ExecutionSpec(pad="pow2", pad_multiple=64) == ExecutionSpec()
+
+
+@pytest.mark.parametrize("bad", [
+    "quantum", "single(x)", "replicated()", "sharded(9bad)",
+    "sharded(x|", "replicated(a|b)", "single:bogus", "single:rounds",
+    "sharded(x):pad=", "replicated(a,a)",
+])
+def test_invalid_spec_strings_rejected(bad):
+    with pytest.raises(ValueError):
+        ExecutionSpec.parse(bad)
+
+
+def test_invalid_spec_fields_rejected():
+    with pytest.raises(ValueError):
+        ExecutionSpec("replicated", axes=("Bad-Axis",))
+    with pytest.raises(ValueError):
+        ExecutionSpec(pad="fibonacci")
+    with pytest.raises(ValueError):
+        ExecutionSpec(pad_multiple=0)
+    with pytest.raises(ValueError):
+        ExecutionSpec("sharded", rounds=-1)
+
+
+def test_plan_mesh_validates_axis_names():
+    spec = ExecutionSpec.parse("sharded(pod,data|model)")
+    mesh = make_axis_mesh(("pod", "data", "model"))
+    assert plan_mesh(spec, mesh) is mesh
+    with pytest.raises(ValueError):
+        plan_mesh(spec, make_axis_mesh(("x",)))
+    assert plan_mesh(ExecutionSpec()) is None
+
+
+def test_backends_are_memoized():
+    spec = ExecutionSpec.parse("replicated(x)")
+    assert make_backend(spec) is make_backend("replicated(x)")
+    assert make_backend("single") is make_backend(ExecutionSpec())
+
+
+def test_bucket_size_policies():
+    assert bucket_size(1000) == 1024
+    assert bucket_size(1024) == 1024
+    assert bucket_size(1) == 8
+    assert bucket_size(1000, pad="multiple", pad_multiple=256) == 1024
+    assert bucket_size(10, pad="multiple", pad_multiple=8) == 16
+    # distributed dispatches split evenly across edge shards
+    assert bucket_size(1000, shards=6) % 6 == 0
+
+
+# ---------------------------------------------------------------------------
+# Cross-placement equivalence (satellite): same VariantSpec, identical
+# canonical labels under every placement, vs the scipy oracle.
+# ---------------------------------------------------------------------------
+
+def _family_graphs():
+    """Synthetic families (benchmarks/synthetic_families.py shapes)."""
+    return {
+        "rmat": gen.rmat(512, 2048, seed=6),
+        "planted": gen.planted_components(300, 5, 4.0, seed=3),
+        "ba": gen.barabasi_albert(256, 3, seed=1),
+    }
+
+
+PLACEMENT_SWEEP = ["single", "single:fused", "replicated(x)", "sharded(x)",
+                   "sharded(x):fused"]
+
+EQUIV_VARIANTS = ["kout_hybrid_k2+uf_sync_full", "none+uf_sync_naive",
+                  "bfs_c3+shiloach_vishkin", "none+liu_tarjan_CRFA"]
+
+
+@pytest.mark.parametrize("variant", EQUIV_VARIANTS)
+def test_cross_placement_equivalence_on_families(variant):
+    for gname, g in _family_graphs().items():
+        expect = scipy_canonical(g)
+        for exec_str in PLACEMENT_SWEEP:
+            ci = ConnectIt(variant, exec=exec_str)
+            labels = ci.connectivity(g, key=jax.random.PRNGKey(11))
+            np.testing.assert_array_equal(
+                np.asarray(labels), expect,
+                err_msg=f"{variant} under {exec_str} on {gname!r}")
+
+
+def test_sharded_matches_single_on_variant_grid():
+    """Acceptance: ConnectIt(spec, exec='sharded(x)') returns labels
+    identical to the single-device path on the variant-API graph grid."""
+    variant = "kout_hybrid_k2+uf_sync_full"
+    for gname, g in variant_grid_graphs().items():
+        key = jax.random.PRNGKey(7)
+        single = ConnectIt(variant).connectivity(g, key=key)
+        sharded = ConnectIt(variant, exec="sharded(x)").connectivity(
+            g, key=key)
+        np.testing.assert_array_equal(
+            np.asarray(single), np.asarray(sharded), err_msg=gname)
+        np.testing.assert_array_equal(np.asarray(single), scipy_canonical(g),
+                                      err_msg=gname)
+
+
+def test_forest_runs_under_every_placement():
+    g = gen.planted_components(60, 3, 4.0, seed=4)
+    ncomp = len(np.unique(scipy_canonical(g)))
+    for exec_str in PLACEMENT_SWEEP:
+        ci = ConnectIt("kout_hybrid_k2+uf_sync_full", exec=exec_str)
+        forest = ci.spanning_forest(g, key=jax.random.PRNGKey(2))
+        assert len(forest) == g.n - ncomp, exec_str
+
+
+# ---------------------------------------------------------------------------
+# Stream bucketing (satellite): ragged final batches reuse pow2 shapes.
+# ---------------------------------------------------------------------------
+
+def test_stream_buckets_ragged_batches_to_pow2():
+    g = gen.rmat(128, 700, seed=9)
+    h = ConnectIt("none+uf_sync_full").stream(g.n)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    # ragged batch sizes, including a tiny final remainder
+    for lo, hi in [(0, 100), (100, 356), (356, 611), (611, g.m)]:
+        h.insert(s[lo:hi], r[lo:hi])
+    stats = h.stats
+    assert h.edges_inserted == g.m
+    assert all(sz & (sz - 1) == 0 for sz in stats.batch_shapes)
+    # 100, 256, 255, and the remainder share two pow2 buckets (128/256/512…)
+    assert len(stats.batch_shapes) <= 3
+    # dispatches are symmetrized, so the padded total is twice the buckets
+    assert stats.edges_finish_padded == 2 * sum(
+        bucket_size(k) for k in (100, 256, 255, g.m - 611))
+
+
+def test_stream_pad_multiple_policy_respected():
+    g = gen.rmat(64, 200, seed=5)
+    h = ConnectIt("none+uf_sync_full", exec="single:pad=64").stream(g.n)
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    h.insert(s[:50], r[:50]).insert(s[50:], r[50:])
+    assert all(sz % 64 == 0 for sz in h.stats.batch_shapes)
+
+
+def test_stream_query_answers_sliced_to_real_count():
+    h = ConnectIt("none+uf_sync_full").stream(32)
+    h.insert(np.arange(31), np.arange(1, 32))
+    ans = h.query(np.zeros(5, np.int32), np.arange(5, dtype=np.int32))
+    assert ans.shape == (5,)
+    assert bool(np.asarray(ans).all())
+
+
+def test_connectit_repr_and_exec_property():
+    ci = ConnectIt("none+uf_sync_full", exec="sharded(x):fused")
+    assert "sharded(x):fused" in repr(ci)
+    assert ci.exec == ExecutionSpec.parse("sharded(x):fused")
+    # compact_pad convenience maps onto the pad policy
+    ci2 = ConnectIt("none+uf_sync_full", compact_pad=128)
+    assert ci2.exec.pad == "multiple" and ci2.exec.pad_multiple == 128
+    with pytest.raises(ValueError):
+        ConnectIt("none+uf_sync_full", compact_pad=0)
+    # dataclass is frozen
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ci.exec.rounds = 3
+
+
+def test_fused_override_rejected_on_distributed():
+    g = gen.rmat(64, 200, seed=5)
+    ci = ConnectIt("none+uf_sync_full", exec="sharded(x)")
+    with pytest.raises(ValueError):
+        ci.connectivity(g, fused=True)

@@ -115,9 +115,9 @@ def test_data_streams_deterministic():
 def test_param_spec_rules_fit_divisibility():
     """Granite's 40 experts don't divide a 16-way model axis — the fitter
     must re-home TP to a hidden dim instead of producing an invalid spec."""
+    from repro.launch.mesh import make_mesh_compat
     from repro.launch.shardings import param_specs
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     shapes = {"layers": {"moe": {
         "w_gate": jax.ShapeDtypeStruct((32, 40, 1536, 512), jnp.float32)}}}
     specs = param_specs(shapes, "lm", mesh)

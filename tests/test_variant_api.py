@@ -7,17 +7,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from scipy.sparse import csr_matrix
-from scipy.sparse.csgraph import connected_components as scipy_cc
 
+from conftest import scipy_canonical, variant_grid_graphs
 from repro.api import (
     ConnectIt,
+    ExecutionSpec,
     FinishSpec,
     SamplingSpec,
     VariantSpec,
     enumerate_variants,
 )
-from repro.graphs import build_graph
 from repro.graphs import generators as gen
 
 SPECS = enumerate_variants()
@@ -41,41 +40,7 @@ def _clear_jax_caches_once():
     jax.clear_caches()
 
 
-def _two_clique():
-    half = N // 2
-    edges = [(i, j) for i in range(half) for j in range(i + 1, half)]
-    edges += [(half + i, half + j) for i in range(half)
-              for j in range(i + 1, half)]
-    return np.array(edges, dtype=np.int64)
-
-
-def _graphs():
-    rng = np.random.default_rng(0)
-    return {
-        "random": build_graph(rng.integers(0, N, size=(30, 2)), N,
-                              pad_multiple=PAD),
-        "path": build_graph(
-            np.stack([np.arange(N - 1), np.arange(1, N)], 1), N,
-            pad_multiple=PAD),
-        "star": build_graph(
-            np.stack([np.zeros(N - 1, np.int64), np.arange(1, N)], 1), N,
-            pad_multiple=PAD),
-        "two_clique": build_graph(_two_clique(), N, pad_multiple=PAD),
-    }
-
-
-GRAPHS = _graphs()
-
-
-def scipy_canonical(g) -> np.ndarray:
-    """scipy connected_components relabeled to min-vertex-id canonical form."""
-    s = np.asarray(g.senders)[: g.m]
-    r = np.asarray(g.receivers)[: g.m]
-    mat = csr_matrix((np.ones(len(s)), (s, r)), shape=(g.n, g.n))
-    _, lab = scipy_cc(mat, directed=False)
-    reps = np.full(lab.max() + 1, g.n, dtype=np.int64)
-    np.minimum.at(reps, lab, np.arange(g.n))
-    return reps[lab]
+GRAPHS = variant_grid_graphs(N, PAD)
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +194,21 @@ def test_stats_consistent_across_paths():
     assert not compacted.fused and fused.fused
     # compaction must never hand the finish phase more real edges than fused
     assert compacted.edges_finish <= fused.edges_finish == g.m
+
+
+def test_sharded_exec_matches_single_on_grid():
+    """Acceptance: the sharded placement reproduces the single-device labels
+    on every graph in this module's grid (full sweep: test_execution.py)."""
+    spec = "kout_hybrid_k2+uf_sync_full"
+    assert ExecutionSpec.parse("sharded(x)") == \
+        ExecutionSpec.parse(str(ExecutionSpec.parse("sharded(x)")))
+    ci = ConnectIt(spec, exec="sharded(x)")
+    for gname, g in GRAPHS.items():
+        labels = ci.connectivity(g, key=jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(np.asarray(labels), scipy_canonical(g),
+                                      err_msg=gname)
+        assert ci.stats.exec == "sharded(x)"
+        assert ci.stats.placement == "sharded"
 
 
 def test_bfs_sampler_is_jittable():
