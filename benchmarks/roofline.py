@@ -5,6 +5,12 @@ ratio, and the three hillclimb candidates.
 Reads the CSV produced by ``python -m repro.launch.dryrun --all --mesh both
 --csv dryrun_all.csv`` (the dry-run must run in its own process: it forces
 512 host devices before importing jax).
+
+``--kernels`` instead runs the per-primitive KernelPolicy smoke: each
+connectivity hot-path op (scatter_min / pointer_jump / hook_compress /
+edge_relabel / edge_rewrite) timed under the ``ref`` policy vs the Pallas
+code path (``pallas`` on TPU, ``interpret`` elsewhere — the interpreted
+numbers gate *correct wiring*, not speed; compiled speedups need a TPU).
 """
 
 from __future__ import annotations
@@ -66,6 +72,71 @@ def run(quick: bool = True, path: str = "dryrun_all.csv"):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Per-primitive KernelPolicy smoke (CI gate for the dispatch layer).
+# ---------------------------------------------------------------------------
+
+def run_kernels(quick: bool = True):
+    """Time every hot-path primitive under ref vs the Pallas code path."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import timeit
+    from repro.kernels import ops
+
+    n = 1 << 12 if quick else 1 << 20
+    m = 4 * n
+    compiled = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    reps = 3 if quick else 10
+
+    rng = np.random.default_rng(0)
+    P = jnp.asarray(np.minimum(rng.integers(0, n, n + 1),
+                               np.arange(n + 1)).astype(np.int32))
+    s = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+    r = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+
+    prims = [
+        ("scatter_min (writeMin)",
+         lambda p: ops.scatter_min(P, s, vals, policy=p)),
+        ("pointer_jump k=3 (FindHalve)",
+         lambda p: ops.pointer_jump(P, k=3, policy=p)),
+        ("hook_compress k=1 (uf_sync round)",
+         lambda p: ops.hook_compress(P, s, r, k=1, policy=p)),
+        ("edge_relabel (ParentConnect)",
+         lambda p: ops.edge_relabel(P, s, r, policy=p)),
+        ("edge_rewrite (alter/stream)",
+         lambda p: ops.edge_rewrite(P, s, r, policy=p)),
+    ]
+    print(f"kernel smoke: n={n} m={m} backend={jax.default_backend()} "
+          f"compiled-path={compiled}")
+    print(f"{'primitive':36s} {'ref_ms':>10s} {compiled + '_ms':>14s} "
+          f"{'ratio':>8s}")
+    rows = []
+    for name, call in prims:
+        t_ref = timeit(call, "ref", iters=reps)
+        t_krn = timeit(call, compiled, iters=reps)
+        ratio = t_krn / t_ref if t_ref else float("inf")
+        rows.append((name, t_ref, t_krn, ratio))
+        print(f"{name:36s} {t_ref * 1e3:10.3f} {t_krn * 1e3:14.3f} "
+              f"{ratio:8.2f}")
+        # parity gate: both paths must agree bit-for-bit
+        a, b = call("ref"), call(compiled)
+        a = a if isinstance(a, tuple) else (a,)
+        b = b if isinstance(b, tuple) else (b,)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=name)
+    print("parity: all primitives agree across policies")
+    return rows
+
+
 if __name__ == "__main__":
-    run(quick=False, path=sys.argv[1] if len(sys.argv) > 1 else
-        "dryrun_all.csv")
+    argv = sys.argv[1:]
+    if "--kernels" in argv:
+        run_kernels(quick="--full" not in argv)
+    else:
+        run(quick=False,
+            path=argv[0] if argv and not argv[0].startswith("-")
+            else "dryrun_all.csv")

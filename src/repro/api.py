@@ -34,6 +34,7 @@ Execution grammar (same round-trip discipline; see core/execution.py):
     placement := "single" | "replicated" | "sharded"
     axes      := axis ("," axis)* [ "|" label_axis ]     # sharded only
     opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+               | "kernels=" ("auto" | "pallas" | "interpret" | "ref")
 
 ``enumerate_variants()`` materializes the paper's sampling × finish ×
 compression cross-product with the paper's documented incompatibilities
@@ -55,6 +56,7 @@ import numpy as np
 from .core import driver
 from .core.execution import (
     ExecutionSpec,
+    KERNEL_POLICIES,
     PLACEMENTS,
     as_execution_spec,
     make_backend,
@@ -71,6 +73,7 @@ __all__ = [
     "SamplingSpec", "FinishSpec", "VariantSpec", "ExecutionSpec",
     "ConnectIt", "Stream", "enumerate_variants", "is_compatible",
     "KOUT_VARIANTS", "COMPRESS_MODES", "LIU_TARJAN_VARIANTS", "PLACEMENTS",
+    "KERNEL_POLICIES",
 ]
 
 SAMPLING_SCHEMES = ("none", "kout", "bfs", "ldd")
@@ -359,9 +362,17 @@ class VariantSpec:
             return dict(variant=self.lt_code)
         return {}
 
-    def build_finish(self):
-        """Resolve to the (memoized) finish callable."""
-        return make_finish(self.finish.method, **self.finish_kwargs())
+    def build_finish(self, kernels: Optional[str] = None):
+        """Resolve to the (memoized) finish callable.
+
+        ``kernels`` selects the KernelPolicy its hot loops dispatch through
+        (``auto | pallas | interpret | ref``); policies are part of the
+        memoization key, so each gets its own stable jit identity. ``None``
+        and ``"auto"`` share the default callable."""
+        kw = self.finish_kwargs()
+        if kernels not in (None, "auto"):
+            kw["kernels"] = kernels
+        return make_finish(self.finish.method, **kw)
 
     def __str__(self) -> str:
         return f"{self.sampling}+{self.finish_str}"
@@ -575,11 +586,18 @@ class ConnectIt:
     ``mesh=`` to pin an explicit ``jax.sharding.Mesh`` (it must provide the
     spec's axis names); otherwise the spec's axes are laid out over all
     available devices.
+
+    ``kernels=`` selects the KernelPolicy (``auto | pallas | interpret |
+    ref``) the session's hot-path primitives dispatch through — a
+    convenience that folds into the ExecutionSpec's ``kernels`` field, so
+    placement and kernel policy travel together and ``stats.exec`` reports
+    what actually ran (see repro.kernels.ops and docs/API.md).
     """
 
     def __init__(self, spec: SpecLike = "none+uf_sync_naive",
                  exec: ExecLike = "single", *, mesh=None,
-                 compact_pad: Optional[int] = None):
+                 compact_pad: Optional[int] = None,
+                 kernels: Optional[str] = None):
         if isinstance(spec, str):
             spec = VariantSpec.parse(spec)
         if not isinstance(spec, VariantSpec):
@@ -593,11 +611,17 @@ class ConnectIt:
                     f"compact_pad must be >= 1, got {compact_pad}")
             exec_spec = dataclasses.replace(exec_spec, pad="multiple",
                                             pad_multiple=compact_pad)
+        if kernels is not None:
+            # convenience override: the KernelPolicy is an ExecutionSpec
+            # field (placement and kernel policy travel together), and the
+            # knob folds into it so stats.exec reports what actually ran;
+            # validation happens in the spec constructor
+            exec_spec = dataclasses.replace(exec_spec, kernels=kernels)
         self.spec = spec
         self.exec = exec_spec
         self._backend = make_backend(exec_spec, mesh=mesh)
         self._sampler = spec.sampling.build()
-        self._finish = spec.build_finish()
+        self._finish = spec.build_finish(kernels=exec_spec.kernels)
         self._stats: Optional[driver.ConnectivityStats] = None
 
     def __repr__(self) -> str:

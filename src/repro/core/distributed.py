@@ -44,7 +44,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .primitives import full_compress
+from .primitives import full_compress, iterate_to_fixpoint
 
 # Fixpoint-detection cap floor for the outer merge loop (rounds=0). Label
 # information crosses at least one shard boundary per outer round, so the
@@ -71,23 +71,15 @@ def _outer_loop(body, labels, rounds: int, max_rounds: int,
     The while condition must be uniform across the mesh: pass a
     ``changed_fn`` that reduces the local changed flag over the mesh axes
     when the labels carried are per-shard (the default identity is for
-    merged, device-identical labelings)."""
+    merged, device-identical labelings). The fixpoint branch is the shared
+    ``primitives.iterate_to_fixpoint`` loop with the mesh reduction wrapped
+    into its convergence predicate."""
     if rounds > 0:
         out = jax.lax.fori_loop(0, rounds, lambda i, L: body(L), labels)
         return out, jnp.int32(rounds)
-
-    def cond(st):
-        _, changed, i = st
-        return changed & (i < max_rounds)
-
-    def step(st):
-        L, _, i = st
-        L2 = body(L)
-        return L2, changed_fn(jnp.any(L2 != L)), i + 1
-
-    out, _, k = jax.lax.while_loop(
-        cond, step, (labels, jnp.bool_(True), jnp.int32(0)))
-    return out, k
+    return iterate_to_fixpoint(
+        body, labels, max_rounds,
+        changed_fn=lambda old, new: changed_fn(jnp.any(new != old)))
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +182,8 @@ def make_sharded_finish(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
     return program
 
 
-def make_sharded_compress(mesh: Mesh, label_axis: str):
+def make_sharded_compress(mesh: Mesh, label_axis: str,
+                          kernels: Optional[str] = None):
     """Full pointer-jump compression of a label-sharded array (one gather)."""
     lspec = P(label_axis)
 
@@ -200,7 +193,7 @@ def make_sharded_compress(mesh: Mesh, label_axis: str):
         shard_len = lab_shard.shape[0]
         idx = jax.lax.axis_index(label_axis)
         full = jax.lax.all_gather(lab_shard, label_axis, tiled=True)
-        full = full_compress(full)
+        full = full_compress(full, kernels=kernels)
         return jax.lax.dynamic_slice_in_dim(full, idx * shard_len, shard_len)
 
     return compress
@@ -220,7 +213,8 @@ class StreamPrograms(NamedTuple):
 
 def make_replicated_stream(mesh: Mesh, axes: Sequence[str],
                            finish_fn: Callable, *, rounds: int = 0,
-                           max_rounds: Optional[int] = None
+                           max_rounds: Optional[int] = None,
+                           kernels: Optional[str] = None
                            ) -> StreamPrograms:
     """Batch insert+query with labels replicated, batches/queries sharded."""
     axes = tuple(axes)
@@ -236,7 +230,7 @@ def make_replicated_stream(mesh: Mesh, axes: Sequence[str],
     def insert(labels, u, v):
         labels, k = run(labels, u, v)
         # keep the labeling fully compressed between batches (O(1) queries)
-        return full_compress(labels), k
+        return full_compress(labels, kernels=kernels), k
 
     def process(labels, u, v, qa, qb):
         labels, k = insert(labels, u, v)
@@ -248,7 +242,8 @@ def make_replicated_stream(mesh: Mesh, axes: Sequence[str],
 def make_sharded_stream(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
                         finish_fn: Callable, *, reduce_scatter: bool = False,
                         rounds: int = 0,
-                        max_rounds: Optional[int] = None
+                        max_rounds: Optional[int] = None,
+                        kernels: Optional[str] = None
                         ) -> StreamPrograms:
     """Batch insert+query with labels sharded over ``label_axis``."""
     edge_axes = tuple(edge_axes)
@@ -257,7 +252,7 @@ def make_sharded_stream(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
     run = make_sharded_finish(mesh, edge_axes, label_axis, finish_fn,
                               reduce_scatter=reduce_scatter, rounds=rounds,
                               max_rounds=max_rounds, symmetrize=True)
-    compress = make_sharded_compress(mesh, label_axis)
+    compress = make_sharded_compress(mesh, label_axis, kernels=kernels)
 
     @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
              out_specs=espec, check_rep=False)

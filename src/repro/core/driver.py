@@ -72,11 +72,11 @@ class ConnectivityStats:
     fused: bool = False        # single: one-dispatch; sharded: rs-merge
 
 
-@partial(jax.jit, static_argnames=("finish_fn",))
-def _finish_phase(P, senders, receivers, finish_fn):
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
+def _finish_phase(P, senders, receivers, finish_fn, kernels=None):
     P, rounds = finish_fn(P, senders, receivers)
-    P = full_compress(P)
-    P = min_vertex_labels(restore_lmax(P))
+    P = full_compress(P, kernels=kernels)
+    P = min_vertex_labels(restore_lmax(P), kernels=kernels)
     return P, rounds
 
 
@@ -134,13 +134,16 @@ def run_connectivity(
     variant: str = "",
     compact_pad: int = 8,
     pad: str = "multiple",
+    kernels: Optional[str] = None,
 ) -> tuple[jax.Array, ConnectivityStats]:
     """Two-phase connectivity on resolved callables → (labels, stats).
 
     ``compact_pad``/``pad`` set the padding policy of the compacted
     finish-phase edge list — ``pad="multiple"`` rounds up to ``compact_pad``,
     ``pad="pow2"`` buckets to the next power of two (fewer distinct compiled
-    shapes across graphs, a few more dump-slot scatters).
+    shapes across graphs, a few more dump-slot scatters). ``kernels`` is the
+    KernelPolicy for the driver's own finish-phase dispatches (compression +
+    canonicalization; the finish callable carries its policy internally).
     """
     key = jax.random.PRNGKey(0) if key is None else key
     stats = ConnectivityStats(variant=variant, edges_total=g.m)
@@ -157,24 +160,25 @@ def run_connectivity(
         stats.lmax_count = int(cnt)
         stats.edges_finish = kept
         stats.edges_finish_padded = int(senders.shape[0])
-    P, rounds = _finish_phase(P, senders, receivers, finish_fn)
+    P, rounds = _finish_phase(P, senders, receivers, finish_fn, kernels)
     stats.finish_rounds = int(rounds)
     stats.edges_per_device = (stats.edges_finish,)
     stats.dispatch_sizes = (stats.edges_finish_padded,)
     return P[: g.n], stats
 
 
-@partial(jax.jit, static_argnames=("finish_fn", "sampled"))
-def _fused_phase(P, senders, receivers, finish_fn, sampled: bool):
+@partial(jax.jit, static_argnames=("finish_fn", "sampled", "kernels"))
+def _fused_phase(P, senders, receivers, finish_fn, sampled: bool,
+                 kernels=None):
     if sampled:
-        P = full_compress(P)
+        P = full_compress(P, kernels=kernels)
         lmax, cnt = most_frequent(P)
         P = relabel_lmax(P, lmax)
     else:
         cnt = jnp.int32(0)
     P, rounds = finish_fn(P, senders, receivers)
-    P = full_compress(P)
-    P = min_vertex_labels(restore_lmax(P))
+    P = full_compress(P, kernels=kernels)
+    P = min_vertex_labels(restore_lmax(P), kernels=kernels)
     return P, rounds, cnt
 
 
@@ -185,6 +189,7 @@ def run_connectivity_fused(
     key: Optional[jax.Array] = None,
     *,
     variant: str = "",
+    kernels: Optional[str] = None,
 ) -> tuple[jax.Array, ConnectivityStats]:
     """Single-dispatch connectivity (no host compaction) → (labels, stats)."""
     key = jax.random.PRNGKey(0) if key is None else key
@@ -196,7 +201,8 @@ def run_connectivity_fused(
     else:
         P = sampler_fn(g, key)
         sampled = True
-    P, rounds, cnt = _fused_phase(P, g.senders, g.receivers, finish_fn, sampled)
+    P, rounds, cnt = _fused_phase(P, g.senders, g.receivers, finish_fn,
+                                  sampled, kernels)
     stats.finish_rounds = int(rounds)
     stats.lmax_count = int(cnt)
     stats.edges_per_device = (stats.edges_finish,)
@@ -212,20 +218,23 @@ def run_spanning_forest(
     compress: str = "full",
     compact_pad: int = 8,
     pad: str = "multiple",
+    kernels: Optional[str] = None,
 ) -> np.ndarray:
     """Spanning forest via root-based finish (paper Algorithm 2). Returns a
     host-side (k, 2) array of forest edges."""
     key = jax.random.PRNGKey(0) if key is None else key
     if sampler_fn is None:
         P = init_labels(g.n)
-        st, _ = uf_sync_forest(P, g.senders, g.receivers, compress=compress)
+        st, _ = uf_sync_forest(P, g.senders, g.receivers, compress=compress,
+                               kernels=kernels)
     else:
         st0 = sampler_fn(g, key, want_forest=True)
         P, keep, lmax, cnt = _prep_sampled(st0.P, g.senders, g.receivers)
         senders, receivers, _ = _compact(g.senders, g.receivers, keep, g.n,
                                          compact_pad, pad)
         st, _ = uf_sync_forest(P, senders, receivers,
-                               fu=st0.fu, fv=st0.fv, compress=compress)
+                               fu=st0.fu, fv=st0.fv, compress=compress,
+                               kernels=kernels)
     fu = np.asarray(st.fu)
     fv = np.asarray(st.fv)
     sel = (fu >= 0) & (fv >= 0)

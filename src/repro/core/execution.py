@@ -7,12 +7,14 @@ compression); ``ExecutionSpec`` says *where and how* to dispatch it:
     exec      := placement [ "(" axes ")" ] [ ":" opt ("," opt)* ]
     axes      := axis ("," axis)* [ "|" label_axis ]      # sharded only
     opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+               | "kernels=" ("auto" | "pallas" | "interpret" | "ref")
 
 Examples (canonical strings round-trip, ``ExecutionSpec.parse(str(s)) == s``):
 
     single                     one device, compacted finish dispatch
     single:fused               one device, single-dispatch (no compaction)
     single:pad=256             compacted list padded to multiples of 256
+    single:kernels=interpret   Pallas kernels under interpret=True (CPU CI)
     replicated(pod,data)       edges sharded over pod×data, labels replicated
     sharded(x)                 1-D mesh: edges AND labels sharded over x
     sharded(pod,data|model)    edges over pod×data, labels over model
@@ -36,6 +38,11 @@ construction, so equality and round-trips are canonical — same discipline as
   * ``rounds`` — fixed outer merge rounds for distributed placements
     (dry-run / fixed-budget programs); ``0`` runs to a global fixpoint.
     Pinned 0 for single (finish methods run to their own fixpoint).
+  * ``kernels`` — the KernelPolicy (``repro.kernels.ops``) the dispatched
+    programs route their hot-path primitives through: ``auto`` (default;
+    defers to ``REPRO_KERNELS`` then backend detection) | ``pallas`` |
+    ``interpret`` | ``ref``. Meaningful for every placement, so placement
+    and kernel policy travel together in one spec.
 
 Backends are planned once per (spec, mesh) and memoized: the same
 ``FactoryRegistry`` machinery that keeps sampler/finish callables stable for
@@ -55,6 +62,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..graphs.containers import round_up
+from ..kernels.ops import KERNEL_POLICIES
 from . import driver, streaming
 from .distributed import (
     make_replicated_finish,
@@ -70,8 +78,8 @@ from .primitives import (
 from .registry import FactoryRegistry
 
 __all__ = [
-    "ExecutionSpec", "PLACEMENTS", "make_backend", "plan_mesh",
-    "make_axis_mesh", "bucket_size", "StreamOps",
+    "ExecutionSpec", "PLACEMENTS", "KERNEL_POLICIES", "make_backend",
+    "plan_mesh", "make_axis_mesh", "bucket_size", "StreamOps",
 ]
 
 PLACEMENTS = ("single", "replicated", "sharded")
@@ -102,11 +110,15 @@ class ExecutionSpec:
     pad_multiple: int = 8       # pad="multiple": granularity
     donate: bool = False
     rounds: int = 0             # distributed outer rounds; 0 = fixpoint
+    kernels: str = "auto"       # KernelPolicy: auto | pallas | interpret | ref
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {self.placement!r}; "
                              f"have {PLACEMENTS}")
+        if self.kernels not in KERNEL_POLICIES:
+            raise ValueError(f"unknown kernel policy {self.kernels!r}; "
+                             f"have {KERNEL_POLICIES}")
         object.__setattr__(self, "axes", tuple(self.axes))
         for name in ("pad_multiple", "rounds"):
             v = getattr(self, name)
@@ -170,6 +182,8 @@ class ExecutionSpec:
             opts.append("donate")
         if self.rounds:
             opts.append(f"rounds={self.rounds}")
+        if self.kernels != "auto":
+            opts.append(f"kernels={self.kernels}")
         return head + (":" + ",".join(opts) if opts else "")
 
     @classmethod
@@ -213,6 +227,8 @@ class ExecutionSpec:
                 kw["donate"] = True
             elif key == "rounds" and eq:
                 kw["rounds"] = int(val)
+            elif key == "kernels" and eq:
+                kw["kernels"] = val.strip()
             elif key == "pad" and eq:
                 if val == "pow2":
                     kw["pad"] = "pow2"
@@ -355,6 +371,12 @@ class _Backend:
                            pad_multiple=self.spec.pad_multiple,
                            shards=self.edge_shards)
 
+    @property
+    def kernels(self) -> Optional[str]:
+        """The spec's KernelPolicy, normalized so the default shares jit
+        caches with policy-less call sites (auto ≡ None)."""
+        return None if self.spec.kernels == "auto" else self.spec.kernels
+
     def _base_stats(self, variant: str) -> driver.ConnectivityStats:
         return driver.ConnectivityStats(
             variant=variant, exec=str(self.spec),
@@ -372,11 +394,13 @@ class SingleBackend(_Backend):
         fused = self.spec.fused if fused is None else fused
         if fused:
             labels, stats = driver.run_connectivity_fused(
-                g, sampler_fn, finish_fn, key, variant=variant)
+                g, sampler_fn, finish_fn, key, variant=variant,
+                kernels=self.kernels)
         else:
             labels, stats = driver.run_connectivity(
                 g, sampler_fn, finish_fn, key, variant=variant,
-                compact_pad=self.spec.pad_multiple, pad=self.spec.pad)
+                compact_pad=self.spec.pad_multiple, pad=self.spec.pad,
+                kernels=self.kernels)
         # report the spec that actually ran: a per-call fused override must
         # show up in stats.exec, not just stats.fused
         stats.exec = str(dataclasses.replace(self.spec, fused=fused))
@@ -388,15 +412,17 @@ class SingleBackend(_Backend):
                         compress: str = "full"):
         return driver.run_spanning_forest(
             g, sampler_fn, key, compress=compress,
-            compact_pad=self.spec.pad_multiple, pad=self.spec.pad)
+            compact_pad=self.spec.pad_multiple, pad=self.spec.pad,
+            kernels=self.kernels)
 
     def stream_ops(self, n: int, finish_fn) -> StreamOps:
         def insert(state, u, v):
-            return streaming.insert_batch_rounds_fn(state, u, v, finish_fn)
+            return streaming.insert_batch_rounds_fn(state, u, v, finish_fn,
+                                                    self.kernels)
 
         def process(state, u, v, qa, qb):
             return streaming.process_batch_rounds_fn(state, u, v, qa, qb,
-                                                     finish_fn)
+                                                     finish_fn, self.kernels)
 
         return StreamOps(
             init=lambda: streaming.init_stream(n),
@@ -482,7 +508,7 @@ class _MeshBackend(_Backend):
         program = self._finish_program(finish_fn)
         labels, rounds = program(self._place_labels(P0), senders, receivers)
         stats.finish_rounds = int(rounds)
-        labels = canonical_labels(labels[: g.n + 1])
+        labels = canonical_labels(labels[: g.n + 1], kernels=self.kernels)
         return labels[: g.n], stats
 
     def spanning_forest(self, g, sampler_fn, key=None, *,
@@ -493,7 +519,8 @@ class _MeshBackend(_Backend):
         # docs/API.md).
         return driver.run_spanning_forest(
             g, sampler_fn, key, compress=compress,
-            compact_pad=self.spec.pad_multiple, pad=self.spec.pad)
+            compact_pad=self.spec.pad_multiple, pad=self.spec.pad,
+            kernels=self.kernels)
 
     def _stream_programs(self, n: int, finish_fn):
         key = ("stream", n, finish_fn)
@@ -533,7 +560,8 @@ class ReplicatedBackend(_MeshBackend):
 
     def _build_stream(self, n, finish_fn):
         return make_replicated_stream(self.mesh, self.spec.axes, finish_fn,
-                                      rounds=self.spec.rounds)
+                                      rounds=self.spec.rounds,
+                                      kernels=self.kernels)
 
     def _place_labels(self, P0):
         return jax.device_put(P0, NamedSharding(self.mesh, P()))
@@ -559,7 +587,8 @@ class ShardedBackend(_MeshBackend):
     def _build_stream(self, n, finish_fn):
         return make_sharded_stream(
             self.mesh, self.spec.axes, self.spec.label_axis, finish_fn,
-            reduce_scatter=self.spec.fused, rounds=self.spec.rounds)
+            reduce_scatter=self.spec.fused, rounds=self.spec.rounds,
+            kernels=self.kernels)
 
     def _place_labels(self, P0):
         # pad (n + 1,) to divide the label axis; extra slots are self-rooted

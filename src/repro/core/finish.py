@@ -21,12 +21,20 @@ are memoized so equal parameterizations share one callable — this keeps
 argument) stable across calls. The old flat string keys ("uf_sync_full",
 "liu_tarjan_CRFA", ...) survive as a deprecation shim: ``get_finish``.
 
-TPU adaptation (DESIGN.md §2): the asynchronous CAS union-find variants
-(UF-Rem-CAS etc.) become the synchronous ``uf_sync`` family, where the paper's
-find/compression options map onto per-round pointer-jumping aggressiveness:
+Every factory also takes ``kernels`` — the KernelPolicy (``auto | pallas |
+interpret | ref``, see ``repro.kernels.ops``) its hot loops dispatch
+through. Policies are part of the memoization key, so each policy gets its
+own callable and hence its own stable jit cache entry; ``kernels=None``
+defers to the ``REPRO_KERNELS`` environment variable / backend default.
 
-    FindNaive   → compress='naive' (one shortcut round)
-    FindHalve   → compress='halve' (two shortcut rounds)
+TPU adaptation (DESIGN.md §2): the asynchronous CAS union-find variants
+(UF-Rem-CAS etc.) become the synchronous ``uf_sync`` family, where one round
+is a *fused hook+compress* kernel dispatch (gather parents → root-mask →
+min-hook → shortcut hops in one ``pallas_call``) and the paper's
+find/compression options map onto the per-dispatch hop count:
+
+    FindNaive   → compress='naive' (one shortcut hop)
+    FindHalve   → compress='halve' (two shortcut rounds, chained hops)
     FindCompress→ compress='full'  (shortcut to fixpoint)
 
 The Liu–Tarjan framework, Shiloach–Vishkin, Stergiou, and label propagation
@@ -36,7 +44,7 @@ are already synchronous (MPC) algorithms and port rule-for-rule.
 from __future__ import annotations
 
 import warnings
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +52,13 @@ import jax.numpy as jnp
 from .primitives import (
     full_compress,
     hook_and_record,
+    hook_compress,
     init_forest,
+    iterate_to_fixpoint,
     jump_round,
     parents_of,
+    relabel_round,
+    rewrite_edges,
     write_min,
 )
 from .registry import FactoryRegistry, make_legacy_resolver
@@ -54,6 +66,11 @@ from .registry import FactoryRegistry, make_legacy_resolver
 FinishFn = Callable[..., tuple[jax.Array, jax.Array]]
 
 COMPRESS_MODES = ("naive", "halve", "full")
+
+# shortcut hops fused into the hook+compress dispatch per compress mode:
+# k chained hops compose as H^(k+1), so k=3 ≡ two P←P[P] rounds (halve);
+# 'full' runs the same fused dispatch, then pointer-jumps to fixpoint
+_HOOK_JUMPS = {"naive": 1, "halve": 3, "full": 3}
 
 _REGISTRY = FactoryRegistry("finish method")
 register_method = _REGISTRY.register
@@ -72,27 +89,28 @@ def make_finish(method: str, **params) -> FinishFn:
     return _REGISTRY.make(method, **params)
 
 
-def _loop(body, P, max_rounds: int):
-    """Run ``body: P -> P`` until fixpoint; returns (P, rounds)."""
+def _with_kernels(fn: FinishFn, kernels: Optional[str]) -> FinishFn:
+    """Bind a KernelPolicy onto a parameterless finish implementation.
 
-    def cond(st):
-        _, changed, i = st
-        return changed & (i < max_rounds)
+    ``None`` returns the module-level function itself, so the default policy
+    shares one identity (and jit cache) with direct callers."""
+    if kernels is None:
+        return fn
 
-    def step(st):
-        P, _, i = st
-        P2 = body(P)
-        return P2, jnp.any(P2 != P), i + 1
+    def bound(P, senders, receivers, *, max_rounds: int = 1 << 20):
+        return fn(P, senders, receivers, max_rounds=max_rounds,
+                  kernels=kernels)
 
-    P, _, rounds = jax.lax.while_loop(cond, step, (P, jnp.bool_(True), 0))
-    return P, rounds
+    bound.__name__ = f"{fn.__name__}[{kernels}]"
+    return bound
 
 
 # ---------------------------------------------------------------------------
 # Label propagation (paper B.2.6): frontier-based scatter-min.
 # ---------------------------------------------------------------------------
 
-def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
+def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20,
+               kernels: Optional[str] = None):
     n = P.shape[0] - 1
 
     def cond(st):
@@ -103,7 +121,7 @@ def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
         P, frontier, i = st
         act = frontier[senders]
         cand = jnp.where(act, P[senders], jnp.iinfo(P.dtype).max)
-        P2 = write_min(P, receivers, cand, act)
+        P2 = write_min(P, receivers, cand, act, kernels=kernels)
         return P2, P2 != P, i + 1
 
     init_frontier = jnp.ones((n + 1,), jnp.bool_).at[n].set(False)
@@ -112,63 +130,62 @@ def label_prop(P, senders, receivers, *, max_rounds: int = 1 << 20):
 
 
 @register_method("label_prop")
-def make_label_prop() -> FinishFn:
-    return label_prop
+def make_label_prop(kernels: Optional[str] = None) -> FinishFn:
+    return _with_kernels(label_prop, kernels)
 
 
 # ---------------------------------------------------------------------------
 # Shiloach–Vishkin (paper B.2.4): min-hook roots + full compression per round.
 # ---------------------------------------------------------------------------
 
-def shiloach_vishkin(P, senders, receivers, *, max_rounds: int = 1 << 20):
+def shiloach_vishkin(P, senders, receivers, *, max_rounds: int = 1 << 20,
+                     kernels: Optional[str] = None):
     def body(P):
-        pu = P[senders]
-        pv = P[receivers]
-        root_u = parents_of(P, pu) == pu
-        mask = root_u & (pv < pu)
-        P = write_min(P, pu, pv, mask)
-        return full_compress(P)
+        P = hook_compress(P, senders, receivers, jumps=_HOOK_JUMPS["full"],
+                          kernels=kernels)
+        return full_compress(P, kernels=kernels)
 
-    return _loop(body, P, max_rounds)
+    return iterate_to_fixpoint(body, P, max_rounds)
 
 
 @register_method("shiloach_vishkin")
-def make_shiloach_vishkin() -> FinishFn:
-    return shiloach_vishkin
+def make_shiloach_vishkin(kernels: Optional[str] = None) -> FinishFn:
+    return _with_kernels(shiloach_vishkin, kernels)
 
 
 # ---------------------------------------------------------------------------
 # UF-Sync family (TPU adaptation of the union-find variants, DESIGN.md §2).
 # ---------------------------------------------------------------------------
 
-def _compress(P, how: str):
+def _compress(P, how: str, *, kernels: Optional[str] = None):
     if how == "naive":
-        return jump_round(P)
+        return jump_round(P, kernels=kernels)
     if how == "halve":
-        return jump_round(jump_round(P))
+        return jump_round(P, 3, kernels=kernels)  # ≡ two P←P[P] rounds
     if how == "full":
-        return full_compress(P)
+        return full_compress(P, kernels=kernels)
     raise ValueError(how)
 
 
 @register_method("uf_sync")
-def make_uf_sync(compress: str = "naive") -> FinishFn:
+def make_uf_sync(compress: str = "naive",
+                 kernels: Optional[str] = None) -> FinishFn:
     if compress not in COMPRESS_MODES:
         raise ValueError(
             f"unknown compress mode {compress!r}; have {COMPRESS_MODES}")
 
     def uf_sync(P, senders, receivers, *, max_rounds: int = 1 << 20):
         def body(P):
-            pu = P[senders]
-            pv = P[receivers]
-            root_u = parents_of(P, pu) == pu
-            mask = root_u & (pv < pu)
-            P = write_min(P, pu, pv, mask)
-            return _compress(P, compress)
+            P = hook_compress(P, senders, receivers,
+                              jumps=_HOOK_JUMPS[compress], kernels=kernels)
+            if compress == "full":
+                P = full_compress(P, kernels=kernels)
+            return P
 
-        return _loop(body, P, max_rounds)
+        return iterate_to_fixpoint(body, P, max_rounds)
 
-    uf_sync.__name__ = f"uf_sync_{compress}"
+    uf_sync.__name__ = f"uf_sync_{compress}" + (
+        f"[{kernels}]" if kernels else "")
     return uf_sync
 
 
@@ -204,7 +221,8 @@ LIU_TARJAN_VARIANTS: dict[str, tuple[str, bool, str, bool]] = {
 }
 
 
-def _lt_connect(P, u, v, connect: str, rootup: bool):
+def _lt_connect(P, u, v, connect: str, rootup: bool,
+                kernels: Optional[str] = None):
     """One connect phase. u/v may be altered labels (possibly -1).
 
     RootUp ("update the parent value of a vertex iff it is a tree-root at the
@@ -224,14 +242,19 @@ def _lt_connect(P, u, v, connect: str, rootup: bool):
             mask = parents_of(P0, tgt) == tgt
         else:
             mask = None
-        return write_min(P, tgt, val, mask)
+        return write_min(P, tgt, val, mask, kernels=kernels)
 
     if connect == "connect":
         P = put(P, u, v)
         P = put(P, v, u)
     elif connect == "parent":
-        P = put(P, u, pv)
-        P = put(P, v, pu)
+        if rootup:
+            P = put(P, u, pv)
+            P = put(P, v, pu)
+        else:
+            # unmasked ParentConnect is exactly one edge-relabel round:
+            # both gather-min-scatter directions fuse into one dispatch
+            P = relabel_round(P, u, v, kernels=kernels)
     elif connect == "extended":
         P = put(P, u, pv)
         P = put(P, v, pu)
@@ -243,37 +266,34 @@ def _lt_connect(P, u, v, connect: str, rootup: bool):
 
 
 @register_method("liu_tarjan")
-def make_liu_tarjan(variant: str = "CRFA") -> FinishFn:
+def make_liu_tarjan(variant: str = "CRFA",
+                    kernels: Optional[str] = None) -> FinishFn:
     if variant not in LIU_TARJAN_VARIANTS:
         raise ValueError(f"unknown Liu-Tarjan variant {variant!r}; "
                          f"have {sorted(LIU_TARJAN_VARIANTS)}")
     connect, rootup, shortcut, alter = LIU_TARJAN_VARIANTS[variant]
 
     def liu_tarjan(P, senders, receivers, *, max_rounds: int = 1 << 20):
-        def cond(st):
-            _, _, _, changed, i = st
-            return changed & (i < max_rounds)
-
-        def body(st):
-            P, u, v, _, i = st
-            P2 = _lt_connect(P, u, v, connect, rootup)
-            P2 = full_compress(P2) if shortcut == "F" else jump_round(P2)
-            changed = jnp.any(P2 != P)
+        def step(st):
+            P, u, v = st
+            P2 = _lt_connect(P, u, v, connect, rootup, kernels)
+            P2 = (full_compress(P2, kernels=kernels) if shortcut == "F"
+                  else jump_round(P2, kernels=kernels))
             if alter:
-                u2, v2 = parents_of(P2, u), parents_of(P2, v)
                 # altered edges are part of the algorithm state: a round that
-                # only rewrites endpoints has not converged yet
-                changed = changed | jnp.any(u2 != u) | jnp.any(v2 != v)
+                # only rewrites endpoints has not converged yet (the default
+                # any-leaf-changed predicate of iterate_to_fixpoint sees them)
+                u2, v2 = rewrite_edges(P2, u, v, kernels=kernels)
             else:
                 u2, v2 = u, v
-            return P2, u2, v2, changed, i + 1
+            return P2, u2, v2
 
-        st = (P, senders.astype(P.dtype), receivers.astype(P.dtype),
-              jnp.bool_(True), 0)
-        P, _, _, _, rounds = jax.lax.while_loop(cond, body, st)
+        st0 = (P, senders.astype(P.dtype), receivers.astype(P.dtype))
+        (P, _, _), rounds = iterate_to_fixpoint(step, st0, max_rounds)
         return P, rounds
 
-    liu_tarjan.__name__ = f"liu_tarjan_{variant}"
+    liu_tarjan.__name__ = f"liu_tarjan_{variant}" + (
+        f"[{kernels}]" if kernels else "")
     return liu_tarjan
 
 
@@ -281,28 +301,22 @@ def make_liu_tarjan(variant: str = "CRFA") -> FinishFn:
 # Stergiou (paper B.2.5): ParentConnect with a two-array (prev/cur) labeling.
 # ---------------------------------------------------------------------------
 
-def stergiou(P, senders, receivers, *, max_rounds: int = 1 << 20):
-    def cond(st):
-        _, changed, i = st
-        return changed & (i < max_rounds)
+def stergiou(P, senders, receivers, *, max_rounds: int = 1 << 20,
+             kernels: Optional[str] = None):
+    def step(prev):
+        # ParentConnect on the parent-rewritten edges: rewrite endpoints to
+        # prev[e], then one edge-relabel round proposes each rewritten
+        # endpoint's parent to the other — two fused kernel dispatches
+        s2, r2 = rewrite_edges(prev, senders, receivers, kernels=kernels)
+        cur = relabel_round(prev, s2, r2, kernels=kernels)
+        return jump_round(cur, kernels=kernels)
 
-    def body(st):
-        cur, _, i = st
-        prev = cur
-        pu = parents_of(prev, prev[senders])
-        pv = parents_of(prev, prev[receivers])
-        cur = write_min(cur, prev[senders], pv)
-        cur = write_min(cur, prev[receivers], pu)
-        cur = jump_round(cur)
-        return cur, jnp.any(cur != prev), i + 1
-
-    P, _, rounds = jax.lax.while_loop(cond, body, (P, jnp.bool_(True), 0))
-    return P, rounds
+    return iterate_to_fixpoint(step, P, max_rounds)
 
 
 @register_method("stergiou")
-def make_stergiou() -> FinishFn:
-    return stergiou
+def make_stergiou(kernels: Optional[str] = None) -> FinishFn:
+    return _with_kernels(stergiou, kernels)
 
 
 # ---------------------------------------------------------------------------
@@ -361,26 +375,27 @@ class ForestState(NamedTuple):
 
 
 def uf_sync_forest(P, senders, receivers, fu=None, fv=None, *,
-                   compress: str = "full", max_rounds: int = 1 << 20):
+                   compress: str = "full", max_rounds: int = 1 << 20,
+                   kernels: Optional[str] = None):
     """uf_sync that records one forest edge per hooked root (Theorem 6)."""
     n = P.shape[0] - 1
     if fu is None:
         fu, fv = init_forest(n, P.dtype)
 
-    def cond(st):
-        _, _, _, changed, i = st
-        return changed & (i < max_rounds)
-
-    def body(st):
-        P, fu, fv, _, i = st
+    def step(st):
+        P, fu, fv = st
         pu = P[senders]
         pv = P[receivers]
         root_u = parents_of(P, pu) == pu
         mask = root_u & (pv < pu)
-        P2, fu, fv = hook_and_record(P, pu, pv, mask, senders, receivers, fu, fv)
-        P2 = _compress(P2, compress)
-        return P2, fu, fv, jnp.any(P2 != P), i + 1
+        P2, fu, fv = hook_and_record(P, pu, pv, mask, senders, receivers,
+                                     fu, fv, kernels=kernels)
+        P2 = _compress(P2, compress, kernels=kernels)
+        return P2, fu, fv
 
-    P, fu, fv, _, rounds = jax.lax.while_loop(
-        cond, body, (P, fu, fv, jnp.bool_(True), 0))
+    # converge on the labels only: the forest buffers can only change in a
+    # round whose hooks also decreased a label
+    (P, fu, fv), rounds = iterate_to_fixpoint(
+        step, (P, fu, fv), max_rounds,
+        changed_fn=lambda old, new: jnp.any(old[0] != new[0]))
     return ForestState(P, fu, fv), rounds

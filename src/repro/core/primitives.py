@@ -9,14 +9,25 @@ The connectivity labeling ``P`` is a ``(n + 1,)`` integer array:
 
 ``write_min`` is the TPU-native form of the paper's ``writeMin`` (Appendix A):
 scatter-with-min-combiner replaces the CAS retry loop.
+
+Every hot-path primitive dispatches through the **KernelPolicy** layer
+(``repro.kernels.ops``): a ``kernels`` argument — ``auto | pallas |
+interpret | ref``, defaulting to the ``REPRO_KERNELS`` environment variable
+then backend auto-detection — selects between the pure-jnp reference
+implementations and the Pallas TPU kernels. Both share one semantics
+contract (padding, dump slots, ``-1`` fixed points), so any caller may run
+under any policy.
 """
 
 from __future__ import annotations
 
-from functools import partial
+from functools import partial, reduce
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels import ops
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 DEFAULT_MAX_ROUNDS = 1 << 20
@@ -32,35 +43,81 @@ def parents_of(P: jax.Array, x: jax.Array) -> jax.Array:
 
 
 def write_min(P: jax.Array, idx: jax.Array, vals: jax.Array,
-              mask: jax.Array | None = None) -> jax.Array:
+              mask: jax.Array | None = None, *,
+              kernels: Optional[str] = None) -> jax.Array:
     """``P[idx] = min(P[idx], vals)`` with negative/masked targets dumped."""
-    n = P.shape[0] - 1
-    ok = idx >= 0
-    if mask is not None:
-        ok = ok & mask
-    idx = jnp.where(ok, idx, n)
-    vals = jnp.where(ok, vals, jnp.asarray(n, P.dtype))
-    return P.at[idx].min(vals.astype(P.dtype))
+    return ops.scatter_min(P, idx, vals, mask, policy=kernels)
 
 
-def jump_round(P: jax.Array) -> jax.Array:
-    """One pointer-jumping (shortcut) round: ``P ← P[P]``."""
-    return parents_of(P, P)
+def jump_round(P: jax.Array, k: int = 1, *,
+               kernels: Optional[str] = None) -> jax.Array:
+    """``k`` chained shortcut hops in one dispatch.
+
+    ``k=1`` is one pointer-jumping round ``P ← P[P]``; chained hops compose
+    (``k=3`` ≡ two successive rounds — FindHalve in a single HBM pass)."""
+    return ops.pointer_jump(P, k=k, policy=kernels)
 
 
-def full_compress(P: jax.Array, max_rounds: int = 64) -> jax.Array:
-    """Pointer-jump to fixpoint. log2(longest path) rounds."""
+def hook_compress(P: jax.Array, senders: jax.Array, receivers: jax.Array,
+                  *, jumps: int = 1,
+                  kernels: Optional[str] = None) -> jax.Array:
+    """One fused uf_sync round (root-masked min-hook + ``jumps`` shortcut
+    hops) — a single kernel dispatch on the Pallas path."""
+    return ops.hook_compress(P, senders, receivers, k=jumps, policy=kernels)
+
+
+def relabel_round(P: jax.Array, senders: jax.Array, receivers: jax.Array,
+                  *, kernels: Optional[str] = None) -> jax.Array:
+    """One edge-relabel round: each endpoint proposes its label to the other
+    (scatter-min merge). Negative endpoints propose ``-1`` but are dumped as
+    targets — the Liu–Tarjan ParentConnect rule on (possibly altered) edges."""
+    return ops.edge_relabel(P, senders, receivers, policy=kernels)
+
+
+def rewrite_edges(P: jax.Array, senders: jax.Array, receivers: jax.Array,
+                  *, kernels: Optional[str] = None):
+    """Rewrite both edge endpoints to their parents, ``e ← P[e]`` (``-1``
+    fixed) — the Liu–Tarjan alter step and the streaming batch relabel."""
+    return ops.edge_rewrite(P, senders, receivers, policy=kernels)
+
+
+def iterate_to_fixpoint(step, state, max_rounds: int = DEFAULT_MAX_ROUNDS,
+                        *, changed_fn=None):
+    """Run ``step: state -> state`` until nothing changes → (state, rounds).
+
+    The one fixpoint-loop implementation shared by ``full_compress``, the
+    finish-method outer loops (uf_sync / Shiloach–Vishkin / Stergiou /
+    Liu–Tarjan), and the distributed merge loops. ``changed_fn(old, new)``
+    customizes the convergence predicate (e.g. compare only the label leaf,
+    or reduce the flag across a device mesh); the default is "any leaf of
+    the state pytree changed"."""
+    if changed_fn is None:
+        def changed_fn(old, new):
+            return reduce(jnp.logical_or,
+                          (jnp.any(a != b)
+                           for a, b in zip(jax.tree_util.tree_leaves(old),
+                                           jax.tree_util.tree_leaves(new))))
 
     def cond(st):
-        P, changed, i = st
+        _, changed, i = st
         return changed & (i < max_rounds)
 
     def body(st):
-        P, _, i = st
-        P2 = jump_round(P)
-        return P2, jnp.any(P2 != P), i + 1
+        old, _, i = st
+        new = step(old)
+        return new, changed_fn(old, new), i + 1
 
-    P, _, _ = jax.lax.while_loop(cond, body, (P, jnp.bool_(True), 0))
+    state, _, rounds = jax.lax.while_loop(
+        cond, body, (state, jnp.bool_(True), 0))
+    return state, rounds
+
+
+def full_compress(P: jax.Array, max_rounds: int = 64, *, jumps: int = 1,
+                  kernels: Optional[str] = None) -> jax.Array:
+    """Pointer-jump to fixpoint. log2(longest path) rounds at ``jumps=1``;
+    larger ``jumps`` chain more hops per dispatch (fewer HBM passes)."""
+    P, _ = iterate_to_fixpoint(
+        lambda P: jump_round(P, jumps, kernels=kernels), P, max_rounds)
     return P
 
 
@@ -87,9 +144,7 @@ def most_frequent(P: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 def num_components(P: jax.Array) -> jax.Array:
     """Number of distinct labels over real vertices (P must be compressed)."""
-    n = P.shape[0] - 1
-    counts = count_labels(P)
-    return jnp.sum(counts > 0)
+    return jnp.sum(count_labels(P) > 0)
 
 
 def relabel_lmax(P: jax.Array, lmax: jax.Array) -> jax.Array:
@@ -108,7 +163,8 @@ def restore_lmax(P: jax.Array) -> jax.Array:
     return jnp.where(P == -1, rep, P)
 
 
-def min_vertex_labels(P: jax.Array) -> jax.Array:
+def min_vertex_labels(P: jax.Array, *,
+                      kernels: Optional[str] = None) -> jax.Array:
     """Relabel every component to its minimum member vertex id.
 
     A compressed labeling is partition-correct but its representative may be
@@ -118,19 +174,21 @@ def min_vertex_labels(P: jax.Array) -> jax.Array:
     n = P.shape[0] - 1
     ids = jnp.arange(n + 1, dtype=P.dtype)
     real = (P >= 0) & (ids < n)
-    tgt = jnp.where(real, P, n)
-    reps = jnp.full((n + 1,), n, P.dtype).at[tgt].min(jnp.where(real, ids, n))
+    reps = ops.scatter_min(jnp.full((n + 1,), n, P.dtype), P, ids, real,
+                           policy=kernels)
     safe = jnp.minimum(jnp.maximum(P, 0), n)
     return jnp.where(P >= 0, reps[safe], P).at[n].set(n)
 
 
-@partial(jax.jit, static_argnames=("max_rounds",))
-def canonical_labels(P: jax.Array, max_rounds: int = 64) -> jax.Array:
-    P = full_compress(P, max_rounds)
-    return min_vertex_labels(restore_lmax(P))
+@partial(jax.jit, static_argnames=("max_rounds", "kernels"))
+def canonical_labels(P: jax.Array, max_rounds: int = 64,
+                     kernels: Optional[str] = None) -> jax.Array:
+    P = full_compress(P, max_rounds, kernels=kernels)
+    return min_vertex_labels(restore_lmax(P), kernels=kernels)
 
 
-def hook_and_record(P, idx, vals, mask, eu, ev, fu, fv):
+def hook_and_record(P, idx, vals, mask, eu, ev, fu, fv, *,
+                    kernels: Optional[str] = None):
     """writeMin hook that also records the winning edge per hooked root.
 
     Root-based spanning forest rule (paper §3.4 / Theorem 6): when root ``x``'s
@@ -140,7 +198,7 @@ def hook_and_record(P, idx, vals, mask, eu, ev, fu, fv):
     """
     n = P.shape[0] - 1
     old = P
-    P = write_min(P, idx, vals, mask)
+    P = write_min(P, idx, vals, mask, kernels=kernels)
     safe_idx = jnp.where((idx >= 0) & (idx <= n), idx, n)
     won = (
         (mask if mask is not None else jnp.bool_(True))
@@ -151,7 +209,7 @@ def hook_and_record(P, idx, vals, mask, eu, ev, fu, fv):
     m = eu.shape[0]
     eid = jnp.arange(m, dtype=jnp.int32)
     ebuf = jnp.full((n + 1,), INT_MAX, jnp.int32)
-    ebuf = ebuf.at[jnp.where(won, safe_idx, n)].min(jnp.where(won, eid, INT_MAX))
+    ebuf = ops.scatter_min(ebuf, safe_idx, eid, won, policy=kernels)
     sel = (ebuf < INT_MAX) & (fu == -1)
     take = jnp.minimum(ebuf, m - 1)
     fu = jnp.where(sel, eu[take], fu)

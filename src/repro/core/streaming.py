@@ -10,24 +10,31 @@ queries — our phase split matches the paper's Type (3) phase-concurrency).
 
 The labeling is kept *fully compressed* between batches so queries are O(1)
 gathers — mirroring the paper's observation that compression work shifts
-latency from queries to inserts.
+latency from queries to inserts. Compression also powers the *streaming
+relabel path*: because the labeling is compressed, rewriting each incoming
+batch endpoint to its parent (one ``edge_rewrite`` kernel dispatch) maps it
+to its component representative, so the finish method hooks roots directly
+instead of re-walking chains — the paper's edge-relabeling optimization
+applied per batch.
 
-The ``*_fn`` functions take a resolved finish *callable* (static jit arg);
-they back the ``repro.api.ConnectIt(spec).stream(n)`` handle. The old
-string-keyed ``insert_batch``/``process_batch`` remain as deprecation shims.
+The ``*_fn`` functions take a resolved finish *callable* (static jit arg)
+plus an optional ``kernels`` KernelPolicy (static; see repro.kernels.ops)
+for the relabel/compress dispatches around it; they back the
+``repro.api.ConnectIt(spec).stream(n)`` handle. The old string-keyed
+``insert_batch``/``process_batch`` remain as deprecation shims.
 """
 
 from __future__ import annotations
 
 import warnings
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .finish import resolve_finish
-from .primitives import full_compress, init_labels
+from .primitives import full_compress, init_labels, rewrite_edges
 
 
 class StreamState(NamedTuple):
@@ -38,17 +45,20 @@ def init_stream(n: int, dtype=jnp.int32) -> StreamState:
     return StreamState(init_labels(n, dtype))
 
 
-@partial(jax.jit, static_argnames=("finish_fn",))
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
 def insert_batch_fn(state: StreamState, batch_u, batch_v,
-                    finish_fn: Callable) -> StreamState:
+                    finish_fn: Callable,
+                    kernels: Optional[str] = None) -> StreamState:
     """Apply a batch of edge insertions. Batches are symmetrized internally
     (min-based finish methods hook along the lower-endpoint direction, so
     both directions must be visible — static graphs carry both by
-    construction). Padded slots must point at the dump id n."""
+    construction) and endpoint-relabeled against the compressed state (see
+    module docstring). Padded slots must point at the dump id n."""
     u = jnp.concatenate([batch_u, batch_v])
     v = jnp.concatenate([batch_v, batch_u])
+    u, v = rewrite_edges(state.P, u, v, kernels=kernels)
     P, _ = finish_fn(state.P, u, v)
-    return StreamState(full_compress(P))
+    return StreamState(full_compress(P, kernels=kernels))
 
 
 @jax.jit
@@ -57,11 +67,11 @@ def query_batch(state: StreamState, qa, qb) -> jax.Array:
     return state.P[qa] == state.P[qb]
 
 
-@partial(jax.jit, static_argnames=("finish_fn",))
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
 def process_batch_fn(state: StreamState, batch_u, batch_v, qa, qb,
-                     finish_fn: Callable):
+                     finish_fn: Callable, kernels: Optional[str] = None):
     """Inserts then queries, one dispatch (paper Algorithm 3 ProcessBatch)."""
-    state = insert_batch_fn(state, batch_u, batch_v, finish_fn)
+    state = insert_batch_fn(state, batch_u, batch_v, finish_fn, kernels)
     return state, query_batch(state, qa, qb)
 
 
@@ -70,19 +80,23 @@ def process_batch_fn(state: StreamState, batch_u, batch_v, qa, qb,
 # ``repro.api.Stream`` can fill ConnectivityStats without a host sync per
 # batch. Kept separate so the established *_fn return shapes stay stable.
 
-@partial(jax.jit, static_argnames=("finish_fn",))
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
 def insert_batch_rounds_fn(state: StreamState, batch_u, batch_v,
-                           finish_fn: Callable):
+                           finish_fn: Callable,
+                           kernels: Optional[str] = None):
     u = jnp.concatenate([batch_u, batch_v])
     v = jnp.concatenate([batch_v, batch_u])
+    u, v = rewrite_edges(state.P, u, v, kernels=kernels)
     P, rounds = finish_fn(state.P, u, v)
-    return StreamState(full_compress(P)), rounds
+    return StreamState(full_compress(P, kernels=kernels)), rounds
 
 
-@partial(jax.jit, static_argnames=("finish_fn",))
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
 def process_batch_rounds_fn(state: StreamState, batch_u, batch_v, qa, qb,
-                            finish_fn: Callable):
-    state, rounds = insert_batch_rounds_fn(state, batch_u, batch_v, finish_fn)
+                            finish_fn: Callable,
+                            kernels: Optional[str] = None):
+    state, rounds = insert_batch_rounds_fn(state, batch_u, batch_v,
+                                           finish_fn, kernels)
     return state, query_batch(state, qa, qb), rounds
 
 

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: blocked edge relabel (gather-min-scatter).
+"""Pallas TPU kernels: blocked edge relabel (gather-min-scatter) and edge
+endpoint rewrite (the Liu–Tarjan alter step / streaming relabel).
 
 The ConnectIt hot loop. Edges stream HBM→VMEM in blocks of ``block_m``;
 the label array is resident in VMEM (one block covering all of it — callers
@@ -10,6 +11,8 @@ full-array output block is the standard accumulation pattern).
 VMEM budget: labels ≤ ~4M int32 (16 MB) + 2·block_m edge ids; block_m = 8192
 keeps the working set ≤ 16.1 MB. Gathers read the *input* labels ref (round-
 start snapshot ⇒ Jacobi semantics, matching the bulk-synchronous oracle).
+Negative endpoints (``-1`` virtual-minimum labels on altered edges) propose
+their label but are never scatter targets — see ref.py for the contract.
 """
 
 from __future__ import annotations
@@ -21,6 +24,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _gather_label(labels, e):
+    """parents_of for in-kernel use: labels[e] with negatives fixed."""
+    return jnp.where(e < 0, e, labels[jnp.maximum(e, 0)])
+
+
 def _edge_relabel_kernel(labels_ref, s_ref, r_ref, out_ref):
     step = pl.program_id(0)
 
@@ -29,13 +37,17 @@ def _edge_relabel_kernel(labels_ref, s_ref, r_ref, out_ref):
         out_ref[...] = labels_ref[...]
 
     labels = labels_ref[...]
+    big = jnp.iinfo(labels.dtype).max
+    dump = labels.shape[0] - 1
     s = s_ref[...]
     r = r_ref[...]
-    cand_to_r = labels[s]   # propose sender label to receiver
-    cand_to_s = labels[r]   # and vice versa (undirected)
+    cand_to_r = _gather_label(labels, s)   # propose sender label to receiver
+    cand_to_s = _gather_label(labels, r)   # and vice versa (undirected)
     acc = out_ref[...]
-    acc = acc.at[r].min(cand_to_r)
-    acc = acc.at[s].min(cand_to_s)
+    acc = acc.at[jnp.where(r < 0, dump, r)].min(
+        jnp.where(r < 0, big, cand_to_r))
+    acc = acc.at[jnp.where(s < 0, dump, s)].min(
+        jnp.where(s < 0, big, cand_to_s))
     out_ref[...] = acc
 
 
@@ -58,5 +70,41 @@ def edge_relabel(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
         ],
         out_specs=pl.BlockSpec((n_pad,), lambda i: (0,)),  # accumulated labels
         out_shape=jax.ShapeDtypeStruct((n_pad,), labels.dtype),
+        interpret=interpret,
+    )(labels, senders, receivers)
+
+
+def _edge_rewrite_kernel(labels_ref, s_ref, r_ref, s_out_ref, r_out_ref):
+    labels = labels_ref[...]
+    s_out_ref[...] = _gather_label(labels, s_ref[...])
+    r_out_ref[...] = _gather_label(labels, r_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def edge_rewrite(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
+                 *, block_m: int = 8192, interpret: bool = True):
+    """Rewrite edge endpoints to their parents: ``e ← P[e]`` (-1 fixed).
+
+    Pure blocked gather — no accumulation, so edge blocks are independent
+    grid steps. Returns (senders', receivers')."""
+    n_pad = labels.shape[0]
+    m_pad = senders.shape[0]
+    assert m_pad % block_m == 0 or m_pad < block_m, (m_pad, block_m)
+    block_m = min(block_m, m_pad)
+    grid = (m_pad // block_m,)
+    eblock = pl.BlockSpec((block_m,), lambda i: (i,))
+    return pl.pallas_call(
+        _edge_rewrite_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pad,), lambda i: (0,)),        # labels: resident
+            eblock,                                        # sender block
+            eblock,                                        # receiver block
+        ],
+        out_specs=(eblock, eblock),
+        out_shape=(
+            jax.ShapeDtypeStruct((m_pad,), labels.dtype),
+            jax.ShapeDtypeStruct((m_pad,), labels.dtype),
+        ),
         interpret=interpret,
     )(labels, senders, receivers)

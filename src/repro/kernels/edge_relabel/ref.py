@@ -1,9 +1,17 @@
-"""Pure-jnp oracle for the edge_relabel kernel.
+"""Pure-jnp oracles for the edge_relabel kernel pair.
 
-One bulk-synchronous relabel round (the inner loop of every ConnectIt finish
-method): gather round-start labels at both edge endpoints, propose each
-endpoint's label to the other, merge with min. Jacobi semantics: all gathers
-read the *input* labeling; proposals combine with scatter-min.
+``edge_relabel_ref`` — one bulk-synchronous relabel round (the inner loop of
+every ConnectIt finish method): gather round-start labels at both edge
+endpoints, propose each endpoint's label to the other, merge with min.
+Jacobi semantics: all gathers read the *input* labeling; proposals combine
+with scatter-min. Negative endpoints (Liu–Tarjan altered edges can carry the
+``-1`` virtual-minimum label) are handled per the core contract: a negative
+endpoint *proposes* its negative label (the virtual minimum always wins) but
+is never a scatter target (dumped onto the last, self-labeled slot).
+
+``edge_rewrite_ref`` — the Liu–Tarjan *alter* step / streaming endpoint
+relabel: rewrite both endpoints of every edge to their current parent
+(``-1`` and self-labeled slots are fixed points).
 """
 
 from __future__ import annotations
@@ -13,11 +21,29 @@ import jax.numpy as jnp
 
 def edge_relabel_ref(labels: jnp.ndarray, senders: jnp.ndarray,
                      receivers: jnp.ndarray) -> jnp.ndarray:
-    """labels: (n_pad,) int32; senders/receivers: (m_pad,) int32 in [0, n_pad).
+    """labels: (n_pad,); senders/receivers: (m_pad,) in {-1} ∪ [0, n_pad).
 
-    Padded edges must point at a self-labeled dump row.
+    Padded edges must point at a self-labeled dump slot.
     """
+    big = jnp.iinfo(labels.dtype).max
+    dump = labels.shape[0] - 1
+    ls = jnp.where(senders < 0, senders.astype(labels.dtype),
+                   labels[jnp.maximum(senders, 0)])
+    lr = jnp.where(receivers < 0, receivers.astype(labels.dtype),
+                   labels[jnp.maximum(receivers, 0)])
     out = labels
-    out = out.at[receivers].min(labels[senders])
-    out = out.at[senders].min(labels[receivers])
+    out = out.at[jnp.where(receivers < 0, dump, receivers)].min(
+        jnp.where(receivers < 0, big, ls))
+    out = out.at[jnp.where(senders < 0, dump, senders)].min(
+        jnp.where(senders < 0, big, lr))
     return out
+
+
+def edge_rewrite_ref(labels: jnp.ndarray, senders: jnp.ndarray,
+                     receivers: jnp.ndarray):
+    """Rewrite edge endpoints to their parents: ``e ← P[e]`` (-1 fixed)."""
+    s2 = jnp.where(senders < 0, senders.astype(labels.dtype),
+                   labels[jnp.maximum(senders, 0)])
+    r2 = jnp.where(receivers < 0, receivers.astype(labels.dtype),
+                   labels[jnp.maximum(receivers, 0)])
+    return s2, r2

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused hook+compress kernel.
+
+One synchronous ``uf_sync`` round (ConnectIt's union-find hook rule plus
+per-round find/compression, paper §3.3 / Appendix A), as a single op:
+
+  1. gather round-start parents ``pu = P[s]``, ``pv = P[r]``;
+  2. root-mask: hook only when ``pu`` is a round-start root and ``pv < pu``
+     (min-based union — labels only decrease);
+  3. scatter-min the winning proposals into the label array (writeMin);
+  4. ``k`` chained shortcut hops through the *hooked* array snapshot
+     (``k=1`` ≡ one ``P ← P[P]`` round; ``k=3`` ≡ two successive rounds —
+     chained hops compose as ``H^(k+1)``).
+
+``-1`` (the virtual-minimum label pinning L_max, see core/primitives.py) is
+a fixed point of every phase: it never hooks (not a scatter target), always
+wins scatter-min ties, and stops shortcut chains.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hook_compress_ref(labels: jnp.ndarray, senders: jnp.ndarray,
+                      receivers: jnp.ndarray, *, k: int = 1) -> jnp.ndarray:
+    """labels (L,) int; senders/receivers (m,) int32 in [0, L).
+
+    Padded edges must point at a self-labeled dump slot.
+    """
+    big = jnp.iinfo(labels.dtype).max
+    dump = labels.shape[0] - 1
+    pu = labels[senders]
+    pv = labels[receivers]
+    ppu = jnp.where(pu < 0, pu, labels[jnp.maximum(pu, 0)])
+    ok = (pu >= 0) & (ppu == pu) & (pv < pu)
+    tgt = jnp.where(ok, pu, dump)
+    val = jnp.where(ok, pv, big)
+    hooked = labels.at[tgt].min(val)
+    out = hooked
+    for _ in range(k):
+        out = jnp.where(out < 0, out, hooked[jnp.maximum(out, 0)])
+    return out

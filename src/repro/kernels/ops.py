@@ -1,42 +1,243 @@
-"""Backend-dispatching jit wrappers for the Pallas kernels.
+"""KernelPolicy: pluggable dispatch for the connectivity hot-path kernels.
 
-On TPU backends the compiled Pallas path is used; elsewhere (this CPU
-container, and any host-device dry-run) the pure-jnp reference path runs —
-the kernels themselves are still exercised under ``interpret=True`` by the
-test suite, which sweeps shapes/dtypes against the oracles.
+Every ConnectIt hot-path primitive (``writeMin`` scatter-min, pointer-jump
+compression, the fused uf_sync hook+compress round, edge relabel/rewrite)
+has two interchangeable implementations — a pure-jnp reference and a Pallas
+TPU kernel — with *identical semantics*, selected by a **kernel policy**:
+
+    auto        pallas on TPU backends, ref elsewhere (the default)
+    pallas      force the compiled Pallas path (TPU)
+    interpret   run the Pallas kernels under ``interpret=True`` — the
+                compiled code path, executable on CPU (CI parity runs)
+    ref         force the pure-jnp reference path
+
+Selection precedence (first set wins):
+
+    1. an explicit ``policy=`` argument — ``ConnectIt(spec, kernels=...)``
+       and the ``ExecutionSpec.kernels`` field thread through here;
+    2. the ``REPRO_KERNELS`` environment variable;
+    3. ``auto`` (backend detection).
+
+The policy is resolved at *trace* time: callables memoized per policy (the
+``kernels=`` parameter of the finish factories) re-trace per policy, while
+programs built with the default resolve the environment once per process —
+set ``REPRO_KERNELS`` before building programs, or use the knob.
+
+This layer owns the dispatch contract between core arrays and kernels:
+
+  * **padding** — core label arrays are ``(n + 1,)`` with arbitrary ``n``;
+    kernels want lane-aligned, block-divisible lengths. Labels are padded
+    with self-labeled slots (fixed points of every primitive), edge arrays
+    with dump-slot sentinels; results are sliced back to ``(n + 1,)``.
+  * **dump-slot semantics** — negative / masked / out-of-range scatter
+    targets are dumped onto a self-labeled slot with a max-sentinel value,
+    so the scatter is a no-op regardless of the target buffer's contents.
+  * **-1 virtual-minimum fixed points** — the ``-1`` label pinning L_max
+    (core/primitives.py) never hooks, wins every min, and stops every
+    pointer chain, in both implementations of every op.
 """
 
 from __future__ import annotations
 
-import jax
+import os
+from typing import Optional
 
+import jax
+import jax.numpy as jnp
+
+from ..graphs.containers import round_up
 from .edge_relabel.kernel import edge_relabel as _edge_relabel_pallas
-from .edge_relabel.ref import edge_relabel_ref
+from .edge_relabel.kernel import edge_rewrite as _edge_rewrite_pallas
+from .edge_relabel.ref import edge_relabel_ref, edge_rewrite_ref
 from .embedding_bag.kernel import embedding_bag as _embedding_bag_pallas
 from .embedding_bag.ref import embedding_bag_ref
+from .hook_compress.kernel import hook_compress as _hook_compress_pallas
+from .hook_compress.ref import hook_compress_ref
 from .pointer_jump.kernel import pointer_jump as _pointer_jump_pallas
 from .pointer_jump.ref import pointer_jump_ref
+from .scatter_min.kernel import scatter_min as _scatter_min_pallas
+from .scatter_min.ref import scatter_min_ref
+
+__all__ = [
+    "KERNEL_POLICIES", "ENV_VAR", "default_policy", "resolve_policy",
+    "scatter_min", "pointer_jump", "hook_compress", "edge_relabel",
+    "edge_rewrite", "embedding_bag",
+]
+
+KERNEL_POLICIES = ("auto", "pallas", "interpret", "ref")
+ENV_VAR = "REPRO_KERNELS"
+
+_LANE = 128  # TPU lane width: 1-D label/edge buffers pad to multiples of it
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def edge_relabel(labels, senders, receivers, *, block_m: int = 8192):
-    if _on_tpu():
-        return _edge_relabel_pallas(labels, senders, receivers,
-                                    block_m=block_m, interpret=False)
-    return edge_relabel_ref(labels, senders, receivers)
+def default_policy() -> str:
+    """The process-level policy: ``REPRO_KERNELS`` if set, else ``auto``."""
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if not env:
+        return "auto"
+    if env not in KERNEL_POLICIES:
+        raise ValueError(
+            f"bad {ENV_VAR}={env!r}; have {KERNEL_POLICIES}")
+    return env
 
 
-def pointer_jump(labels, *, k: int = 1, block: int = 8192):
-    if _on_tpu():
-        return _pointer_jump_pallas(labels, k=k, block=block, interpret=False)
-    return pointer_jump_ref(labels, k=k)
+def resolve_policy(policy: Optional[str] = None) -> str:
+    """Resolve an (optional) explicit policy to a concrete implementation:
+    ``pallas`` | ``interpret`` | ``ref``."""
+    p = (policy or "auto").strip().lower()
+    if p == "auto":
+        p = default_policy()
+    if p == "auto":
+        p = "pallas" if _on_tpu() else "ref"
+    if p not in KERNEL_POLICIES or p == "auto":
+        raise ValueError(f"unknown kernel policy {policy!r}; "
+                         f"have {KERNEL_POLICIES}")
+    return p
 
 
-def embedding_bag(table, idx, *, mode: str = "sum", block_b: int = 1024):
-    if _on_tpu():
-        return _embedding_bag_pallas(table, idx, mode=mode, block_b=block_b,
-                                     interpret=False)
-    return embedding_bag_ref(table, idx, mode=mode)
+# ---------------------------------------------------------------------------
+# Dispatch-contract helpers: padding to kernel-friendly shapes.
+# ---------------------------------------------------------------------------
+
+def _padded_size(size: int, block: int) -> int:
+    """Lane-aligned size; block-divisible once it exceeds one block."""
+    padded = round_up(max(size, 1), _LANE)
+    if padded > block:
+        padded = round_up(size, block)
+    return padded
+
+
+def _pad_labels(P: jax.Array, block: int) -> jax.Array:
+    """Pad a label array with self-labeled slots (fixed points of every op)."""
+    L = P.shape[0]
+    Lp = _padded_size(L, block)
+    if Lp == L:
+        return P
+    return jnp.concatenate([P, jnp.arange(L, Lp, dtype=P.dtype)])
+
+
+def _pad_edges(arrs, fills, block_m: int):
+    """Pad parallel edge-indexed arrays to a kernel-divisible length."""
+    m = arrs[0].shape[0]
+    mp = _padded_size(m, block_m)
+    if mp == m:
+        return arrs
+    return tuple(
+        jnp.concatenate([a, jnp.full((mp - m,), fill, a.dtype)])
+        for a, fill in zip(arrs, fills))
+
+
+# ---------------------------------------------------------------------------
+# The ops. Each takes core-convention arrays — labels ``(n + 1,)`` with dump
+# row ``n`` — applies the dispatch contract, and returns core-shaped results.
+# ---------------------------------------------------------------------------
+
+def scatter_min(P: jax.Array, idx: jax.Array, vals: jax.Array,
+                mask: Optional[jax.Array] = None, *,
+                policy: Optional[str] = None, block_m: int = 8192
+                ) -> jax.Array:
+    """``P[idx] = min(P[idx], vals)`` — the paper's writeMin (Appendix A).
+
+    Negative, masked, and out-of-range targets are dumped (no-op scatter of
+    the dtype's max sentinel), so ``P``'s dump row and any non-label buffer
+    (e.g. the forest edge-id buffer) are safe targets."""
+    p = resolve_policy(policy)
+    n = P.shape[0] - 1
+    big = jnp.iinfo(P.dtype).max
+    ok = (idx >= 0) & (idx <= n)
+    if mask is not None:
+        ok = ok & mask
+    idx = jnp.where(ok, idx, n)
+    vals = jnp.where(ok, vals.astype(P.dtype), big)
+    if p == "ref":
+        return scatter_min_ref(P, idx, vals)
+    Ppad = _pad_labels(P, block_m)
+    idx, vals = _pad_edges((idx, vals), (n, big), block_m)
+    out = _scatter_min_pallas(Ppad, idx, vals, block_m=block_m,
+                              interpret=(p == "interpret"))
+    return out[: n + 1]
+
+
+def pointer_jump(labels: jax.Array, *, k: int = 1,
+                 policy: Optional[str] = None, block: int = 8192
+                 ) -> jax.Array:
+    """``k`` chained shortcut hops through the round-start snapshot.
+
+    ``k=1`` is exactly one ``P ← P[P]`` round; chained hops compose, so
+    ``k=3`` in one dispatch equals two successive rounds (FindHalve).
+    ``-1`` labels and self-labeled slots are fixed points."""
+    p = resolve_policy(policy)
+    if p == "ref":
+        return pointer_jump_ref(labels, k=k)
+    L = labels.shape[0]
+    Ppad = _pad_labels(labels, block)
+    out = _pointer_jump_pallas(Ppad, k=k, block=block,
+                               interpret=(p == "interpret"))
+    return out[:L]
+
+
+def hook_compress(P: jax.Array, senders: jax.Array, receivers: jax.Array,
+                  *, k: int = 1, policy: Optional[str] = None,
+                  block_m: int = 8192) -> jax.Array:
+    """One fused uf_sync round: root-masked min-hook + ``k`` shortcut hops.
+
+    Equivalent to ``write_min(P, P[s], P[r], root-mask)`` followed by
+    ``pointer_jump(·, k)`` on the hooked array, in a single dispatch."""
+    p = resolve_policy(policy)
+    if p == "ref":
+        return hook_compress_ref(P, senders, receivers, k=k)
+    n = P.shape[0] - 1
+    Ppad = _pad_labels(P, block_m)
+    dump = Ppad.shape[0] - 1
+    s, r = _pad_edges((senders, receivers), (dump, dump), block_m)
+    out = _hook_compress_pallas(Ppad, s, r, k=k, block_m=block_m,
+                                interpret=(p == "interpret"))
+    return out[: n + 1]
+
+
+def edge_relabel(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
+                 *, policy: Optional[str] = None, block_m: int = 8192
+                 ) -> jax.Array:
+    """One relabel round: propose each endpoint's label to the other, merge
+    with scatter-min (the inner loop of label-propagation-style finishes and
+    the Liu–Tarjan ParentConnect rule)."""
+    p = resolve_policy(policy)
+    if p == "ref":
+        return edge_relabel_ref(labels, senders, receivers)
+    L = labels.shape[0]
+    Ppad = _pad_labels(labels, block_m)
+    dump = Ppad.shape[0] - 1
+    s, r = _pad_edges((senders, receivers), (dump, dump), block_m)
+    out = _edge_relabel_pallas(Ppad, s, r, block_m=block_m,
+                               interpret=(p == "interpret"))
+    return out[:L]
+
+
+def edge_rewrite(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
+                 *, policy: Optional[str] = None, block_m: int = 8192):
+    """Rewrite edge endpoints to their parents (Liu–Tarjan alter step, the
+    streaming batch relabel): ``e ← P[e]`` with ``-1`` fixed points."""
+    p = resolve_policy(policy)
+    if p == "ref":
+        return edge_rewrite_ref(labels, senders, receivers)
+    m = senders.shape[0]
+    Ppad = _pad_labels(labels, block_m)
+    dump = Ppad.shape[0] - 1
+    s, r = _pad_edges((senders, receivers), (dump, dump), block_m)
+    s2, r2 = _edge_rewrite_pallas(Ppad, s, r, block_m=block_m,
+                                  interpret=(p == "interpret"))
+    return s2[:m], r2[:m]
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
+                  block_b: int = 1024, policy: Optional[str] = None
+                  ) -> jax.Array:
+    p = resolve_policy(policy)
+    if p == "ref":
+        return embedding_bag_ref(table, idx, mode=mode)
+    return _embedding_bag_pallas(table, idx, mode=mode, block_b=block_b,
+                                 interpret=(p == "interpret"))

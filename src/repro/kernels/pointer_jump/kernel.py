@@ -1,10 +1,12 @@
-"""Pallas TPU kernel: blocked pointer jumping (P ← min(P, P[P]), k rounds).
+"""Pallas TPU kernel: blocked pointer jumping (k chained shortcut hops).
 
 Grid over output label blocks; the full (round-start) label array stays
 VMEM-resident for the arbitrary-index gather, the output streams block by
-block. Multiple jump rounds per dispatch amortize the HBM round trip — the
-`k` knob is a §Perf lever (more jumps/dispatch ⇒ fewer HBM passes, more
-gather traffic per block).
+block. Each hop follows the parent chain one step through the snapshot
+(``k=1`` ≡ one ``P ← P[P]`` round; ``k=3`` ≡ two successive rounds — see
+ref.py); multiple hops per dispatch amortize the HBM round trip — the `k`
+knob is a §Perf lever (more hops/dispatch ⇒ fewer HBM passes, more gather
+traffic per block). ``-1`` virtual-minimum labels are fixed points.
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ def _pointer_jump_kernel(labels_ref, out_ref, *, k: int, block: int):
     labels = labels_ref[...]
     mine = jax.lax.dynamic_slice_in_dim(labels, i * block, block)
     for _ in range(k):
-        mine = jnp.minimum(mine, labels[mine])
+        mine = jnp.where(mine < 0, mine, labels[jnp.maximum(mine, 0)])
     out_ref[...] = mine
 
 

@@ -1,10 +1,13 @@
 """Pure-jnp oracle for the pointer_jump kernel.
 
 Semantics: follow each vertex's parent chain ``k`` hops through the
-*round-start* (snapshot) array, keeping the running min (Jacobi shortcut).
-Iterating the op converges to the same root fixpoint as Gauss–Seidel
-``P ← P[P]`` rounds; the snapshot form is what a blocked kernel computes
-(each output block gathers from the immutable input array).
+*round-start* (snapshot) array. One hop (``k=1``) is exactly one
+``P ← P[P]`` shortcut round; chained hops compose as ``P^(k+1)``, so
+``k=3`` in one dispatch equals two successive ``P ← P[P]`` rounds
+(FindHalve) with a single HBM pass. Negative labels (the ``-1`` virtual
+minimum of core/primitives.py) are fixed points: chains that reach ``-1``
+stay there, and self-labeled slots (roots, the dump row, padding) are
+likewise stationary.
 """
 
 from __future__ import annotations
@@ -13,9 +16,9 @@ import jax.numpy as jnp
 
 
 def pointer_jump_ref(labels: jnp.ndarray, k: int = 1) -> jnp.ndarray:
-    """labels: (n_pad,) int32, non-negative, labels[i] < n_pad."""
+    """labels: (n_pad,) int32, values in {-1} ∪ [0, n_pad)."""
     snap = labels
     out = labels
     for _ in range(k):
-        out = jnp.minimum(out, snap[out])
+        out = jnp.where(out < 0, out, snap[jnp.maximum(out, 0)])
     return out

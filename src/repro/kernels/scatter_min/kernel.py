@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: blocked scatter-min (the paper's ``writeMin``).
+
+Index/value blocks stream HBM→VMEM in blocks of ``block_m``; the label
+array is resident in VMEM (one block covering all of it — callers shard so
+the per-device label partition fits). The output label array accumulates
+scatter-min proposals across sequential grid steps (TPU grid steps on a
+core are ordered, so read-modify-write on the full-array output block is
+the standard accumulation pattern — same shape as edge_relabel).
+
+Contract (enforced by the KernelPolicy dispatch layer in ``ops.py``):
+``idx`` entries are already sanitized into ``[0, n_pad)`` — negative,
+masked, and out-of-range targets are dumped onto a self-labeled slot with
+a max-sentinel value, so their scatters are no-ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_min_kernel(labels_ref, idx_ref, val_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = labels_ref[...]
+
+    acc = out_ref[...]
+    out_ref[...] = acc.at[idx_ref[...]].min(val_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def scatter_min(labels: jax.Array, idx: jax.Array, vals: jax.Array,
+                *, block_m: int = 8192, interpret: bool = True) -> jax.Array:
+    """labels (n_pad,) int; idx/vals (m_pad,) sanitized into [0, n_pad)."""
+    n_pad = labels.shape[0]
+    m_pad = idx.shape[0]
+    assert m_pad % block_m == 0 or m_pad < block_m, (m_pad, block_m)
+    block_m = min(block_m, m_pad)
+    grid = (m_pad // block_m,)
+    return pl.pallas_call(
+        _scatter_min_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pad,), lambda i: (0,)),        # labels: resident
+            pl.BlockSpec((block_m,), lambda i: (i,)),      # index block
+            pl.BlockSpec((block_m,), lambda i: (i,)),      # value block
+        ],
+        out_specs=pl.BlockSpec((n_pad,), lambda i: (0,)),  # accumulated labels
+        out_shape=jax.ShapeDtypeStruct((n_pad,), labels.dtype),
+        interpret=interpret,
+    )(labels, idx, vals.astype(labels.dtype))

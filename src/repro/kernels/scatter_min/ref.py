@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the scatter_min kernel.
+
+Semantics: ``out[i] = min(labels[i], min over {vals[j] : idx[j] == i})`` —
+the TPU-native form of the paper's ``writeMin`` primitive (scatter with a
+min combiner replaces the CAS retry loop). The contract is *pre-sanitized*:
+``idx`` entries are in ``[0, L)`` (the KernelPolicy dispatch layer dumps
+negative / masked / out-of-range targets onto the dump slot with a
+max-sentinel value before the kernel sees them).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scatter_min_ref(labels: jnp.ndarray, idx: jnp.ndarray,
+                    vals: jnp.ndarray) -> jnp.ndarray:
+    """labels: (L,) int; idx: (m,) int32 in [0, L); vals: (m,) same dtype."""
+    return labels.at[idx].min(vals.astype(labels.dtype))

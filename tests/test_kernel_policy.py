@@ -1,0 +1,210 @@
+"""KernelPolicy dispatch layer: policy resolution/precedence, the
+ExecutionSpec `kernels` field, dispatch-contract sanitization, and the
+kernel-parity acceptance sweep — the full ``enumerate_variants()`` grid must
+produce scipy-identical labels under ``kernels=ref`` and
+``kernels=interpret`` (the compiled Pallas code path, interpreted on CPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import scipy_canonical, variant_grid_graphs
+from repro.api import ConnectIt, ExecutionSpec, enumerate_variants
+from repro.core.finish import make_finish
+from repro.kernels import ops
+
+SPECS = enumerate_variants()
+N = 20
+PAD = 256
+
+
+@pytest.fixture(autouse=True)
+def _clear_jax_caches():
+    """Shadow conftest's per-test cache clearing: the parity sweep reuses one
+    tiny uniform shape across items (cleared once per module below)."""
+    yield
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches_once():
+    yield
+    jax.clear_caches()
+
+
+# the parity sweep runs every variant twice (ref + interpret); two families
+# keep the runtime bounded while still covering the sampling accept-gates
+GRAPHS = {k: v for k, v in variant_grid_graphs(N, PAD).items()
+          if k in ("random", "two_clique")}
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution and precedence.
+# ---------------------------------------------------------------------------
+
+def test_policy_resolution_precedence(monkeypatch):
+    monkeypatch.delenv(ops.ENV_VAR, raising=False)
+    assert ops.default_policy() == "auto"
+    # auto on a CPU backend resolves to the reference path
+    assert ops.resolve_policy(None) == "ref"
+    assert ops.resolve_policy("auto") == "ref"
+    # explicit argument wins outright
+    assert ops.resolve_policy("interpret") == "interpret"
+    assert ops.resolve_policy("pallas") == "pallas"
+    # the environment fills in when the argument defers
+    monkeypatch.setenv(ops.ENV_VAR, "interpret")
+    assert ops.default_policy() == "interpret"
+    assert ops.resolve_policy(None) == "interpret"
+    assert ops.resolve_policy("ref") == "ref"  # arg still wins over env
+
+
+def test_bad_policies_rejected(monkeypatch):
+    with pytest.raises(ValueError):
+        ops.resolve_policy("vulkan")
+    monkeypatch.setenv(ops.ENV_VAR, "nope")
+    with pytest.raises(ValueError):
+        ops.resolve_policy(None)
+    with pytest.raises(ValueError):
+        ExecutionSpec(kernels="nope")
+    with pytest.raises(ValueError):
+        ConnectIt("none+uf_sync_naive", kernels="nope")
+
+
+def test_execution_spec_kernels_grammar():
+    s = ExecutionSpec.parse("single:kernels=interpret")
+    assert s.kernels == "interpret"
+    assert str(s) == "single:kernels=interpret"
+    assert ExecutionSpec.parse(str(s)) == s
+    s = ExecutionSpec.parse("sharded(x):fused,kernels=ref")
+    assert (s.kernels, s.fused) == ("ref", True)
+    assert ExecutionSpec.parse(str(s)) == s
+    # default policy stays out of the canonical string
+    assert "kernels" not in str(ExecutionSpec.parse("replicated(x)"))
+    assert ExecutionSpec().kernels == "auto"
+
+
+def test_connectit_knob_folds_into_exec_spec():
+    g = GRAPHS["random"]
+    ci = ConnectIt("none+uf_sync_naive", kernels="interpret")
+    assert ci.exec.kernels == "interpret"
+    ci.connectivity(g)
+    assert ci.stats.exec == "single:kernels=interpret"
+    # the knob overrides the spec field (per-session convenience)
+    ci2 = ConnectIt("none+uf_sync_naive", exec="single:kernels=ref",
+                    kernels="interpret")
+    assert ci2.exec.kernels == "interpret"
+
+
+def test_policies_memoize_distinct_finish_callables():
+    base = make_finish("uf_sync", compress="naive")
+    assert make_finish("uf_sync", compress="naive", kernels=None) is base
+    ref = make_finish("uf_sync", compress="naive", kernels="ref")
+    itp = make_finish("uf_sync", compress="naive", kernels="interpret")
+    assert ref is not itp and ref is not base
+    assert make_finish("uf_sync", compress="naive", kernels="ref") is ref
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-contract sanitization (negative / masked / out-of-range targets,
+# -1 virtual-minimum fixed points) — identical across policies.
+# ---------------------------------------------------------------------------
+
+RNG = np.random.default_rng(7)
+
+
+def _policies():
+    return ("ref", "interpret")
+
+
+def test_scatter_min_sanitization_parity():
+    n = 150
+    P = jnp.asarray(
+        np.minimum(RNG.integers(-1, n, n + 1),
+                   np.arange(n + 1)).astype(np.int32)).at[n].set(n)
+    idx = jnp.asarray(RNG.integers(-9, n + 9, 400).astype(np.int32))
+    vals = jnp.asarray(RNG.integers(-1, n, 400).astype(np.int32))
+    mask = jnp.asarray(RNG.random(400) < 0.5)
+    outs = [ops.scatter_min(P, idx, vals, mask, policy=p)
+            for p in _policies()]
+    np.testing.assert_array_equal(*map(np.asarray, outs))
+    # negative / out-of-range targets are dropped: slots they would have hit
+    # (nowhere — they dump with a max sentinel) leave P's values in place
+    oob = (np.asarray(idx) < 0) | (np.asarray(idx) > n)
+    keep = np.asarray(mask) & ~oob
+    touched = np.unique(np.asarray(idx)[keep])
+    untouched = np.setdiff1d(np.arange(n + 1), touched)
+    np.testing.assert_array_equal(np.asarray(outs[0])[untouched],
+                                  np.asarray(P)[untouched])
+    # an all-False mask is the identity under every policy
+    dropped = ops.scatter_min(P, idx, vals, jnp.zeros(400, bool),
+                              policy="interpret")
+    np.testing.assert_array_equal(np.asarray(dropped), np.asarray(P))
+
+
+def test_ops_parity_on_arbitrary_label_shapes():
+    """Arbitrary (n + 1,) lengths exercise the padding contract."""
+    for n in (5, 127, 128, 300):
+        P = jnp.asarray(
+            np.minimum(RNG.integers(-1, n, n + 1),
+                       np.arange(n + 1)).astype(np.int32)).at[n].set(n)
+        s = jnp.asarray(RNG.integers(0, n + 1, 77).astype(np.int32))
+        r = jnp.asarray(RNG.integers(0, n + 1, 77).astype(np.int32))
+        for name, call in [
+            ("pointer_jump", lambda p: ops.pointer_jump(P, k=3, policy=p)),
+            ("hook_compress",
+             lambda p: ops.hook_compress(P, s, r, k=1, policy=p)),
+            ("edge_relabel",
+             lambda p: ops.edge_relabel(P, s, r, policy=p)),
+        ]:
+            a, b = (np.asarray(call(p)) for p in _policies())
+            np.testing.assert_array_equal(a, b, err_msg=f"{name} n={n}")
+            assert a.shape == (n + 1,)
+        sa, ra = ops.edge_rewrite(P, s, r, policy="ref")
+        sb, rb = ops.edge_rewrite(P, s, r, policy="interpret")
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+        assert sa.shape == s.shape
+
+
+# ---------------------------------------------------------------------------
+# Acceptance sweep: the full variant grid, ref vs interpret, vs scipy.
+# Grouped by finish configuration so each item shares compiled dispatches
+# across sampling schemes and graphs (same discipline as test_variant_api).
+# ---------------------------------------------------------------------------
+
+FINISH_GROUPS = sorted({spec.finish_str for spec in SPECS})
+
+
+@pytest.mark.parametrize("finish_str", FINISH_GROUPS)
+def test_variant_grid_parity_ref_vs_interpret(finish_str):
+    specs = [s for s in SPECS if s.finish_str == finish_str]
+    assert specs
+    for gname, g in GRAPHS.items():
+        expect = scipy_canonical(g)
+        for spec in specs:
+            labels = {}
+            for policy in _policies():
+                session = ConnectIt(spec, compact_pad=PAD, kernels=policy)
+                labels[policy] = np.asarray(
+                    session.connectivity(g, key=jax.random.PRNGKey(7)))
+                np.testing.assert_array_equal(
+                    labels[policy], expect,
+                    err_msg=f"{spec} [{policy}] on {gname!r} vs scipy")
+            np.testing.assert_array_equal(
+                labels["ref"], labels["interpret"],
+                err_msg=f"{spec} ref/interpret divergence on {gname!r}")
+
+
+def test_stream_parity_ref_vs_interpret():
+    g = GRAPHS["random"]
+    expect = scipy_canonical(g)
+    answers = {}
+    for policy in _policies():
+        h = ConnectIt("none+uf_sync_full", kernels=policy).stream(g.n)
+        h.insert(np.asarray(g.senders)[: g.m], np.asarray(g.receivers)[: g.m])
+        assert h.num_components() == len(np.unique(expect))
+        answers[policy] = np.asarray(h.query(
+            np.zeros(g.n, np.int32), np.arange(g.n, dtype=np.int32)))
+    np.testing.assert_array_equal(answers["ref"], answers["interpret"])
+    np.testing.assert_array_equal(answers["ref"], expect == expect[0])

@@ -5,15 +5,26 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.edge_relabel.kernel import edge_relabel
-from repro.kernels.edge_relabel.ref import edge_relabel_ref
+from repro.kernels.edge_relabel.kernel import edge_relabel, edge_rewrite
+from repro.kernels.edge_relabel.ref import edge_relabel_ref, edge_rewrite_ref
 from repro.kernels.embedding_bag.kernel import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.hook_compress.kernel import hook_compress
+from repro.kernels.hook_compress.ref import hook_compress_ref
 from repro.kernels.pointer_jump.kernel import pointer_jump
 from repro.kernels.pointer_jump.ref import pointer_jump_ref
+from repro.kernels.scatter_min.kernel import scatter_min
+from repro.kernels.scatter_min.ref import scatter_min_ref
 from repro.kernels import ops
 
 RNG = np.random.default_rng(0)
+
+
+def _labels_with_virtual_min(n_pad: int, dtype=np.int32) -> np.ndarray:
+    """A labeling with chains, roots, and sprinkled -1 virtual minimums."""
+    lab = np.minimum(RNG.integers(0, n_pad, n_pad), np.arange(n_pad))
+    lab[RNG.random(n_pad) < 0.1] = -1
+    return lab.astype(dtype)
 
 
 @pytest.mark.parametrize("n_pad,m_pad,block_m", [
@@ -82,3 +93,108 @@ def test_ops_dispatch_cpu_uses_ref():
     np.testing.assert_array_equal(
         np.asarray(ops.edge_relabel(P, s, r)),
         np.asarray(edge_relabel_ref(P, s, r)))
+
+
+# ---------------------------------------------------------------------------
+# scatter_min (writeMin) kernel: shape/dtype sweep vs the ref oracle.
+# Contract is pre-sanitized (idx in [0, n_pad)); the dispatch-layer
+# sanitization itself is covered by test_kernel_policy.py.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pad,m_pad,block_m", [
+    (128, 256, 64), (1024, 4096, 1024), (512, 512, 512), (64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int16])
+def test_scatter_min_sweep(n_pad, m_pad, block_m, dtype):
+    P = jnp.asarray(RNG.permutation(n_pad).astype(np.int32)).astype(dtype)
+    idx = jnp.asarray(RNG.integers(0, n_pad, m_pad).astype(np.int32))
+    vals = jnp.asarray(
+        RNG.integers(-1, n_pad, m_pad).astype(np.int32)).astype(dtype)
+    out = scatter_min(P, idx, vals, block_m=block_m, interpret=True)
+    ref = scatter_min_ref(P, idx, vals)
+    assert out.dtype == P.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Fused hook+compress kernel: shape × jump-count sweep vs the ref oracle,
+# with -1 virtual-minimum labels in the mix.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pad,m_pad,block_m", [
+    (128, 256, 64), (1024, 4096, 1024), (256, 512, 512), (64, 64, 64),
+])
+@pytest.mark.parametrize("k", [0, 1, 3])
+def test_hook_compress_sweep(n_pad, m_pad, block_m, k):
+    P = jnp.asarray(_labels_with_virtual_min(n_pad))
+    s = jnp.asarray(RNG.integers(0, n_pad, m_pad).astype(np.int32))
+    r = jnp.asarray(RNG.integers(0, n_pad, m_pad).astype(np.int32))
+    out = hook_compress(P, s, r, k=k, block_m=block_m, interpret=True)
+    ref = hook_compress_ref(P, s, r, k=k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_hook_compress_equals_unfused_primitives():
+    """The fused round must equal write_min(hook) + k shortcut hops."""
+    from repro.core.primitives import jump_round, parents_of, write_min
+    n = 200
+    P = jnp.asarray(_labels_with_virtual_min(n + 1)).at[n].set(n)
+    s = jnp.asarray(RNG.integers(0, n + 1, 512).astype(np.int32))
+    r = jnp.asarray(RNG.integers(0, n + 1, 512).astype(np.int32))
+    pu, pv = P[s], P[r]
+    mask = (parents_of(P, pu) == pu) & (pv < pu)
+    expect = jump_round(write_min(P, pu, pv, mask), 1)
+    got = ops.hook_compress(P, s, r, k=1, policy="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+# ---------------------------------------------------------------------------
+# pointer_jump with -1 fixed points and multi-hop composition.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_pointer_jump_negative_fixed_points(k):
+    P = jnp.asarray(_labels_with_virtual_min(512))
+    out = pointer_jump(P, k=k, block=128, interpret=True)
+    ref = pointer_jump_ref(P, k=k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # -1 slots never move
+    np.testing.assert_array_equal(np.asarray(out)[np.asarray(P) == -1], -1)
+
+
+def test_pointer_jump_three_hops_is_two_rounds():
+    """k chained hops compose as P^(k+1): k=3 ≡ two P←P[P] rounds."""
+    P = jnp.asarray(_labels_with_virtual_min(256))
+    two_rounds = pointer_jump_ref(pointer_jump_ref(P, k=1), k=1)
+    np.testing.assert_array_equal(
+        np.asarray(pointer_jump(P, k=3, block=256, interpret=True)),
+        np.asarray(two_rounds))
+
+
+# ---------------------------------------------------------------------------
+# edge_rewrite (Liu–Tarjan alter / streaming relabel) kernel.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pad,m_pad,block_m", [
+    (128, 256, 64), (512, 2048, 512), (64, 64, 64),
+])
+def test_edge_rewrite_sweep(n_pad, m_pad, block_m):
+    P = jnp.asarray(_labels_with_virtual_min(n_pad))
+    s = jnp.asarray(RNG.integers(-1, n_pad, m_pad).astype(np.int32))
+    r = jnp.asarray(RNG.integers(-1, n_pad, m_pad).astype(np.int32))
+    s2, r2 = edge_rewrite(P, s, r, block_m=block_m, interpret=True)
+    es, er = edge_rewrite_ref(P, s, r)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(es))
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(er))
+
+
+def test_edge_relabel_negative_endpoints_propose_but_never_receive():
+    """-1 endpoints propose the virtual minimum; they are never targets."""
+    P = jnp.asarray(np.arange(8, dtype=np.int32))
+    s = jnp.asarray(np.array([-1, 3], np.int32))
+    r = jnp.asarray(np.array([5, -1], np.int32))
+    for impl in (edge_relabel_ref,
+                 lambda *a: edge_relabel(*a, block_m=64, interpret=True)):
+        out = np.asarray(impl(P, s, r))
+        assert out[5] == -1 and out[3] == -1   # proposals from -1 endpoints
+        assert (out >= -1).all()               # nothing scattered off-array
