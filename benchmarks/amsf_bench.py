@@ -1,36 +1,82 @@
-"""Paper Figure 6: approximate MSF variants vs exact Borůvka (GBBS-MSF)."""
+"""Paper Figure 6: approximate MSF variants vs exact Borůvka (GBBS-MSF).
+
+Runs through the AppSpec session path (``ConnectIt(variant).amsf``): the
+masked bucket sweep is one device dispatch with zero per-bucket host syncs.
+
+  PYTHONPATH=src python -m benchmarks.amsf_bench            # paper-sized
+  PYTHONPATH=src python -m benchmarks.amsf_bench --smoke    # CI-sized
+"""
 
 from __future__ import annotations
 
-import jax
+import argparse
+import sys
 
 from .common import emit, timeit
 
+APP_SPECS = ["amsf(mode=coo)", "amsf", "amsf(skip=lmax)"]
 
-def run(quick: bool = True):
-    from repro.core.apps import amsf
+
+def _suite(quick: bool, smoke: bool):
     from repro.graphs import generators as gen
     from repro.graphs.generators import with_weights
-    rows = []
-    n = 1 << 12 if quick else 1 << 14
+    n = 1 << 9 if smoke else (1 << 12 if quick else 1 << 14)
     g = gen.rmat(n, n * 8, seed=3)
-    w = with_weights(g, seed=1)
-    t_exact = timeit(lambda: amsf.boruvka_msf(g, w), warmup=1, iters=2)
-    exact, _ = amsf.boruvka_msf(g, w)
-    ew = amsf.forest_weight(exact, g, w)
-    rows.append(dict(variant="exact(boruvka)", time_s=f"{t_exact:.4f}",
-                     speedup="1.00", weight_ratio="1.0000"))
-    for name, fn in [("amsf_coo", amsf.amsf_coo), ("amsf_nf", amsf.amsf_nf),
-                     ("amsf_nf_s", amsf.amsf_nf_s)]:
-        t = timeit(lambda: fn(g, w, eps=0.25), warmup=1, iters=2)
-        fe, _ = fn(g, w, eps=0.25)
-        aw = amsf.forest_weight(fe, g, w)
-        rows.append(dict(variant=name, time_s=f"{t:.4f}",
+    return g, with_weights(g, seed=1)
+
+
+def run(quick: bool = True, smoke: bool = False, variant: str = "none+uf_sync_full"):
+    from repro.api import ConnectIt
+    from repro.core.apps import amsf
+    rows = []
+    g, w = _suite(quick, smoke)
+    ci = ConnectIt(variant)
+    iters = 1 if smoke else 2
+    t_exact = timeit(lambda: ci.msf(g, w), warmup=1, iters=iters)
+    ew = amsf.forest_weight(ci.msf(g, w), g, w)
+    rows.append(dict(spec="msf(exact)", time_s=f"{t_exact:.4f}",
+                     speedup="1.00", weight_ratio="1.0000", buckets=0))
+    for spec in APP_SPECS:
+        t = timeit(lambda: ci.amsf(g, w, spec), warmup=1, iters=iters)
+        edges, stats = ci.amsf(g, w, spec, return_stats=True)
+        aw = amsf.forest_weight(edges, g, w)
+        rows.append(dict(spec=spec, time_s=f"{t:.4f}",
                          speedup=f"{t_exact / t:.2f}",
-                         weight_ratio=f"{aw / ew:.4f}"))
-    emit(rows, ["variant", "time_s", "speedup", "weight_ratio"])
+                         weight_ratio=f"{aw / ew:.4f}",
+                         buckets=stats.buckets))
+    emit(rows, ["spec", "time_s", "speedup", "weight_ratio", "buckets"])
     return rows
 
 
+def placement_rows(quick: bool = True, smoke: bool = False,
+                   variant: str = "none+uf_sync_full",
+                   execs=("single", "replicated(x)", "sharded(x)")):
+    """Per-placement wall time + approximation ratio (machine-readable rows
+    for ``benchmarks/run.py --apps`` → BENCH_apps.json)."""
+    from repro.api import ConnectIt
+    from repro.core.apps import amsf
+    g, w = _suite(quick, smoke)
+    ew = amsf.forest_weight(ConnectIt(variant).msf(g, w), g, w)
+    rows = []
+    for exec_str in execs:
+        ci = ConnectIt(variant, exec=exec_str)
+        for spec in ("amsf", "amsf(skip=lmax)"):
+            t = timeit(lambda: ci.amsf(g, w, spec), warmup=1, iters=1)
+            aw = amsf.forest_weight(ci.amsf(g, w, spec), g, w)
+            rows.append(dict(app=spec, variant=variant, exec=exec_str,
+                             time_s=round(t, 5), ratio=round(aw / ew, 5)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized pass")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--variant", default="none+uf_sync_full")
+    args = ap.parse_args(argv)
+    run(quick=not args.full, smoke=args.smoke, variant=args.variant)
+    return 0
+
+
 if __name__ == "__main__":
-    run(quick=False)
+    sys.exit(main())

@@ -5,6 +5,8 @@
 ``python -m benchmarks.run --only streaming_throughput``
 ``python -m benchmarks.run --exec``    execution-placement sweep only
 ``python -m benchmarks.run --exec "sharded(x)"``   one ExecutionSpec
+``python -m benchmarks.run --apps``    applications sweep (AMSF + SCAN per
+                                       placement) → BENCH_apps.json
 
 Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
 from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
@@ -13,6 +15,7 @@ from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -33,11 +36,38 @@ SUITES = {
 }
 
 
+def run_apps(quick: bool = True, smoke: bool = False,
+             out: str = "BENCH_apps.json") -> dict:
+    """Applications sweep (AMSF + SCAN per placement) → machine-readable
+    ``BENCH_apps.json``: per-app, per-placement wall time + approximation
+    ratio (AMSF: forest weight / exact MSF weight; SCAN: fraction of labels
+    matching the sequential GS*-Query oracle). The repo's perf-trajectory
+    artifact for the §5 workloads."""
+    rows = (amsf_bench.placement_rows(quick=quick, smoke=smoke)
+            + scan_bench.placement_rows(quick=quick, smoke=smoke))
+    payload = {
+        "suite": "apps",
+        "scale": "smoke" if smoke else ("quick" if quick else "full"),
+        "rows": rows,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"{'app':24} {'exec':16} {'time_s':>10} {'ratio':>8}")
+    for r in rows:
+        print(f"{r['app']:24} {r['exec']:16} {r['time_s']:>10} "
+              f"{r['ratio']:>8}")
+    print(f"wrote {out} ({len(rows)} rows)")
+    return payload
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized pass (the default; explicit flag for CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (apps suite only)")
     ap.add_argument("--only", default=None, choices=sorted(SUITES),
                     metavar="SUITE")
     ap.add_argument("--exec", nargs="?", const="sweep", default=None,
@@ -45,11 +75,22 @@ def main(argv=None) -> int:
                     help="run the execution-placement suite only; with an "
                          "argument, restrict it to that ExecutionSpec "
                          "string (e.g. 'sharded(x):fused')")
+    ap.add_argument("--apps", action="store_true",
+                    help="run the applications sweep only and write "
+                         "BENCH_apps.json (per-app, per-placement wall "
+                         "time + approximation ratio)")
+    ap.add_argument("--out", default="BENCH_apps.json",
+                    help="output path for the --apps JSON artifact")
     args = ap.parse_args(argv)
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
     t0 = time.time()
-    if args.exec_spec is not None:
+    if args.apps:
+        if args.only or args.exec_spec:
+            ap.error("--apps is exclusive with --only/--exec")
+        print("\n### apps " + "#" * 56)
+        run_apps(quick=not args.full, smoke=args.smoke, out=args.out)
+    elif args.exec_spec is not None:
         if args.only:
             ap.error("--exec and --only are mutually exclusive")
         execs = None if args.exec_spec == "sweep" else (args.exec_spec,)

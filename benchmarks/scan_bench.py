@@ -1,35 +1,87 @@
-"""Paper Figure 7: parallel GS*-Query (ConnectIt) vs sequential GS*-Query."""
+"""Paper Figure 7: parallel GS*-Query (ConnectIt) vs sequential GS*-Query.
+
+Runs through the AppSpec session path (``ConnectIt(variant).scan``): the
+core-core connectivity dispatches the session's finish method under its
+placement and kernel policy.
+
+  PYTHONPATH=src python -m benchmarks.scan_bench            # paper-sized
+  PYTHONPATH=src python -m benchmarks.scan_bench --smoke    # CI-sized
+"""
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
-
-import jax
-import jax.numpy as jnp
 
 from .common import emit, timeit
 
 
-def run(quick: bool = True):
+def _suite(quick: bool, smoke: bool):
     from repro.core.apps import scan
     from repro.graphs import generators as gen
-    rows = []
-    n = 1 << 11 if quick else 1 << 13
+    n = 1 << 8 if smoke else (1 << 11 if quick else 1 << 13)
     g = gen.rmat(n, n * 12, seed=4)
     sims = scan.build_index(g)  # offline index construction (GS*-Index)
-    simsj = jnp.asarray(sims)
+    return g, sims
+
+
+def run(quick: bool = True, smoke: bool = False,
+        variant: str = "none+uf_sync_full"):
+    from repro.api import ConnectIt
+    from repro.core.apps import scan
+    rows = []
+    g, sims = _suite(quick, smoke)
+    ci = ConnectIt(variant)
     for eps, mu in [(0.1, 3), (0.3, 3)]:
+        spec = f"scan(eps={eps},mu={mu})"
         t0 = time.perf_counter()
         scan.gs_query_sequential(g, sims, eps, mu=mu)
         t_seq = time.perf_counter() - t0
-        t_par = timeit(lambda: scan.gs_query_parallel(g, simsj, eps, mu=mu),
-                       warmup=1, iters=3)
-        rows.append(dict(eps=eps, mu=mu, seq_s=f"{t_seq:.4f}",
+        t_par = timeit(lambda: ci.scan(g, sims, spec), warmup=1,
+                       iters=1 if smoke else 3)
+        rows.append(dict(spec=spec, seq_s=f"{t_seq:.4f}",
                          par_s=f"{t_par:.4f}",
                          speedup=f"{t_seq / t_par:.1f}"))
-    emit(rows, ["eps", "mu", "seq_s", "par_s", "speedup"])
+    emit(rows, ["spec", "seq_s", "par_s", "speedup"])
     return rows
 
 
+def placement_rows(quick: bool = True, smoke: bool = False,
+                   variant: str = "none+uf_sync_full",
+                   execs=("single", "replicated(x)", "sharded(x)")):
+    """Per-placement wall time + sequential-match quality (rows for
+    ``benchmarks/run.py --apps`` → BENCH_apps.json). ``ratio`` is the
+    fraction of vertices whose cluster label matches the sequential
+    GS*-Query oracle (1.0 = identical clustering)."""
+    import numpy as np
+
+    from repro.api import ConnectIt
+    from repro.core.apps import scan
+    g, sims = _suite(quick, smoke)
+    eps, mu = 0.3, 3
+    spec = f"scan(eps={eps},mu={mu})"
+    oracle, _ = scan.gs_query_sequential(g, sims, eps, mu=mu)
+    rows = []
+    for exec_str in execs:
+        ci = ConnectIt(variant, exec=exec_str)
+        t = timeit(lambda: ci.scan(g, sims, spec), warmup=1, iters=1)
+        labels, _ = ci.scan(g, sims, spec)
+        match = float(np.mean(np.asarray(labels) == oracle))
+        rows.append(dict(app=spec, variant=variant, exec=exec_str,
+                         time_s=round(t, 5), ratio=round(match, 5)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized pass")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--variant", default="none+uf_sync_full")
+    args = ap.parse_args(argv)
+    run(quick=not args.full, smoke=args.smoke, variant=args.variant)
+    return 0
+
+
 if __name__ == "__main__":
-    run(quick=False)
+    sys.exit(main())

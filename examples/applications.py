@@ -1,4 +1,5 @@
-"""ConnectIt applications (paper §5): approximate MSF + SCAN clustering.
+"""ConnectIt applications (paper §5): approximate MSF + SCAN clustering,
+through the declarative AppSpec session path.
 
     PYTHONPATH=src python examples/applications.py
 """
@@ -9,9 +10,11 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core.apps import amsf, scan
+from repro.api import ConnectIt
+from repro.core.apps import scan
+from repro.core.apps.amsf import forest_weight
 from repro.graphs import generators as gen
 from repro.graphs.generators import with_weights
 
@@ -20,31 +23,34 @@ def main():
     # --- approximate minimum spanning forest (paper §5.1) ---
     g = gen.rmat(1 << 13, 1 << 16, seed=3)
     w = with_weights(g, seed=1)
+    # one session: any forest-capable variant × any placement × any kernels
+    ci = ConnectIt("none+uf_sync_full")
     t0 = time.perf_counter()
-    exact, _ = amsf.boruvka_msf(g, w)
+    exact = ci.msf(g, w)
     t_exact = time.perf_counter() - t0
-    ew = amsf.forest_weight(exact, g, w)
+    ew = forest_weight(exact, g, w)
     print(f"exact MSF (Borůvka): |F|={len(exact)} weight={ew:.1f} "
           f"({t_exact:.2f}s)")
     t0 = time.perf_counter()
-    approx, _ = amsf.amsf_nf_s(g, w, eps=0.25)
+    approx, stats = ci.amsf(g, w, "amsf(skip=lmax)", return_stats=True)
     t_apx = time.perf_counter() - t0
-    aw = amsf.forest_weight(approx, g, w)
+    aw = forest_weight(approx, g, w)
     print(f"AMSF-NF-S (eps=0.25):  |F|={len(approx)} weight={aw:.1f} "
           f"({t_apx:.2f}s) — ratio {aw / ew:.4f} ≤ 1.25 ✓")
+    print(f"  {stats.buckets} buckets, {stats.finish_rounds} forest rounds, "
+          f"one device dispatch (no per-bucket host sync)")
 
     # --- SCAN clustering via parallel GS*-Query (paper §5.2) ---
     g2 = gen.planted_components(2000, 8, 8.0, seed=5)
     sims = scan.build_index(g2)          # offline GS*-Index
     for eps, mu in [(0.1, 3), (0.3, 3)]:
         t0 = time.perf_counter()
-        labels, cores = scan.gs_query_parallel(g2, jnp.asarray(sims), eps,
-                                               mu=mu)
+        labels, cores = ci.scan(g2, sims, f"scan(eps={eps},mu={mu})")
         t_par = time.perf_counter() - t0
-        import numpy as np
-        n_clusters = len(np.unique(np.asarray(labels)[np.asarray(cores)])) \
-            if bool(np.asarray(cores).any()) else 0
-        print(f"SCAN eps={eps} mu={mu}: {int(np.asarray(cores).sum())} cores,"
+        cores_np = np.asarray(cores)
+        n_clusters = len(np.unique(np.asarray(labels)[cores_np])) \
+            if bool(cores_np.any()) else 0
+        print(f"SCAN eps={eps} mu={mu}: {int(cores_np.sum())} cores,"
               f" {n_clusters} clusters ({t_par:.3f}s)")
 
 

@@ -12,7 +12,10 @@ labels over a named mesh):
     labels = ci.connectivity(g)          # static connectivity
     forest = ci.spanning_forest(g)       # paper §3.4 (root-based finish only)
     h = ci.stream(n)                     # batch-incremental handle (§3.5)
-    ci.stats                             # ConnectivityStats of the last run
+    edges = ci.amsf(g, w, "amsf(skip=lmax)")   # applications (paper §5):
+    labs, cores = ci.scan(g, sims, "scan")     #   AppSpec grammar, any
+    ci.stats                             # placement × kernel policy; stats
+                                         # of the last run
 
 Variant grammar (canonical strings round-trip,
 ``VariantSpec.parse(str(s)) == s``):
@@ -54,6 +57,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .core import driver
+from .core.apps import amsf as _amsf_impl
+from .core.apps.spec import (
+    APPS,
+    AppSpec,
+    AppSpecLike,
+    as_app_spec,
+    default_app_grid,
+)
 from .core.execution import (
     ExecutionSpec,
     KERNEL_POLICIES,
@@ -63,17 +74,20 @@ from .core.execution import (
 )
 from .core.finish import (
     COMPRESS_MODES,
+    FOREST_METHODS,
     LIU_TARJAN_VARIANTS,
     make_finish,
+    make_forest_finish,
     method_names,
 )
 from .core.sampling import KOUT_VARIANTS, make_sampler
 
 __all__ = [
-    "SamplingSpec", "FinishSpec", "VariantSpec", "ExecutionSpec",
+    "SamplingSpec", "FinishSpec", "VariantSpec", "ExecutionSpec", "AppSpec",
     "ConnectIt", "Stream", "enumerate_variants", "is_compatible",
-    "KOUT_VARIANTS", "COMPRESS_MODES", "LIU_TARJAN_VARIANTS", "PLACEMENTS",
-    "KERNEL_POLICIES",
+    "default_app_grid", "KOUT_VARIANTS", "COMPRESS_MODES",
+    "LIU_TARJAN_VARIANTS", "PLACEMENTS", "KERNEL_POLICIES", "APPS",
+    "FOREST_METHODS",
 ]
 
 SAMPLING_SCHEMES = ("none", "kout", "bfs", "ldd")
@@ -374,6 +388,35 @@ class VariantSpec:
             kw["kernels"] = kernels
         return make_finish(self.finish.method, **kw)
 
+    @property
+    def forest_capable(self) -> bool:
+        """True iff the finish method supports root-based forest recording
+        (paper §3.4 / Theorem 6): the uf_sync family and Shiloach-Vishkin."""
+        return self.finish.method in FOREST_METHODS
+
+    @property
+    def forest_compress(self) -> str:
+        """The per-round compression the forest step runs under (SV's round
+        is hook + full compression by definition)."""
+        return (self.finish.compress if self.finish.method == "uf_sync"
+                else "full")
+
+    def build_forest_finish(self, kernels: Optional[str] = None):
+        """Resolve the (memoized) root-based forest step ``(P, s, r, fu, fv)
+        -> (ForestState, rounds)`` — the per-bucket step of AMSF and the
+        spanning-forest driver. Raises for non-forest-capable methods."""
+        if not self.forest_capable:
+            raise ValueError(
+                f"forest recording requires a root-based finish "
+                f"({'/'.join(FOREST_METHODS)}), not {self.finish_str!r} — "
+                f"paper §3.4")
+        kw = {}
+        if self.finish.method == "uf_sync":
+            kw["compress"] = self.finish.compress
+        if kernels not in (None, "auto"):
+            kw["kernels"] = kernels
+        return make_forest_finish(self.finish.method, **kw)
+
     def __str__(self) -> str:
         return f"{self.sampling}+{self.finish_str}"
 
@@ -655,18 +698,20 @@ class ConnectIt:
                         ) -> np.ndarray:
         """Spanning forest edges, (k, 2) host array (paper §3.4).
 
-        Valid only for root-based finish methods (the uf_sync family): the
-        forest invariant needs one recorded edge per hooked root — the
-        paper's documented restriction for Algorithm 2. Distributed
-        placements currently run the forest on the single-device driver
-        (edge recording needs cross-shard tie-breaking; see docs/API.md).
+        Valid only for root-based finish methods (the uf_sync family and
+        Shiloach-Vishkin): the forest invariant needs one recorded edge per
+        hooked root — the paper's documented restriction for Algorithm 2.
+        Distributed placements currently run the forest on the single-device
+        driver (edge recording needs cross-shard tie-breaking; see
+        docs/API.md).
         """
-        if self.spec.finish.method != "uf_sync":
+        if not self.spec.forest_capable:
             raise ValueError(
-                f"spanning forest requires a root-based finish (uf_sync "
-                f"family), not {self.spec.finish_str!r} — paper §3.4")
+                f"spanning forest requires a root-based finish "
+                f"({'/'.join(FOREST_METHODS)}), not "
+                f"{self.spec.finish_str!r} — paper §3.4")
         return self._backend.spanning_forest(
-            g, self._sampler, key, compress=self.spec.finish.compress)
+            g, self._sampler, key, compress=self.spec.forest_compress)
 
     def stream(self, n: int) -> Stream:
         """Fresh batch-incremental handle over ``n`` vertices (paper §3.5),
@@ -674,7 +719,87 @@ class ConnectIt:
         return Stream(n, self._finish, backend=self._backend,
                       variant=str(self.spec))
 
+    # -- applications (paper §5): AMSF / exact MSF / SCAN -------------------
+
+    def _app_stats(self, app: AppSpec, g) -> driver.ConnectivityStats:
+        stats = self._backend._base_stats(str(self.spec))
+        stats.app = str(app)
+        stats.edges_total = g.m
+        return stats
+
+    def amsf(self, g, weights, spec: "AppSpecLike" = "amsf", *,
+             return_stats: bool = False) -> np.ndarray:
+        """Approximate minimum spanning forest (paper §5.1) → (k, 2) host
+        edge array; total weight is within ``(1 + eps)`` of the exact MSF.
+
+        ``spec`` names the paper variant (``amsf`` = AMSF-NF,
+        ``amsf(skip=lmax)`` = AMSF-NF-S, ``amsf(mode=coo)`` = AMSF-COO,
+        ``msf`` = exact Borůvka). The per-bucket forest step is this
+        session's finish method (root-based only — uf_sync family /
+        Shiloach-Vishkin), dispatched under the session's placement and
+        kernel policy; the masked bucket sweep is a single device dispatch
+        with no per-bucket host sync. Fills ``.stats`` (buckets,
+        edges-per-bucket, rounds, dispatch sizes).
+        """
+        app = as_app_spec(spec)
+        if app.app == "scan":
+            raise ValueError("scan specs run via .scan(g, sims, spec)")
+        stats = self._app_stats(app, g)
+        weights = jnp.asarray(weights)
+        if app.app == "msf":
+            edges, _ = _amsf_impl.boruvka_msf(g, weights)
+            # Borůvka is a self-contained single-device program regardless
+            # of the session placement — report what actually ran (the
+            # SingleBackend per-call-override precedent)
+            stats.exec = "single"
+            stats.placement = "single"
+            stats.devices = 1
+            stats.edges_finish = g.m
+            stats.edges_finish_padded = g.m_pad
+            stats.edges_per_device = (g.m,)
+            stats.dispatch_sizes = (g.m_pad,)
+        else:
+            forest_fn = self.spec.build_forest_finish(
+                kernels=self._backend.kernels)
+            fu, fv = self._backend.amsf(
+                g, weights, app, forest_fn,
+                compress=self.spec.forest_compress, stats=stats)
+            edges = _amsf_impl.forest_edges(fu, fv)
+        self._stats = stats
+        if return_stats:
+            return edges, stats
+        return edges
+
+    def msf(self, g, weights, **kw) -> np.ndarray:
+        """Exact MSF (Borůvka — the GBBS-MSF baseline), ``amsf(g, w, "msf")``."""
+        return self.amsf(g, weights, "msf", **kw)
+
+    def scan(self, g, sims, spec: "AppSpecLike" = "scan", *,
+             return_stats: bool = False):
+        """SCAN clustering via parallel GS*-Query (paper §5.2) →
+        ``(labels, is_core)`` device arrays.
+
+        ``sims`` is the per-directed-edge structural-similarity index
+        (``repro.core.apps.scan.build_index``; offline, like GS*-Index).
+        The core-core connectivity runs this session's finish method under
+        its placement and kernel policy; non-core border vertices attach to
+        the min adjacent core cluster; remaining vertices keep their own id
+        (singletons, reported as noise). Fills ``.stats``."""
+        app = as_app_spec(spec)
+        if app.app != "scan":
+            raise ValueError(
+                f"scan() takes a scan spec, got {str(app)!r} "
+                f"(amsf/msf run via .amsf(g, weights, spec))")
+        stats = self._app_stats(app, g)
+        labels, is_core = self._backend.scan(
+            g, jnp.asarray(sims), app, self._finish, stats)
+        self._stats = stats
+        if return_stats:
+            return labels, is_core, stats
+        return labels, is_core
+
     @property
     def stats(self) -> Optional[driver.ConnectivityStats]:
-        """ConnectivityStats of the most recent ``connectivity`` call."""
+        """ConnectivityStats of the most recent ``connectivity`` /
+        ``amsf`` / ``scan`` call."""
         return self._stats

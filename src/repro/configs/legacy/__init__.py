@@ -2,7 +2,7 @@
 
 These five configs (qwen3, stablelm, granite_moe, h2o_danube, deepseek_moe)
 are unreferenced by any connectivity path — they exist only for the generic
-arch-smoke harness (tests/test_smoke_archs.py, launch/serve.py). They are
+arch-smoke harness (tests/test_smoke_archs.py, launch/legacy/serve.py). They are
 kept loadable through the registry (``repro.configs.get_arch``) but live
 here, out of the ConnectIt surface, pending deletion once the smoke harness
 drops the LM family.

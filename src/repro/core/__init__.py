@@ -6,6 +6,7 @@ streaming implementations behind it. The flat string-keyed entrypoints
 re-exported here are deprecation shims.
 """
 from . import (  # noqa: F401
+    apps,
     distributed,
     driver,
     execution,

@@ -1,1 +1,14 @@
+"""ConnectIt applications (paper §5): first-class framework consumers.
+
+``AppSpec`` (spec.py) is the declarative grammar; ``amsf``/``scan`` hold the
+per-app programs. ``repro.api.ConnectIt(variant, exec=..., kernels=...)``
+exposes them as ``.amsf`` / ``.msf`` / ``.scan`` session methods.
+"""
+
 from . import amsf, scan  # noqa: F401
+from .spec import (  # noqa: F401
+    APPS,
+    AppSpec,
+    as_app_spec,
+    default_app_grid,
+)

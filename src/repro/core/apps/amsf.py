@@ -2,112 +2,166 @@
 
 Folklore algorithm: bucket edges geometrically by weight, process buckets in
 increasing order, compute a spanning forest per bucket against the running
-labeling. Variants:
+labeling. The bucket sweep is **device-resident**: geometric bucket ids stay
+on device and the sweep is a single ``lax.while_loop`` dispatch over masked
+edge sets — no per-bucket host sync, no ``np.asarray`` of the bucket ids.
+The per-bucket forest step is any *forest-capable* finish resolved through
+the policy-parameterized factories (``core.finish.make_forest_finish``), so
+AMSF composes with every uf_sync compress mode, Shiloach-Vishkin, and every
+KernelPolicy.
 
-  * ``amsf_nf``   — AMSF-NF: no edge filtering; every bucket masks the full
-                    edge list (all edges inspected every round).
-  * ``amsf_nf_s`` — AMSF-NF-S: additionally skips vertices in the running
-                    L_max component (the ConnectIt sampling optimization);
-                    paper-best variant, 2.03–5.36x over exact MSF.
-  * ``amsf_coo``  — AMSF-COO: host-side sort of the COO list + per-bucket
-                    compacted edges.
-  * ``boruvka_msf`` — exact Borůvka (the GBBS-MSF baseline).
+``AppSpec`` (core/apps/spec.py) names the paper variants:
+
+    amsf               AMSF-NF:  every bucket masks the full edge list
+    amsf(skip=lmax)    AMSF-NF-S: additionally skip the running L_max
+                       component (paper-best, 2.03-5.36x over exact MSF)
+    amsf(mode=coo)     AMSF-COO: host-sorted COO + per-bucket compaction
+                       (kept for parity; the one host-side path)
+    msf                exact Borůvka (the GBBS-MSF stand-in baseline)
+
+``repro.api.ConnectIt(variant, exec=..., kernels=...).amsf(g, w)`` is the
+session entrypoint; the mesh placements run the distributed bucket-forest
+programs in ``core.distributed``. The seed-era ``amsf_nf``/``amsf_nf_s``/
+``amsf_coo`` entrypoints remain as DeprecationWarning shims.
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...graphs.containers import Graph, round_up
-from ..finish import uf_sync_forest
+from ...graphs.containers import Graph
+from ..finish import make_forest_finish
 from ..primitives import (
     INT_MAX,
     full_compress,
     init_forest,
     init_labels,
     most_frequent,
-    parents_of,
     write_min,
 )
 
+# static size of the per-bucket stats histogram carried through the device
+# sweep (stats only — the sweep itself is uncapped; buckets beyond the cap
+# fold into the last slot and are reported truncated)
+STATS_BUCKET_CAP = 64
 
-def _bucket_ids(w: jax.Array, eps: float):
+
+def bucket_ids(w: jax.Array, eps: float) -> jax.Array:
+    """Geometric weight buckets: ``floor(log(w / wmin) / log(1 + eps))``.
+
+    Non-finite weights (the padding convention of ``with_weights``) map to
+    ``INT_MAX`` and are never swept. Stays on device — this is the array the
+    seed implementation pulled to the host every run."""
     finite = jnp.isfinite(w)
     wmin = jnp.min(jnp.where(finite, w, jnp.inf))
     b = jnp.floor(jnp.log(jnp.maximum(w / wmin, 1.0)) / jnp.log1p(eps))
-    return jnp.where(finite, b.astype(jnp.int32), INT_MAX), wmin
+    return jnp.where(finite, b.astype(jnp.int32), INT_MAX)
 
 
-@partial(jax.jit, static_argnames=())
-def _bucket_forest_step(P, fu, fv, senders, receivers, active):
-    """Spanning forest restricted to `active` edges against labeling P."""
+@jax.jit
+def bucket_histogram(bids: jax.Array) -> jax.Array:
+    """In-bucket candidate-edge histogram for stats (device-side, capped at
+    STATS_BUCKET_CAP slots; ``INT_MAX`` slots — padding/non-finite — are
+    excluded)."""
+    valid = bids < INT_MAX
+    return jnp.zeros((STATS_BUCKET_CAP,), jnp.int32).at[
+        jnp.clip(bids, 0, STATS_BUCKET_CAP - 1)].add(valid)
+
+
+def _skip_lmax_mask(P, senders, receivers, kernels):
+    """AMSF-NF-S: mask out edges internal to the running L_max component
+    (the ConnectIt sampling optimization applied at the app level)."""
+    Pc = full_compress(P, kernels=kernels)
+    lmax, cnt = most_frequent(Pc)
+    in_lmax = (Pc[senders] == lmax) & (Pc[receivers] == lmax)
+    return ~jnp.where(cnt > 1, in_lmax, False)
+
+
+@partial(jax.jit,
+         static_argnames=("eps", "skip", "forest_fn", "kernels"))
+def amsf_device(P, fu, fv, senders, receivers, weights, *, eps: float,
+                skip: bool, forest_fn, kernels: Optional[str] = None):
+    """The jitted AMSF bucket sweep: one dispatch, zero per-bucket host
+    syncs. Returns ``(P, fu, fv, buckets, rounds, bucket_counts)`` — all
+    device arrays (``bucket_counts`` is the in-bucket candidate-edge
+    histogram, capped at STATS_BUCKET_CAP slots for stats)."""
     n = P.shape[0] - 1
-    s = jnp.where(active, senders, n)
-    r = jnp.where(active, receivers, n)
-    st, _ = uf_sync_forest(P, s, r, fu=fu, fv=fv, compress="full")
-    return st.P, st.fu, st.fv
+    bids = bucket_ids(weights, eps)
+    valid = (bids < INT_MAX) & (senders < n)
+    bids = jnp.where(valid, bids, INT_MAX)
+    bmax = jnp.max(jnp.where(valid, bids, -1))
+    counts = bucket_histogram(bids)
+
+    def cond(st):
+        return st[3] <= bmax
+
+    def body(st):
+        P, fu, fv, b, tot = st
+        active = (bids == b) & (P[senders] != P[receivers])
+        if skip:
+            active &= _skip_lmax_mask(P, senders, receivers, kernels)
+        s = jnp.where(active, senders, n)
+        r = jnp.where(active, receivers, n)
+        st2, rounds = forest_fn(P, s, r, fu, fv)
+        return st2.P, st2.fu, st2.fv, b + 1, tot + rounds.astype(jnp.int32)
+
+    P, fu, fv, b, tot = jax.lax.while_loop(
+        cond, body, (P, fu, fv, jnp.int32(0), jnp.int32(0)))
+    return P, fu, fv, b, tot, counts
 
 
-def _amsf(g: Graph, weights: jax.Array, *, eps: float = 0.25,
-          skip_lmax: bool = False):
-    bids, _ = _bucket_ids(weights, eps)
-    bids_np = np.asarray(bids)
-    P = init_labels(g.n)
-    fu, fv = init_forest(g.n)
-    n_buckets = int(bids_np[bids_np < INT_MAX].max(initial=0)) + 1
-    for b in range(n_buckets):
-        active = bids == b
-        # self-loops under the current labeling contribute nothing
-        same = P[g.senders] == P[g.receivers]
-        active = active & ~same & g.edge_mask
-        if skip_lmax:
-            lmax, cnt = most_frequent(full_compress(P))
-            in_lmax = (P[g.senders] == lmax) & (P[g.receivers] == lmax)
-            active = active & ~jnp.where(cnt > 1, in_lmax, False)
-        P, fu, fv = _bucket_forest_step(P, fu, fv, g.senders, g.receivers, active)
-    fu_np, fv_np = np.asarray(fu), np.asarray(fv)
-    sel = (fu_np >= 0) & (fv_np >= 0)
-    return np.stack([fu_np[sel], fv_np[sel]], 1), P
-
-
-def amsf_nf(g: Graph, weights, *, eps: float = 0.25):
-    return _amsf(g, weights, eps=eps, skip_lmax=False)
-
-
-def amsf_nf_s(g: Graph, weights, *, eps: float = 0.25):
-    return _amsf(g, weights, eps=eps, skip_lmax=True)
-
-
-def amsf_coo(g: Graph, weights, *, eps: float = 0.25):
-    """Host-sorted COO variant: per-bucket compacted edge arrays."""
+def amsf_coo_run(g: Graph, weights, *, eps: float, forest_fn,
+                 pad: str = "multiple", pad_multiple: int = 8):
+    """AMSF-COO: host-side stable sort by bucket + per-bucket compacted edge
+    dispatches (the parity path; per-bucket shapes follow the ExecutionSpec
+    pad policy). Returns the same tuple shape as ``amsf_device`` with host
+    ints for buckets/rounds."""
+    from ..driver import bucket_size
     w = np.asarray(weights)[: g.m]
     s = np.asarray(g.senders)[: g.m]
     r = np.asarray(g.receivers)[: g.m]
-    eps_b = np.floor(np.log(np.maximum(w / w.min(), 1.0)) / np.log1p(eps)).astype(np.int64)
-    order = np.argsort(eps_b, kind="stable")
-    s, r, eps_b = s[order], r[order], eps_b[order]
+    finite = np.isfinite(w)
+    s, r, w = s[finite], r[finite], w[finite]
+    if w.size:
+        b = np.floor(np.log(np.maximum(w / w.min(), 1.0))
+                     / np.log1p(eps)).astype(np.int64)
+    else:
+        b = np.zeros((0,), np.int64)
+    order = np.argsort(b, kind="stable")
+    s, r, b = s[order], r[order], b[order]
     P = init_labels(g.n)
     fu, fv = init_forest(g.n)
-    bounds = np.searchsorted(eps_b, np.arange(eps_b.max() + 2))
-    for b in range(len(bounds) - 1):
-        lo, hi = int(bounds[b]), int(bounds[b + 1])
+    n_buckets = int(b.max()) + 1 if b.size else 0
+    bounds = np.searchsorted(b, np.arange(n_buckets + 1))
+    counts, sizes, tot = [], [], 0
+    for k in range(n_buckets):
+        lo, hi = int(bounds[k]), int(bounds[k + 1])
+        counts.append(hi - lo)
         if lo == hi:
             continue
-        m_pad = max(round_up(hi - lo, 8), 8)
-        bs = np.full((m_pad,), g.n, np.int32)
-        br = np.full((m_pad,), g.n, np.int32)
+        size = bucket_size(hi - lo, pad=pad, pad_multiple=pad_multiple)
+        sizes.append(size)
+        bs = np.full((size,), g.n, np.int32)
+        br = np.full((size,), g.n, np.int32)
         bs[: hi - lo] = s[lo:hi]
         br[: hi - lo] = r[lo:hi]
-        st, _ = uf_sync_forest(P, jnp.asarray(bs), jnp.asarray(br),
-                               fu=fu, fv=fv, compress="full")
+        st, rounds = forest_fn(P, jnp.asarray(bs), jnp.asarray(br), fu, fv)
         P, fu, fv = st.P, st.fu, st.fv
+        tot += int(rounds)
+    return P, fu, fv, n_buckets, tot, counts, sizes
+
+
+def forest_edges(fu, fv) -> np.ndarray:
+    """Compact device forest buffers to a host ``(k, 2)`` edge array."""
     fu_np, fv_np = np.asarray(fu), np.asarray(fv)
     sel = (fu_np >= 0) & (fv_np >= 0)
-    return np.stack([fu_np[sel], fv_np[sel]], 1), P
+    return np.stack([fu_np[sel], fv_np[sel]], 1)
 
 
 def boruvka_msf(g: Graph, weights: jax.Array, *, max_rounds: int = 64):
@@ -172,14 +226,55 @@ def boruvka_msf(g: Graph, weights: jax.Array, *, max_rounds: int = 64):
 
 
 def forest_weight(edges: np.ndarray, g: Graph, weights) -> float:
-    """Sum of weights of (undirected) forest edges."""
+    """Sum of weights of (undirected) forest edges (vectorized lookup)."""
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        return 0.0
     w = np.asarray(weights)[: g.m]
     s = np.asarray(g.senders)[: g.m].astype(np.int64)
     r = np.asarray(g.receivers)[: g.m].astype(np.int64)
-    lut = {}
-    for i in range(len(s)):
-        lut[(s[i], r[i])] = w[i]
-    total = 0.0
-    for u, v in edges:
-        total += lut[(int(u), int(v))]
-    return float(total)
+    key = s * (g.n + 1) + r
+    order = np.argsort(key, kind="stable")
+    qk = edges[:, 0].astype(np.int64) * (g.n + 1) + edges[:, 1].astype(np.int64)
+    pos = np.searchsorted(key[order], qk)
+    if np.any(pos >= len(key)) or np.any(key[order][pos] != qk):
+        raise KeyError("forest edge not present in the graph's edge list")
+    return float(w[order][pos].sum())
+
+
+# ---------------------------------------------------------------------------
+# Legacy entrypoints (deprecation shims over the spec path).
+# ---------------------------------------------------------------------------
+
+_DEPRECATION = ("%s is deprecated; use repro.api.ConnectIt(variant).amsf(g, "
+                "weights, spec=%r) — see docs/API.md (Applications)")
+
+
+def _legacy_amsf(g: Graph, weights, *, eps: float, skip: bool):
+    forest_fn = make_forest_finish("uf_sync", compress="full")
+    P, fu, fv, _, _, _ = amsf_device(
+        init_labels(g.n), *init_forest(g.n), g.senders, g.receivers,
+        jnp.asarray(weights), eps=float(eps), skip=skip,
+        forest_fn=forest_fn)
+    return forest_edges(fu, fv), P
+
+
+def amsf_nf(g: Graph, weights, *, eps: float = 0.25):
+    warnings.warn(_DEPRECATION % ("amsf_nf", "amsf"),
+                  DeprecationWarning, stacklevel=2)
+    return _legacy_amsf(g, weights, eps=eps, skip=False)
+
+
+def amsf_nf_s(g: Graph, weights, *, eps: float = 0.25):
+    warnings.warn(_DEPRECATION % ("amsf_nf_s", "amsf(skip=lmax)"),
+                  DeprecationWarning, stacklevel=2)
+    return _legacy_amsf(g, weights, eps=eps, skip=True)
+
+
+def amsf_coo(g: Graph, weights, *, eps: float = 0.25):
+    warnings.warn(_DEPRECATION % ("amsf_coo", "amsf(mode=coo)"),
+                  DeprecationWarning, stacklevel=2)
+    forest_fn = make_forest_finish("uf_sync", compress="full")
+    P, fu, fv, _, _, _, _ = amsf_coo_run(g, weights, eps=eps,
+                                         forest_fn=forest_fn)
+    return forest_edges(fu, fv), P

@@ -6,14 +6,28 @@ parallelizes GS*-Query with ConnectIt: cores = vertices with ≥ mu eps-similar
 neighbors; clusters = connected components of the eps-similar core-core
 subgraph; non-core border vertices attach to an adjacent core's cluster.
 
-``build_index`` is host-side (the paper also treats index construction as an
-offline step); ``gs_query_parallel`` is the jit ConnectIt query;
+The query is now a **framework consumer**: the core-core connectivity runs
+through any VariantSpec finish method (all 22 finish × compression
+configurations), any KernelPolicy, and — via the session/backends — any
+execution placement, with the masking/attach phases split out so the mesh
+backends can dispatch the connectivity through their shard_map programs:
+
+    scan_pre(...)      similar / is_core / core-core masked COO   (pre)
+    scan_attach(...)   compress + border attachment               (post)
+    gs_query_device()  the fused single-dispatch query            (single)
+
+``repro.api.ConnectIt(variant, exec=..., kernels=...).scan(g, sims,
+"scan(eps=...,mu=...)")`` is the session entrypoint. ``build_index`` stays
+host-side (the paper treats index construction as offline);
 ``gs_query_sequential`` is the sequential baseline for the Figure-7 speedup.
+The seed-era ``gs_query_parallel`` remains as a DeprecationWarning shim.
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +35,7 @@ import numpy as np
 
 from ...graphs.containers import Graph
 from ..finish import resolve_finish
-from ..primitives import INT_MAX, full_compress, init_labels, write_min
+from ..primitives import full_compress, init_labels, write_min
 
 
 def build_index(g: Graph) -> np.ndarray:
@@ -42,28 +56,49 @@ def build_index(g: Graph) -> np.ndarray:
     return sims
 
 
-@partial(jax.jit, static_argnames=("mu", "finish"))
-def gs_query_parallel(g: Graph, sims: jax.Array, eps: float, *, mu: int = 3,
-                      finish: str = "uf_sync_full"):
-    """Parallel GS*-Query. Returns (labels, is_core); non-core non-border
-    vertices keep their own id (singleton clusters, reported as noise)."""
-    n = g.n
-    similar = (sims >= eps) & g.edge_mask
-    # core: ≥ mu eps-similar neighbors
-    cnt = jnp.zeros((n + 1,), jnp.int32).at[g.senders].add(
-        similar.astype(jnp.int32))
+@partial(jax.jit, static_argnames=("eps", "mu", "n"))
+def scan_pre(senders, receivers, edge_mask, sims, *, eps: float, mu: int,
+             n: int):
+    """Masks + core-core COO on device: ``(s, r, is_core, core_pad,
+    edges_core)`` where ``edges_core`` is the directed core-core similar
+    edge count (a device scalar, for stats)."""
+    similar = (sims >= eps) & edge_mask
+    cnt = jnp.zeros((n + 1,), jnp.int32).at[
+        jnp.where(similar, senders, n)].add(similar.astype(jnp.int32))
     is_core = cnt[:n] >= mu
     core_pad = jnp.concatenate([is_core, jnp.zeros((1,), jnp.bool_)])
-    # connectivity over eps-similar core-core edges
-    both_core = core_pad[g.senders] & core_pad[g.receivers] & similar
-    s = jnp.where(both_core, g.senders, n)
-    r = jnp.where(both_core, g.receivers, n)
-    P, _ = resolve_finish(finish)(init_labels(n), s, r)
-    P = full_compress(P)
-    # attach border vertices to the min adjacent core cluster
-    att = similar & core_pad[g.receivers] & ~core_pad[g.senders]
-    P = write_min(P, jnp.where(att, g.senders, n), P[g.receivers], att)
-    return P[:n], is_core
+    both_core = core_pad[senders] & core_pad[receivers] & similar
+    s = jnp.where(both_core, senders, n)
+    r = jnp.where(both_core, receivers, n)
+    return s, r, is_core, core_pad, similar, jnp.sum(both_core)
+
+
+@partial(jax.jit, static_argnames=("kernels",))
+def scan_attach(P, senders, receivers, core_pad, similar, *,
+                kernels: Optional[str] = None):
+    """Phase 3: compress the core labeling and attach border vertices to the
+    min adjacent core cluster."""
+    n = P.shape[0] - 1
+    P = full_compress(P, kernels=kernels)
+    att = similar & core_pad[receivers] & ~core_pad[senders]
+    P = write_min(P, jnp.where(att, senders, n), P[receivers], att,
+                  kernels=kernels)
+    return P[:n]
+
+
+@partial(jax.jit, static_argnames=("eps", "mu", "finish_fn", "kernels", "n"))
+def gs_query_device(senders, receivers, edge_mask, sims, *, eps: float,
+                    mu: int, finish_fn, kernels: Optional[str] = None,
+                    n: int):
+    """Fused single-dispatch GS*-Query (the single-placement path):
+    masks → finish connectivity → compress + attach, one jit program.
+    Returns ``(labels, is_core, rounds, edges_core)``."""
+    s, r, is_core, core_pad, similar, edges_core = scan_pre(
+        senders, receivers, edge_mask, sims, eps=eps, mu=mu, n=n)
+    P, rounds = finish_fn(init_labels(n), s, r)
+    labels = scan_attach(P, senders, receivers, core_pad, similar,
+                         kernels=kernels)
+    return labels, is_core, rounds, edges_core
 
 
 def gs_query_sequential(g: Graph, sims: np.ndarray, eps: float, *, mu: int = 3):
@@ -98,4 +133,23 @@ def gs_query_sequential(g: Graph, sims: np.ndarray, eps: float, *, mu: int = 3):
                         comp.append(w)
                     elif not is_core[w]:
                         labels[w] = min(labels[w], cid)
+    return labels, is_core
+
+
+# ---------------------------------------------------------------------------
+# Legacy entrypoint (deprecation shim over the spec path).
+# ---------------------------------------------------------------------------
+
+def gs_query_parallel(g: Graph, sims: jax.Array, eps: float, *, mu: int = 3,
+                      finish: str = "uf_sync_full"):
+    """Deprecated: use ``repro.api.ConnectIt(variant).scan(g, sims,
+    "scan(eps=...,mu=...)")`` — the session path composes with every
+    placement and kernel policy and fills ConnectivityStats."""
+    warnings.warn(
+        "gs_query_parallel is deprecated; use repro.api.ConnectIt(variant)"
+        ".scan(g, sims, spec='scan(eps=...,mu=...)') — see docs/API.md",
+        DeprecationWarning, stacklevel=2)
+    labels, is_core, _, _ = gs_query_device(
+        g.senders, g.receivers, g.edge_mask, jnp.asarray(sims),
+        eps=float(eps), mu=int(mu), finish_fn=resolve_finish(finish), n=g.n)
     return labels, is_core

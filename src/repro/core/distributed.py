@@ -44,7 +44,15 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .primitives import full_compress, iterate_to_fixpoint
+from ..kernels import ops
+from .apps.amsf import _skip_lmax_mask
+from .finish import _compress
+from .primitives import (
+    INT_MAX,
+    full_compress,
+    iterate_to_fixpoint,
+    parents_of,
+)
 
 # Fixpoint-detection cap floor for the outer merge loop (rounds=0). Label
 # information crosses at least one shard boundary per outer round, so the
@@ -197,6 +205,158 @@ def make_sharded_compress(mesh: Mesh, label_axis: str,
         return jax.lax.dynamic_slice_in_dim(full, idx * shard_len, shard_len)
 
     return compress
+
+
+# ---------------------------------------------------------------------------
+# Application programs (paper §5): the distributed AMSF bucket forest.
+#
+# Forest-edge recording across shards needs deterministic tie-breaking (one
+# recorded edge per hooked root, Theorem 6), so the per-bucket forest round
+# is *globally synchronized*: every shard computes its local min-hook
+# proposals, the winning (value, edge id, endpoints) buffers are pmin-merged
+# over the edge axes, and only then do all shards apply the hook and record
+# the unique global winner — the min-merge outer loop of the PR 2 machinery
+# applied per round instead of per local fixpoint. The whole bucket sweep
+# (geometric bucket ids → masked per-bucket forest fixpoints) runs inside
+# one shard_map dispatch: zero per-bucket host syncs on the mesh paths too.
+# ---------------------------------------------------------------------------
+
+def _global_forest_round(P, fu, fv, s, r, gid, active, axes, *,
+                         kernels: Optional[str] = None):
+    """One globally-merged forest hook round on an edge shard.
+
+    ``gid`` is the globally-unique edge id of each local slot; ``axes`` are
+    the mesh axes the proposal buffers merge over. Labels in/out are the
+    full replicated array; fu/fv are replicated forest buffers."""
+    n1 = P.shape[0]
+    act = active & (P[s] != P[r])
+    pu = P[s]
+    pv = P[r]
+    root_u = parents_of(P, pu) == pu
+    mask = act & root_u & (pv < pu)
+    big = jnp.full((n1,), INT_MAX, P.dtype)
+    # pass 1: winning hook value per root, merged across shards
+    vbuf = ops.scatter_min(big, pu, pv, mask, policy=kernels)
+    vbuf = jax.lax.pmin(vbuf, axes)
+    # pass 2: winning global edge id among achievers of the winning value
+    safe_pu = jnp.clip(pu, 0, n1 - 1)
+    achieve = mask & (pv == vbuf[safe_pu])
+    ebuf = ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, gid,
+                           achieve, policy=kernels)
+    ebuf = jax.lax.pmin(ebuf, axes)
+    # pass 3: the unique winning shard publishes the edge endpoints
+    mine = achieve & (gid == ebuf[safe_pu])
+    ubuf = jax.lax.pmin(
+        ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, s, mine,
+                        policy=kernels), axes)
+    wbuf = jax.lax.pmin(
+        ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, r, mine,
+                        policy=kernels), axes)
+    # apply: hook roots to the merged winning values, record first-time hooks
+    sel = (ebuf < INT_MAX) & (fu == -1)
+    fu2 = jnp.where(sel, ubuf, fu)
+    fv2 = jnp.where(sel, wbuf, fv)
+    P2 = jnp.minimum(P, vbuf)
+    return P2, fu2, fv2
+
+
+def _bucket_sweep(P, fu, fv, s, r, bids, gid, axes, *, compress: str,
+                  skip: bool, kernels: Optional[str], cap: int):
+    """The shared device-side bucket sweep body (full replicated labels)."""
+    bmax_local = jnp.max(jnp.where(bids < INT_MAX, bids, -1))
+    bmax = jax.lax.pmax(bmax_local, axes)
+
+    def bucket_cond(st):
+        return st[3] <= bmax
+
+    def bucket_body(st):
+        P, fu, fv, b, tot = st
+        active = bids == b
+        if skip:
+            active &= _skip_lmax_mask(P, s, r, kernels)
+
+        def round_(st2):
+            P, fu, fv = st2
+            P2, fu2, fv2 = _global_forest_round(
+                P, fu, fv, s, r, gid, active, axes, kernels=kernels)
+            P2 = _compress(P2, compress, kernels=kernels)
+            return P2, fu2, fv2
+
+        # labels after every pmin merge are identical on all devices, but the
+        # while cond must still be mesh-uniform — reduce the flag to be safe
+        (P, fu, fv), rounds = iterate_to_fixpoint(
+            round_, (P, fu, fv), cap,
+            changed_fn=lambda old, new: jax.lax.pmax(
+                jnp.any(old[0] != new[0]).astype(jnp.int32), axes) > 0)
+        return P, fu, fv, b + 1, tot + rounds.astype(jnp.int32)
+
+    P, fu, fv, b, tot = jax.lax.while_loop(
+        bucket_cond, bucket_body,
+        (P, fu, fv, jnp.int32(0), jnp.int32(0)))
+    return P, fu, fv, b, tot
+
+
+def _shard_gid(mesh: Mesh, axes: Sequence[str], m_local):
+    """Globally-unique int32 edge ids for a shard's local slots."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx * m_local + jnp.arange(m_local, dtype=jnp.int32)
+
+
+def make_replicated_amsf(mesh: Mesh, axes: Sequence[str], *,
+                         compress: str = "full", skip: bool = False,
+                         kernels: Optional[str] = None,
+                         max_rounds: Optional[int] = None):
+    """Distributed AMSF bucket sweep: edges (and bucket ids) sharded over
+    ``axes``, labels and forest buffers replicated. One dispatch for the
+    whole sweep: ``(P, fu, fv, senders, receivers, bids) -> (P, fu, fv,
+    buckets, rounds)``."""
+    axes = tuple(axes)
+    espec = P(axes)
+    cap = _fixpoint_cap(mesh, axes, max_rounds)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(), P(), P(), espec, espec, espec),
+             out_specs=(P(), P(), P(), P(), P()), check_rep=False)
+    def program(labels, fu, fv, s, r, bids):
+        gid = _shard_gid(mesh, axes, s.shape[0])
+        return _bucket_sweep(labels, fu, fv, s, r, bids, gid, axes,
+                             compress=compress, skip=skip, kernels=kernels,
+                             cap=cap)
+
+    return program
+
+
+def make_sharded_amsf(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
+                      *, compress: str = "full", skip: bool = False,
+                      kernels: Optional[str] = None,
+                      max_rounds: Optional[int] = None):
+    """Distributed AMSF with labels sharded over ``label_axis``: the labels
+    are gathered once, the sweep runs on the full array with merges over the
+    edge axes, and the final labeling is resharded. Forest buffers stay
+    replicated (they are the output being compacted host-side anyway)."""
+    edge_axes = tuple(edge_axes)
+    espec = P(edge_axes)
+    lspec = P(label_axis)
+    cap = _fixpoint_cap(mesh, edge_axes, max_rounds)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(lspec, P(), P(), espec, espec, espec),
+             out_specs=(lspec, P(), P(), P(), P()), check_rep=False)
+    def program(lab_shard, fu, fv, s, r, bids):
+        shard_len = lab_shard.shape[0]
+        labels = jax.lax.all_gather(lab_shard, label_axis, tiled=True)
+        gid = _shard_gid(mesh, edge_axes, s.shape[0])
+        labels, fu, fv, b, tot = _bucket_sweep(
+            labels, fu, fv, s, r, bids, gid, edge_axes, compress=compress,
+            skip=skip, kernels=kernels, cap=cap)
+        idx = jax.lax.axis_index(label_axis)
+        shard = jax.lax.dynamic_slice_in_dim(labels, idx * shard_len,
+                                             shard_len)
+        return shard, fu, fv, b, tot
+
+    return program
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,10 @@ class ConnectivityStats:
     lmax_count: int = 0        # vertices in L_max after sampling (0 = none)
     finish_rounds: int = 0     # (outer) rounds the finish dispatch ran
     fused: bool = False        # single: one-dispatch; sharded: rs-merge
+    # application runs (paper §5) fill the same object, plus:
+    app: str = ""              # canonical AppSpec string ("" for core paths)
+    buckets: int = 0           # AMSF: weight buckets swept
+    edges_per_bucket: tuple = ()  # AMSF: in-bucket candidate edges (capped)
 
 
 @partial(jax.jit, static_argnames=("finish_fn", "kernels"))

@@ -64,14 +64,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..graphs.containers import round_up
 from ..kernels.ops import KERNEL_POLICIES
 from . import driver, streaming
+from .apps import amsf as amsf_impl
+from .apps import scan as scan_impl
 from .distributed import (
+    make_replicated_amsf,
     make_replicated_finish,
     make_replicated_stream,
+    make_sharded_amsf,
     make_sharded_finish,
     make_sharded_stream,
 )
 from .primitives import (
+    INT_MAX,
     canonical_labels,
+    init_forest,
     init_labels,
     num_components,
 )
@@ -327,6 +333,63 @@ def _per_chunk_counts(k: int, size: int, shards: int) -> tuple:
                  for i in range(shards))
 
 
+def _resize_device_edges(arrs: tuple, fills: tuple, size: int) -> tuple:
+    """Resize device edge-aligned arrays to a dispatch ``size`` without a
+    host round-trip: grow with sentinel tails, or drop tail padding (callers
+    guarantee real entries occupy the first ``min(size, m_pad)`` slots)."""
+    m = int(arrs[0].shape[0])
+    if size > m:
+        return tuple(
+            jnp.concatenate([a, jnp.full((size - m,), fill, a.dtype)])
+            for a, fill in zip(arrs, fills))
+    if size < m:
+        return tuple(a[:size] for a in arrs)
+    return arrs
+
+
+# ---------------------------------------------------------------------------
+# Application helpers shared by the backends (paper §5).
+# ---------------------------------------------------------------------------
+
+def _fill_amsf_stats(stats, nb, rounds, counts, *, size: int, m_real: int,
+                     shards: int) -> None:
+    """Fill the AMSF slice of ConnectivityStats from device results.
+
+    ``edges_finish`` counts finite-weight real edges (each belongs to
+    exactly one bucket); masked-sweep dispatches scatter the full ``size``
+    list once per bucket, hence ``edges_finish_padded = buckets * size``."""
+    nb = int(nb)
+    counts = np.asarray(counts)
+    stats.buckets = nb
+    stats.finish_rounds = int(rounds)
+    stats.edges_per_bucket = tuple(
+        int(c) for c in counts[: min(nb, counts.shape[0])])
+    stats.edges_finish = int(counts.sum())
+    stats.edges_finish_padded = nb * size
+    stats.edges_per_device = _per_chunk_counts(min(m_real, size), size, shards)
+    stats.dispatch_sizes = (size // shards,) * shards
+
+
+def _amsf_coo_host(backend, g, weights, app, forest_fn, stats):
+    """AMSF-COO parity path: host bucket compaction is inherently a
+    single-device loop (the spanning-forest precedent on mesh backends —
+    results and stats surfaces are unchanged)."""
+    _, fu, fv, nb, rounds, counts, sizes = amsf_impl.amsf_coo_run(
+        g, weights, eps=app.eps, forest_fn=forest_fn,
+        pad=backend.spec.pad, pad_multiple=backend.spec.pad_multiple)
+    cap = amsf_impl.STATS_BUCKET_CAP
+    if len(counts) > cap:  # fold overflow like the device histogram
+        counts = counts[: cap - 1] + [sum(counts[cap - 1:])]
+    stats.buckets = nb
+    stats.finish_rounds = rounds
+    stats.edges_per_bucket = tuple(counts)
+    stats.edges_finish = sum(counts)
+    stats.edges_finish_padded = sum(sizes)
+    stats.edges_per_device = (sum(counts),)
+    stats.dispatch_sizes = tuple(sizes)
+    return fu, fv
+
+
 # ---------------------------------------------------------------------------
 # Stream ops: the backend-facing surface behind ``repro.api.Stream``.
 # ---------------------------------------------------------------------------
@@ -435,6 +498,32 @@ class SingleBackend(_Backend):
             batch_size=self._bucket,
         )
 
+    # -- applications (paper §5) --------------------------------------------
+
+    def amsf(self, g, weights, app, forest_fn, *, compress: str, stats):
+        if app.mode == "coo":
+            return _amsf_coo_host(self, g, weights, app, forest_fn, stats)
+        P0 = init_labels(g.n)
+        fu0, fv0 = init_forest(g.n)
+        _, fu, fv, nb, rounds, counts = amsf_impl.amsf_device(
+            P0, fu0, fv0, g.senders, g.receivers, weights,
+            eps=app.eps, skip=(app.skip == "lmax"), forest_fn=forest_fn,
+            kernels=self.kernels)
+        _fill_amsf_stats(stats, nb, rounds, counts, size=g.m_pad,
+                         m_real=g.m, shards=1)
+        return fu, fv
+
+    def scan(self, g, sims, app, finish_fn, stats):
+        labels, is_core, rounds, edges_core = scan_impl.gs_query_device(
+            g.senders, g.receivers, g.edge_mask, sims, eps=app.eps,
+            mu=app.mu, finish_fn=finish_fn, kernels=self.kernels, n=g.n)
+        stats.finish_rounds = int(rounds)
+        stats.edges_finish = int(edges_core)
+        stats.edges_finish_padded = g.m_pad
+        stats.edges_per_device = (int(edges_core),)
+        stats.dispatch_sizes = (g.m_pad,)
+        return labels, is_core
+
 
 class _MeshBackend(_Backend):
     """Shared distributed machinery: edge dispatch prep + canonicalization."""
@@ -464,14 +553,9 @@ class _MeshBackend(_Backend):
             P0 = init_labels(g.n)
             kept = g.m
             size = self._bucket(kept)
-            senders, receivers = g.senders, g.receivers
-            if size > g.m_pad:
-                tail = jnp.full((size - g.m_pad,), g.n, senders.dtype)
-                senders = jnp.concatenate([senders, tail])
-                receivers = jnp.concatenate([receivers, tail])
-            elif size < g.m_pad:  # bucket >= m, so only dump pad is dropped
-                senders = senders[:size]
-                receivers = receivers[:size]
+            # bucket >= m, so only dump pad is grown or dropped
+            senders, receivers = _resize_device_edges(
+                (g.senders, g.receivers), (g.n, g.n), size)
         else:
             P0 = sampler_fn(g, key)
             P0, keep, _, cnt = driver._prep_sampled(P0, g.senders, g.receivers)
@@ -548,6 +632,60 @@ class _MeshBackend(_Backend):
             batch_size=self._bucket,
         )
 
+    # -- applications (paper §5) --------------------------------------------
+
+    def _amsf_program(self, *, compress: str, skip: bool):
+        key = ("amsf", compress, skip)
+        if key not in self._programs:
+            self._programs[key] = jax.jit(
+                self._build_amsf(compress=compress, skip=skip))
+        return self._programs[key]
+
+    def amsf(self, g, weights, app, forest_fn, *, compress: str, stats):
+        if app.mode == "coo":
+            return _amsf_coo_host(self, g, weights, app, forest_fn, stats)
+        size = self._bucket(g.m)
+        senders, receivers = _resize_device_edges(
+            (g.senders, g.receivers), (g.n, g.n), size)
+        bids = amsf_impl.bucket_ids(weights, app.eps)
+        (bids,) = _resize_device_edges((bids,), (INT_MAX,), size)
+        bids = jnp.where(senders < g.n, bids, INT_MAX)
+        counts = amsf_impl.bucket_histogram(bids)
+        P0 = self._place_labels(init_labels(g.n))
+        fill = jnp.int32(-1)
+        fu0 = jnp.full((P0.shape[0],), fill)
+        fv0 = jnp.full((P0.shape[0],), fill)
+        program = self._amsf_program(compress=compress,
+                                     skip=(app.skip == "lmax"))
+        _, fu, fv, nb, rounds = program(P0, fu0, fv0, senders, receivers,
+                                        bids)
+        _fill_amsf_stats(stats, nb, rounds, counts, size=size, m_real=g.m,
+                         shards=self.edge_shards)
+        return fu, fv
+
+    def scan(self, g, sims, app, finish_fn, stats):
+        s, r, is_core, core_pad, similar, edges_core = scan_impl.scan_pre(
+            g.senders, g.receivers, g.edge_mask, sims, eps=app.eps,
+            mu=app.mu, n=g.n)
+        size = self._bucket(g.m)
+        s, r = _resize_device_edges((s, r), (g.n, g.n), size)
+        # the core-core connectivity — the heavy phase — dispatches through
+        # the placement's finish program (per-shard finish + min-merge loop)
+        program = self._finish_program(finish_fn)
+        P, rounds = program(self._place_labels(init_labels(g.n)), s, r)
+        labels = scan_impl.scan_attach(P[: g.n + 1], g.senders, g.receivers,
+                                       core_pad, similar,
+                                       kernels=self.kernels)
+        stats.finish_rounds = int(rounds)
+        stats.edges_finish = int(edges_core)
+        stats.edges_finish_padded = size
+        shards = self.edge_shards
+        stats.edges_per_device = tuple(
+            np.asarray(jnp.sum((s < g.n).reshape(shards, -1), axis=1,
+                               dtype=jnp.int32)).tolist())
+        stats.dispatch_sizes = (size // shards,) * shards
+        return labels, is_core
+
 
 class ReplicatedBackend(_MeshBackend):
     """Edges sharded over every spec axis, labels replicated per device."""
@@ -562,6 +700,11 @@ class ReplicatedBackend(_MeshBackend):
         return make_replicated_stream(self.mesh, self.spec.axes, finish_fn,
                                       rounds=self.spec.rounds,
                                       kernels=self.kernels)
+
+    def _build_amsf(self, *, compress: str, skip: bool):
+        return make_replicated_amsf(self.mesh, self.spec.axes,
+                                    compress=compress, skip=skip,
+                                    kernels=self.kernels)
 
     def _place_labels(self, P0):
         return jax.device_put(P0, NamedSharding(self.mesh, P()))
@@ -589,6 +732,11 @@ class ShardedBackend(_MeshBackend):
             self.mesh, self.spec.axes, self.spec.label_axis, finish_fn,
             reduce_scatter=self.spec.fused, rounds=self.spec.rounds,
             kernels=self.kernels)
+
+    def _build_amsf(self, *, compress: str, skip: bool):
+        return make_sharded_amsf(
+            self.mesh, self.spec.axes, self.spec.label_axis,
+            compress=compress, skip=skip, kernels=self.kernels)
 
     def _place_labels(self, P0):
         # pad (n + 1,) to divide the label axis; extra slots are self-rooted

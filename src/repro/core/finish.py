@@ -366,6 +366,14 @@ def finish_names() -> list[str]:
 
 # ---------------------------------------------------------------------------
 # Root-based spanning-forest finish (paper §3.4): uf_sync/SV + edge recording.
+#
+# Forest-capable methods are the *root-based* ones (Theorem 6: one recorded
+# edge per hooked root): the uf_sync family under every compress mode, and
+# Shiloach-Vishkin — whose round (min-hook roots + full compression) is,
+# with recording added, exactly the uf_sync forest body at compress='full'.
+# ``make_forest_finish`` resolves them with the same memoized-factory
+# discipline as ``make_finish`` so apps (AMSF's per-bucket forest step, the
+# spanning-forest driver) get stable jit identities per parameterization.
 # ---------------------------------------------------------------------------
 
 class ForestState(NamedTuple):
@@ -399,3 +407,53 @@ def uf_sync_forest(P, senders, receivers, fu=None, fv=None, *,
         step, (P, fu, fv), max_rounds,
         changed_fn=lambda old, new: jnp.any(old[0] != new[0]))
     return ForestState(P, fu, fv), rounds
+
+
+FOREST_METHODS = ("uf_sync", "shiloach_vishkin")
+
+ForestFn = Callable[..., tuple[ForestState, jax.Array]]
+
+_FOREST_REGISTRY = FactoryRegistry("forest-capable finish method")
+
+
+def forest_method_names() -> list[str]:
+    return _FOREST_REGISTRY.names()
+
+
+def make_forest_finish(method: str, **params) -> ForestFn:
+    """Build (or fetch the memoized) forest-step callable for a root-based
+    finish method: ``(P, senders, receivers, fu, fv) -> (ForestState,
+    rounds)``. Raises KeyError for non-forest-capable methods (label_prop,
+    stergiou, liu_tarjan — paper §3.4's documented restriction)."""
+    return _FOREST_REGISTRY.make(method, **params)
+
+
+@_FOREST_REGISTRY.register("uf_sync")
+def make_uf_sync_forest(compress: str = "full",
+                        kernels: Optional[str] = None) -> ForestFn:
+    if compress not in COMPRESS_MODES:
+        raise ValueError(
+            f"unknown compress mode {compress!r}; have {COMPRESS_MODES}")
+
+    def forest(P, senders, receivers, fu, fv, *, max_rounds: int = 1 << 20):
+        return uf_sync_forest(P, senders, receivers, fu=fu, fv=fv,
+                              compress=compress, max_rounds=max_rounds,
+                              kernels=kernels)
+
+    forest.__name__ = f"uf_sync_forest_{compress}" + (
+        f"[{kernels}]" if kernels else "")
+    return forest
+
+
+@_FOREST_REGISTRY.register("shiloach_vishkin")
+def make_sv_forest(kernels: Optional[str] = None) -> ForestFn:
+    # SV's round is min-hook-roots + full compression; adding the Theorem-6
+    # edge recording makes it the uf_sync forest body at compress='full'
+    def forest(P, senders, receivers, fu, fv, *, max_rounds: int = 1 << 20):
+        return uf_sync_forest(P, senders, receivers, fu=fu, fv=fv,
+                              compress="full", max_rounds=max_rounds,
+                              kernels=kernels)
+
+    forest.__name__ = "shiloach_vishkin_forest" + (
+        f"[{kernels}]" if kernels else "")
+    return forest

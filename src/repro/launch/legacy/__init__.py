@@ -1,0 +1,9 @@
+"""Quarantined seed-era LM launch drivers.
+
+``serve.py`` here is the transformer prefill/decode driver the seed shipped
+(unrelated to the ConnectIt paper). It exists only for the generic
+arch-smoke harness over the quarantined LM configs (``configs/legacy/``) and
+lives out of the ConnectIt surface, pending deletion once the smoke harness
+drops the LM family. ``repro.launch.serve`` now serves the actual workload:
+batched connectivity queries through ``ConnectIt(...).stream(n)``.
+"""

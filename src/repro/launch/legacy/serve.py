@@ -1,0 +1,74 @@
+"""Quarantined seed-era LM serving driver: prefill + batched decode.
+
+Unrelated to the ConnectIt paper — kept only for the arch-smoke harness
+over the quarantined LM configs (see ``launch/legacy/__init__.py``). The
+graph-query serving driver lives at ``repro.launch.serve``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.legacy.serve --arch qwen3-4b --tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ...configs import get_arch
+from ...models import transformer as tfm
+
+
+def serve(arch_name: str, *, batch: int = 4, prompt_len: int = 32,
+          gen_tokens: int = 32, seed: int = 0, verbose: bool = True):
+    arch = get_arch(arch_name)
+    assert arch.family == "lm", "serve driver targets LM archs"
+    cfg = dataclasses.replace(arch.model, **arch.smoke)
+    key = jax.random.PRNGKey(seed)
+    params = tfm.init_params(key, cfg)
+    prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (batch, prompt_len), 0, cfg.vocab)
+    max_len = prompt_len + gen_tokens
+
+    logits, cache = jax.jit(
+        lambda p, t: tfm.prefill(p, t, cfg, max_len))(params, prompts)
+
+    @jax.jit
+    def decode(params, cache, tok):
+        return tfm.decode_step(params, cache, tok, cfg)
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(gen_tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(out, 1)
+    if verbose:
+        print(f"[serve] {arch_name}: batch={batch} prompt={prompt_len} "
+              f"generated={gen.shape[1]} tokens "
+              f"({batch * (gen_tokens - 1) / max(dt, 1e-9):.1f} tok/s)")
+        print("[serve] first sequence:", gen[0].tolist())
+    return gen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+    serve(args.arch, batch=args.batch, prompt_len=args.prompt,
+          gen_tokens=args.tokens)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,72 +1,84 @@
-"""LM serving driver: prefill + batched decode on reduced configs.
+"""Connectivity query serving driver (paper §3.5 workload, served).
 
-Demonstrates the serving path end-to-end on CPU (smoke configs): batch of
-prompts → prefill builds (ring) KV caches → N decode steps with greedy
-sampling. The full-config serve cells are exercised by the dry-run.
+Answers batched IsConnected queries over a live edge stream through the
+declarative session API: one ``ConnectIt(variant, exec=..., kernels=...)``
+session, one ``Stream`` handle, and ``process`` dispatches that insert the
+batch's edges and answer its queries in a single device program. This is
+the serving shape the north star asks for — many concurrent clients map to
+query batches, placements scale the label state, and the pow2 batch
+bucketing keeps ragged client batches on compiled shapes.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --n 65536 --batches 64
+  PYTHONPATH=src python -m repro.launch.serve --exec "replicated(x)" \
+      --variant none+uf_sync_full --batch 4096 --queries 1024
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
-
-from ..configs import get_arch
-from ..models import transformer as tfm
+import numpy as np
 
 
-def serve(arch_name: str, *, batch: int = 4, prompt_len: int = 32,
-          gen_tokens: int = 32, seed: int = 0, verbose: bool = True):
-    arch = get_arch(arch_name)
-    assert arch.family == "lm", "serve driver targets LM archs"
-    cfg = dataclasses.replace(arch.model, **arch.smoke)
-    key = jax.random.PRNGKey(seed)
-    params = tfm.init_params(key, cfg)
-    prompts = jax.random.randint(jax.random.fold_in(key, 1),
-                                 (batch, prompt_len), 0, cfg.vocab)
-    max_len = prompt_len + gen_tokens
+def serve(n: int = 1 << 16, *, batches: int = 32, batch_edges: int = 4096,
+          queries: int = 1024, variant: str = "none+uf_sync_full",
+          exec: str = "single",  # noqa: A002 - mirrors the session API
+          kernels: str | None = None, seed: int = 0, verbose: bool = True):
+    """Run the serving loop; returns (queries_per_s, stream handle)."""
+    from ..api import ConnectIt
+    ci = ConnectIt(variant, exec=exec, kernels=kernels)
+    handle = ci.stream(n)
+    rng = np.random.default_rng(seed)
+    # warm the compiled shapes with one throwaway batch
+    u = rng.integers(0, n, size=batch_edges).astype(np.int32)
+    v = rng.integers(0, n, size=batch_edges).astype(np.int32)
+    qa = rng.integers(0, n, size=queries).astype(np.int32)
+    qb = rng.integers(0, n, size=queries).astype(np.int32)
+    jax.block_until_ready(handle.process(u, v, qa, qb))
 
-    logits, cache = jax.jit(
-        lambda p, t: tfm.prefill(p, t, cfg, max_len))(params, prompts)
-
-    @jax.jit
-    def decode(params, cache, tok):
-        return tfm.decode_step(params, cache, tok, cfg)
-
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [tok]
+    answered = 0
+    warm_edges = handle.edges_inserted  # exclude the warmup batch from rates
     t0 = time.time()
-    for _ in range(gen_tokens - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    gen = jnp.stack(out, 1)
+    ans = None
+    for _ in range(batches):
+        u = rng.integers(0, n, size=batch_edges).astype(np.int32)
+        v = rng.integers(0, n, size=batch_edges).astype(np.int32)
+        qa = rng.integers(0, n, size=queries).astype(np.int32)
+        qb = rng.integers(0, n, size=queries).astype(np.int32)
+        ans = handle.process(u, v, qa, qb)
+        answered += queries
+    jax.block_until_ready(ans)
+    dt = max(time.time() - t0, 1e-9)
+    qps = answered / dt
     if verbose:
-        print(f"[serve] {arch_name}: batch={batch} prompt={prompt_len} "
-              f"generated={gen.shape[1]} tokens "
-              f"({batch * (gen_tokens - 1) / max(dt, 1e-9):.1f} tok/s)")
-        print("[serve] first sequence:", gen[0].tolist())
-    return gen
+        stats = handle.stats
+        inserted = handle.edges_inserted - warm_edges
+        print(f"[serve] {variant} exec={stats.exec}: {batches} batches x "
+              f"{batch_edges} edges + {queries} queries "
+              f"({qps:,.0f} queries/s, {inserted / dt:,.0f} "
+              f"edge inserts/s, {stats.devices} device(s))")
+        print(f"[serve] components now: {handle.num_components()} "
+              f"(batch shapes compiled: {list(stats.batch_shapes)})")
+    return qps, handle
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--n", type=int, default=1 << 16)
+    ap.add_argument("--batches", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4096, dest="batch_edges")
+    ap.add_argument("--queries", type=int, default=1024)
+    ap.add_argument("--variant", default="none+uf_sync_full")
+    ap.add_argument("--exec", default="single", dest="exec_spec")
+    ap.add_argument("--kernels", default=None)
     args = ap.parse_args(argv)
-    serve(args.arch, batch=args.batch, prompt_len=args.prompt,
-          gen_tokens=args.tokens)
+    serve(args.n, batches=args.batches, batch_edges=args.batch_edges,
+          queries=args.queries, variant=args.variant, exec=args.exec_spec,
+          kernels=args.kernels)
     return 0
 
 

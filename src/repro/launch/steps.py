@@ -3,7 +3,7 @@
 Each cell packages a jit-able step function with ShapeDtypeStruct inputs
 (``input_specs`` — weak-type-correct, shardable, never allocated) and input
 NamedShardings. ``dryrun.py`` lowers + compiles every cell; ``train.py`` /
-``serve.py`` run reduced cells for real.
+``legacy/serve.py`` run reduced cells for real.
 """
 
 from __future__ import annotations

@@ -1,14 +1,33 @@
-"""Application tests: AMSF (§5.1) and SCAN GS*-Query (§5.2)."""
+"""Application tests: AMSF (§5.1) and SCAN GS*-Query (§5.2) as first-class
+consumers of the VariantSpec × ExecutionSpec × KernelPolicy stack.
+
+The cross-stack sweeps run every placement at any device count (meshes of 1
+under plain pytest; CI re-runs this file with 8 forced host devices) and
+under both the reference and the interpreted-Pallas kernel paths.
+"""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import AppSpec, ConnectIt, default_app_grid
 from repro.core.apps import amsf, scan
+from repro.core.finish import make_forest_finish
+from repro.core.primitives import init_forest, init_labels
 from repro.graphs import components_oracle
 from repro.graphs import generators as gen
 from repro.graphs.generators import with_weights
+
+EXECS = ["single", "replicated(x)", "sharded(x)"]
+KERNELS = ["ref", "interpret"]
+# forest-capable variants spanning sampling schemes, compress modes, and SV
+AMSF_VARIANTS = ["none+uf_sync_full", "kout_hybrid_k2+uf_sync_naive",
+                 "bfs_c3+shiloach_vishkin"]
+SCAN_VARIANTS = ["none+uf_sync_full", "kout_hybrid_k2+uf_sync_halve",
+                 "none+liu_tarjan_CRFA"]
 
 
 @pytest.fixture(scope="module")
@@ -17,17 +36,193 @@ def weighted_graph():
     return g, with_weights(g, seed=1)
 
 
-def test_boruvka_msf_is_spanning(weighted_graph):
+@pytest.fixture(scope="module")
+def exact_msf(weighted_graph):
     g, w = weighted_graph
-    exact, _ = amsf.boruvka_msf(g, w)
-    ncomp = len(set(components_oracle(g).tolist()))
+    edges, _ = amsf.boruvka_msf(g, w)
+    return edges, amsf.forest_weight(edges, g, w)
+
+
+@pytest.fixture(scope="module")
+def scan_graph():
+    g = gen.planted_components(100, 3, 6.0, seed=2)
+    return g, scan.build_index(g)
+
+
+# ---------------------------------------------------------------------------
+# AppSpec grammar: exact round-trips, canonical pinning, validation.
+# ---------------------------------------------------------------------------
+
+def test_app_grid_roundtrips_exactly():
+    for spec in default_app_grid():
+        assert AppSpec.parse(str(spec)) == spec
+    # defaults are omitted from canonical strings but parse back equal
+    assert AppSpec.parse("amsf(eps=0.25)") == AppSpec("amsf")
+    assert str(AppSpec.parse("amsf(eps=0.25,skip=lmax)")) == "amsf(skip=lmax)"
+    assert AppSpec.parse("scan(eps=0.6,mu=3)") == AppSpec("scan")
+
+
+def test_app_unused_knobs_are_pinned():
+    # msf has no knobs; amsf ignores mu; scan ignores skip/mode
+    assert AppSpec("msf") == AppSpec("msf", mu=9)
+    assert AppSpec("amsf", mu=7) == AppSpec("amsf")
+    assert AppSpec("scan", skip="lmax", mode="coo") == AppSpec("scan")
+    # eps defaults are app-specific
+    assert AppSpec("amsf").eps == 0.25
+    assert AppSpec("scan").eps == 0.6
+
+
+@pytest.mark.parametrize("bad", [
+    "quantum", "amsf()", "amsf(eps=)", "amsf(skip=maybe)", "amsf(mode=csr)",
+    "amsf(mu=3)", "scan(mode=coo)", "scan(eps=1.5)", "scan(mu=0)",
+    "amsf(eps=-1.0)", "amsf(skip=lmax,mode=coo)", "msf(eps=0.25)",
+])
+def test_invalid_app_specs_rejected(bad):
+    with pytest.raises(ValueError):
+        AppSpec.parse(bad)
+
+
+def test_app_spec_is_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        AppSpec("amsf").eps = 0.5
+
+
+# ---------------------------------------------------------------------------
+# AMSF across the stack: variant × placement × kernel policy, oracle-bound.
+# ---------------------------------------------------------------------------
+
+def _check_amsf(ci, g, w, spec, exact_weight, ncomp, eps):
+    edges, stats = ci.amsf(g, w, spec, return_stats=True)
+    assert len(edges) == g.n - ncomp, (str(ci.spec), spec)
+    aw = amsf.forest_weight(edges, g, w)
+    assert exact_weight - 1e-5 <= aw <= (1 + eps) * exact_weight + 1e-5, \
+        (str(ci.spec), spec, aw, exact_weight)
+    return stats
+
+
+@pytest.mark.parametrize("kernels", KERNELS)
+@pytest.mark.parametrize("exec_str", EXECS)
+@pytest.mark.parametrize("variant", AMSF_VARIANTS)
+def test_amsf_across_stack(weighted_graph, exact_msf, variant, exec_str,
+                           kernels):
+    g, w = weighted_graph
+    _, ew = exact_msf
+    ncomp = len(np.unique(components_oracle(g)))
+    ci = ConnectIt(variant, exec=exec_str, kernels=kernels)
+    stats = _check_amsf(ci, g, w, "amsf(skip=lmax)", ew, ncomp, 0.25)
+    assert stats.placement == exec_str.split("(")[0]
+    assert stats.app == "amsf(skip=lmax)"
+    assert stats.buckets > 0 and stats.finish_rounds > 0
+    assert sum(stats.edges_per_bucket) == stats.edges_finish == g.m
+
+
+@pytest.mark.parametrize("spec", ["amsf", "amsf(mode=coo)",
+                                  "amsf(eps=0.5,skip=lmax)"])
+def test_amsf_spec_variants_single(weighted_graph, exact_msf, spec):
+    g, w = weighted_graph
+    _, ew = exact_msf
+    ncomp = len(np.unique(components_oracle(g)))
+    eps = AppSpec.parse(spec).eps
+    _check_amsf(ConnectIt("none+uf_sync_full"), g, w, spec, ew, ncomp, eps)
+
+
+def test_msf_session_method_is_exact(weighted_graph, exact_msf):
+    g, w = weighted_graph
+    _, ew = exact_msf
+    edges = ConnectIt("none+uf_sync_full").msf(g, w)
+    np.testing.assert_allclose(amsf.forest_weight(edges, g, w), ew, rtol=1e-6)
+
+
+def test_amsf_rejects_non_forest_finish(weighted_graph):
+    g, w = weighted_graph
+    with pytest.raises(ValueError):
+        ConnectIt("none+label_prop").amsf(g, w)
+    with pytest.raises(ValueError):
+        ConnectIt("none+uf_sync_full").amsf(g, w, "scan")
+
+
+# ---------------------------------------------------------------------------
+# Regression (satellite): the jitted AMSF bucket sweep is device-resident —
+# no host callback, no device→host transfer, regardless of whether the
+# caller ever inspects bucket ids.
+# ---------------------------------------------------------------------------
+
+def test_amsf_jitted_sweep_no_host_sync(weighted_graph):
+    g, w = weighted_graph
+    forest_fn = make_forest_finish("uf_sync", compress="full")
+    args = (init_labels(g.n), *init_forest(g.n), g.senders, g.receivers, w)
+    kw = dict(eps=0.25, skip=True, forest_fn=forest_fn)
+    # the traced program must contain no host callbacks
+    jaxpr = str(jax.make_jaxpr(lambda *a: amsf.amsf_device(*a, **kw))(*args))
+    assert "callback" not in jaxpr
+    jax.block_until_ready(amsf.amsf_device(*args, **kw))  # compile first
+    # dispatching the compiled sweep must not move bytes to the host
+    with jax.transfer_guard("disallow"):
+        out = amsf.amsf_device(*args, **kw)
+    jax.block_until_ready(out)
+
+
+# ---------------------------------------------------------------------------
+# SCAN across the stack: identical clusters to the sequential GS*-Query.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernels", KERNELS)
+@pytest.mark.parametrize("exec_str", EXECS)
+@pytest.mark.parametrize("variant", SCAN_VARIANTS)
+def test_scan_across_stack(scan_graph, variant, exec_str, kernels):
+    g, sims = scan_graph
+    ci = ConnectIt(variant, exec=exec_str, kernels=kernels)
+    labels, is_core, stats = ci.scan(g, sims, "scan(eps=0.3,mu=2)",
+                                     return_stats=True)
+    labs, cores = scan.gs_query_sequential(g, sims, 0.3, mu=2)
+    np.testing.assert_array_equal(np.asarray(is_core), cores)
+    np.testing.assert_array_equal(np.asarray(labels), labs)
+    assert stats.app == "scan(eps=0.3,mu=2)"
+    assert stats.edges_finish > 0 and stats.finish_rounds > 0
+
+
+@pytest.mark.parametrize("eps,mu", [(0.1, 3), (0.5, 4)])
+def test_scan_eps_mu_sweep_matches_sequential(scan_graph, eps, mu):
+    g, sims = scan_graph
+    ci = ConnectIt("none+uf_sync_full")
+    labels, is_core = ci.scan(g, sims, f"scan(eps={eps},mu={mu})")
+    labs, cores = scan.gs_query_sequential(g, sims, eps, mu=mu)
+    np.testing.assert_array_equal(np.asarray(is_core), cores)
+    np.testing.assert_array_equal(np.asarray(labels), labs)
+
+
+def test_scan_clusters_are_similar_connected():
+    g = gen.rmat(120, 500, seed=6)
+    sims = scan.build_index(g)
+    eps, mu = 0.2, 2
+    lab, core = ConnectIt("none+uf_sync_full").scan(
+        g, sims, f"scan(eps={eps},mu={mu})")
+    lab = np.asarray(lab)
+    core = np.asarray(core)
+    # every core-core eps-similar edge joins same cluster
+    s = np.asarray(g.senders)[: g.m]
+    r = np.asarray(g.receivers)[: g.m]
+    sim = np.asarray(sims)[: g.m] >= eps
+    for i in np.where(sim)[0]:
+        u, v = int(s[i]), int(r[i])
+        if core[u] and core[v]:
+            assert lab[u] == lab[v]
+
+
+# ---------------------------------------------------------------------------
+# Exact-MSF baseline sanity (unchanged from the seed suite).
+# ---------------------------------------------------------------------------
+
+def test_boruvka_msf_is_spanning(weighted_graph, exact_msf):
+    g, _ = weighted_graph
+    exact, _ = exact_msf
+    ncomp = len(np.unique(components_oracle(g)))
     assert len(exact) == g.n - ncomp
 
 
-def test_boruvka_matches_kruskal_weight(weighted_graph):
+def test_boruvka_matches_kruskal_weight(weighted_graph, exact_msf):
     g, w = weighted_graph
-    exact, _ = amsf.boruvka_msf(g, w)
-    got = amsf.forest_weight(exact, g, w)
+    _, got = exact_msf
     # Kruskal oracle
     s = np.asarray(g.senders)[: g.m]
     r = np.asarray(g.receivers)[: g.m]
@@ -51,43 +246,29 @@ def test_boruvka_matches_kruskal_weight(weighted_graph):
     np.testing.assert_allclose(got, total, rtol=1e-5)
 
 
-@pytest.mark.parametrize("variant", ["nf", "nf_s", "coo"])
-def test_amsf_within_eps_bound(weighted_graph, variant):
+# ---------------------------------------------------------------------------
+# Deprecation shims: seed-era entrypoints still work, warn, and agree with
+# the spec path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("legacy,spec", [
+    ("amsf_nf", "amsf"), ("amsf_nf_s", "amsf(skip=lmax)"),
+    ("amsf_coo", "amsf(mode=coo)"),
+])
+def test_legacy_amsf_shims_warn_and_agree(weighted_graph, legacy, spec):
     g, w = weighted_graph
-    eps = 0.25
-    exact, _ = amsf.boruvka_msf(g, w)
-    ew = amsf.forest_weight(exact, g, w)
-    fn = {"nf": amsf.amsf_nf, "nf_s": amsf.amsf_nf_s,
-          "coo": amsf.amsf_coo}[variant]
-    fe, P = fn(g, w, eps=eps)
-    ncomp = len(set(components_oracle(g).tolist()))
-    assert len(fe) == g.n - ncomp, variant
-    aw = amsf.forest_weight(fe, g, w)
-    assert ew - 1e-5 <= aw <= (1 + eps) * ew + 1e-5, (variant, aw, ew)
+    with pytest.warns(DeprecationWarning):
+        edges, _ = getattr(amsf, legacy)(g, w, eps=0.25)
+    new = ConnectIt("none+uf_sync_full").amsf(g, w, spec)
+    np.testing.assert_allclose(amsf.forest_weight(edges, g, w),
+                               amsf.forest_weight(new, g, w), rtol=1e-6)
 
 
-@pytest.mark.parametrize("eps,mu", [(0.1, 3), (0.3, 2), (0.5, 4)])
-def test_scan_parallel_matches_sequential(eps, mu):
-    g = gen.planted_components(100, 3, 6.0, seed=2)
-    sims = scan.build_index(g)
-    labp, corep = scan.gs_query_parallel(g, jnp.asarray(sims), eps, mu=mu)
-    labs, cores = scan.gs_query_sequential(g, sims, eps, mu=mu)
-    np.testing.assert_array_equal(np.asarray(corep), cores)
-    np.testing.assert_array_equal(np.asarray(labp), labs)
-
-
-def test_scan_clusters_are_similar_connected():
-    g = gen.rmat(120, 500, seed=6)
-    sims = scan.build_index(g)
-    eps, mu = 0.2, 2
-    lab, core = scan.gs_query_parallel(g, jnp.asarray(sims), eps, mu=mu)
-    lab = np.asarray(lab)
-    core = np.asarray(core)
-    # every core-core eps-similar edge joins same cluster
-    s = np.asarray(g.senders)[: g.m]
-    r = np.asarray(g.receivers)[: g.m]
-    sim = np.asarray(sims)[: g.m] >= eps
-    for i in np.where(sim)[0]:
-        u, v = int(s[i]), int(r[i])
-        if core[u] and core[v]:
-            assert lab[u] == lab[v]
+def test_legacy_gs_query_shim_warns_and_agrees(scan_graph):
+    g, sims = scan_graph
+    with pytest.warns(DeprecationWarning):
+        lab, core = scan.gs_query_parallel(g, jnp.asarray(sims), 0.3, mu=2)
+    lab2, core2 = ConnectIt("none+uf_sync_full").scan(
+        g, sims, "scan(eps=0.3,mu=2)")
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(lab2))
+    np.testing.assert_array_equal(np.asarray(core), np.asarray(core2))

@@ -59,8 +59,23 @@ def test_ingest_driver_throughput_and_state():
     assert state.P.shape == ((1 << 12) + 1,)
 
 
-def test_serve_driver_generates():
+def test_serve_driver_answers_queries():
+    """The serving entrypoint answers batched connectivity queries through
+    the session stream (the actual workload, not the quarantined LM driver)."""
     from repro.launch.serve import serve
+    qps, handle = serve(1 << 10, batches=4, batch_edges=256, queries=64,
+                        verbose=False)
+    assert qps > 0
+    assert handle.edges_inserted == 5 * 256  # incl. the warmup batch
+    # a path query answered against the live state must be correct
+    handle.insert(np.arange(100, 131), np.arange(101, 132))
+    ans = handle.query(np.full(4, 100, np.int32),
+                       np.array([101, 115, 131, 99], np.int32))
+    assert np.asarray(ans).tolist()[:3] == [True, True, True]
+
+
+def test_legacy_lm_serve_driver_generates():
+    from repro.launch.legacy.serve import serve
     gen_toks = serve("stablelm-3b", batch=2, prompt_len=8, gen_tokens=6,
                      verbose=False)
     assert gen_toks.shape == (2, 6)

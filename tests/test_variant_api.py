@@ -175,8 +175,15 @@ def test_session_forest_and_restriction():
     forest = ci.spanning_forest(g, key=jax.random.PRNGKey(2))
     ncomp = len(np.unique(scipy_canonical(g)))
     assert len(forest) == g.n - ncomp
+    # Shiloach-Vishkin is root-based, hence forest-capable (its recording
+    # round is the uf_sync body at compress='full')
+    sv = ConnectIt("none+shiloach_vishkin").spanning_forest(g)
+    assert len(sv) == g.n - ncomp
+    # non-root-based finishes stay rejected (paper §3.4)
     with pytest.raises(ValueError):
-        ConnectIt("none+shiloach_vishkin").spanning_forest(g)
+        ConnectIt("none+label_prop").spanning_forest(g)
+    with pytest.raises(ValueError):
+        ConnectIt("none+liu_tarjan_CRFA").spanning_forest(g)
 
 
 def test_stats_consistent_across_paths():
