@@ -7,6 +7,8 @@
 ``python -m benchmarks.run --exec "sharded(x)"``   one ExecutionSpec
 ``python -m benchmarks.run --apps``    applications sweep (AMSF + SCAN per
                                        placement) → BENCH_apps.json
+``python -m benchmarks.run --serve``   serving latency/throughput sweep
+                                       (repro.serve) → BENCH_serve.json
 
 Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
 from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
@@ -20,8 +22,8 @@ import sys
 import time
 
 from . import (amsf_bench, execution_bench, gather_edges, sampling_quality,
-               scan_bench, static_connectivity, streaming_batchsize,
-               streaming_throughput, synthetic_families)
+               scan_bench, serve_bench, static_connectivity,
+               streaming_batchsize, streaming_throughput, synthetic_families)
 
 SUITES = {
     "static_connectivity": static_connectivity.run,     # Table 3
@@ -33,6 +35,7 @@ SUITES = {
     "scan": scan_bench.run,                             # Figure 7
     "gather_edges": gather_edges.run,                   # Table 8 / C.5.1
     "execution": execution_bench.run,                   # placements sweep
+    "serve": serve_bench.run,                           # serving layer
 }
 
 
@@ -79,17 +82,28 @@ def main(argv=None) -> int:
                     help="run the applications sweep only and write "
                          "BENCH_apps.json (per-app, per-placement wall "
                          "time + approximation ratio)")
-    ap.add_argument("--out", default="BENCH_apps.json",
-                    help="output path for the --apps JSON artifact")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the serving latency/throughput sweep only "
+                         "and write BENCH_serve.json (p50/p95/p99 at "
+                         "offered load + saturation QPS per placement)")
+    ap.add_argument("--out", default=None,
+                    help="output path for the --apps/--serve JSON artifact")
     args = ap.parse_args(argv)
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
     t0 = time.time()
     if args.apps:
-        if args.only or args.exec_spec:
-            ap.error("--apps is exclusive with --only/--exec")
+        if args.only or args.exec_spec or args.serve:
+            ap.error("--apps is exclusive with --only/--exec/--serve")
         print("\n### apps " + "#" * 56)
-        run_apps(quick=not args.full, smoke=args.smoke, out=args.out)
+        run_apps(quick=not args.full, smoke=args.smoke,
+                 out=args.out or "BENCH_apps.json")
+    elif args.serve:
+        if args.only or args.exec_spec:
+            ap.error("--serve is exclusive with --only/--exec")
+        print("\n### serve " + "#" * 55)
+        serve_bench.run(quick=not args.full, smoke=args.smoke,
+                        out=args.out or "BENCH_serve.json")
     elif args.exec_spec is not None:
         if args.only:
             ap.error("--exec and --only are mutually exclusive")

@@ -1,0 +1,127 @@
+"""Serving latency/throughput benchmark (repro.serve) → BENCH_serve.json.
+
+Per execution placement: one closed-loop saturation measurement (N
+back-to-back clients — achieved QPS estimates service capacity), then
+open-loop measurements at three offered-load fractions of that saturation
+(fixed arrival schedule — p50/p95/p99 latency includes queueing delay).
+Insert traffic is mixed into every run, so commit epochs, snapshot reads,
+and coalescing are all engaged; ``edges_per_s`` is the committed insert
+throughput alongside the query rates.
+
+``python -m benchmarks.serve_bench --smoke``       CI-sized
+``python -m benchmarks.run --serve``               → BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .common import emit  # noqa: F401  (path bootstrap side effect)
+
+OPEN_LOAD_FRACTIONS = (0.25, 0.5, 0.75)
+
+
+def _scale(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return dict(n=1 << 10, query_pairs=32, insert_edges=128,
+                    clients=4, requests_per_client=6, open_requests=24)
+    if quick:
+        return dict(n=1 << 13, query_pairs=128, insert_edges=512,
+                    clients=8, requests_per_client=16, open_requests=64)
+    return dict(n=1 << 16, query_pairs=1024, insert_edges=4096,
+                clients=16, requests_per_client=48, open_requests=256)
+
+
+def placement_rows(quick: bool = True, smoke: bool = False,
+                   variant: str = "none+uf_sync_full",
+                   execs=("single", "replicated(x)", "sharded(x)"),
+                   seed: int = 0) -> list:
+    """Machine-readable rows for BENCH_serve.json: per placement, one
+    ``saturation`` row (closed loop) + one ``offered`` row per load level
+    (open loop), each with p50/p95/p99 latency and insert throughput."""
+    from repro.api import ConnectIt
+    from repro.serve import closed_loop, open_loop, run_sync
+
+    sc = _scale(quick, smoke)
+    traffic = dict(query_pairs=sc["query_pairs"], insert_every=4,
+                   insert_edges=sc["insert_edges"])
+    rows = []
+    for exec_str in execs:
+        ci = ConnectIt(variant, exec=exec_str)
+        # one long-lived server per placement (the serving steady state):
+        # an untimed closed-loop pass warms the dispatch shapes this
+        # traffic hits, then every measurement runs against the warm system
+        server = ci.serve(sc["n"], max_batch_edges=4 * sc["insert_edges"],
+                          max_batch_queries=8 * sc["query_pairs"],
+                          flush_ms=0.5, warmup="all")
+        run_sync(server, closed_loop, clients=sc["clients"],
+                 requests_per_client=max(sc["requests_per_client"] // 4, 2),
+                 seed=seed + 1, **traffic)
+        sat = run_sync(server, closed_loop, clients=sc["clients"],
+                       requests_per_client=sc["requests_per_client"],
+                       seed=seed, **traffic)
+        st = server.stats()
+        base = dict(variant=variant, exec=exec_str, devices=st.devices,
+                    query_pairs=sc["query_pairs"],
+                    insert_edges=sc["insert_edges"])
+        rows.append(dict(kind="saturation", saturation_qps=round(
+            sat.achieved_qps, 2), **base, **_lat(sat)))
+        for frac in OPEN_LOAD_FRACTIONS:
+            qps = max(sat.achieved_qps * frac, 1.0)
+            res = run_sync(server, open_loop, qps=qps,
+                           requests=sc["open_requests"], seed=seed,
+                           **traffic)
+            rows.append(dict(kind="offered", load_fraction=frac,
+                             offered_qps=round(qps, 2), **base, **_lat(res)))
+    return rows
+
+
+def _lat(res) -> dict:
+    return dict(achieved_qps=round(res.achieved_qps, 2),
+                p50_ms=round(res.p50_ms, 3), p95_ms=round(res.p95_ms, 3),
+                p99_ms=round(res.p99_ms, 3),
+                edges_per_s=round(res.edges_per_s, 1),
+                queries=res.queries, inserts=res.inserts,
+                duration_s=round(res.duration_s, 3))
+
+
+def write_json(rows: list, out: str, scale: str) -> dict:
+    payload = {"suite": "serve", "scale": scale, "rows": rows}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def run(quick: bool = True, smoke: bool = False,
+        variant: str = "none+uf_sync_full", out: str | None = None) -> list:
+    rows = placement_rows(quick=quick, smoke=smoke, variant=variant)
+    hdr = ["exec", "kind", "offered_qps", "saturation_qps", "achieved_qps",
+           "p50_ms", "p99_ms", "edges_per_s"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    if out:
+        scale = "smoke" if smoke else ("quick" if quick else "full")
+        write_json(rows, out, scale)
+        print(f"wrote {out} ({len(rows)} rows)")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized pass")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--variant", default="none+uf_sync_full")
+    ap.add_argument("--out", default=None,
+                    help="also write the BENCH_serve.json payload here")
+    args = ap.parse_args(argv)
+    run(quick=not args.full, smoke=args.smoke, variant=args.variant,
+        out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -719,6 +719,37 @@ class ConnectIt:
         return Stream(n, self._finish, backend=self._backend,
                       variant=str(self.spec))
 
+    def serve(self, n: Optional[int] = None, *, tenants=None, config=None,
+              **knobs):
+        """Async serving front-end over a live graph (``repro.serve``).
+
+        Returns a not-yet-started ``repro.serve.Server``: an asyncio
+        admission layer (``submit_inserts`` / ``query`` coroutines) that
+        coalesces concurrent client traffic into size-bucketed device
+        batches under this session's placement and kernel policy, with
+        double-buffered snapshot epochs so queries always read a stable
+        committed snapshot. Pass ``n`` for one logical graph, or
+        ``tenants={"name": n, ...}`` to serve several tenant namespaces
+        from one shared device state. ``config`` is a
+        ``repro.serve.ServeConfig``; extra ``knobs``
+        (``max_batch_edges=...``, ``flush_ms=...``, ...) override its
+        fields. See docs/API.md §Serving.
+
+        >>> server = ConnectIt("none+uf_sync_full").serve(1 << 16)
+        >>> async with server:
+        ...     epoch = await server.submit_inserts(u, v)
+        ...     ans, at_epoch = await server.query(qa, qb)
+        """
+        from .serve import ServeConfig, Server, TenantRegistry
+        registry = TenantRegistry.build(n=n, tenants=tenants)
+        cfg = config or ServeConfig()
+        if knobs:
+            cfg = dataclasses.replace(cfg, **knobs)
+        ops = self._backend.snapshot_ops(registry.total, self._finish,
+                                        donate=cfg.donate)
+        return Server(ops, registry, config=cfg, variant=str(self.spec),
+                      exec_str=str(self.exec), devices=self._backend.devices)
+
     # -- applications (paper §5): AMSF / exact MSF / SCAN -------------------
 
     def _app_stats(self, app: AppSpec, g) -> driver.ConnectivityStats:

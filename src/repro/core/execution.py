@@ -85,7 +85,7 @@ from .registry import FactoryRegistry
 
 __all__ = [
     "ExecutionSpec", "PLACEMENTS", "KERNEL_POLICIES", "make_backend",
-    "plan_mesh", "make_axis_mesh", "bucket_size", "StreamOps",
+    "plan_mesh", "make_axis_mesh", "bucket_size", "StreamOps", "SnapshotOps",
 ]
 
 PLACEMENTS = ("single", "replicated", "sharded")
@@ -407,6 +407,27 @@ class StreamOps(NamedTuple):
     batch_size: Callable  # (k) -> padded dispatch size under the pad policy
 
 
+class SnapshotOps(NamedTuple):
+    """Planned snapshot-epoch programs behind ``repro.serve`` (one per
+    (ExecutionSpec, n, finish) triple).
+
+    The state is a raw label buffer on every placement (placed/padded per
+    the backend), so the serve layer can double-buffer it: ``commit`` reads
+    the committed snapshot and — under ``ExecutionSpec.donate`` — reuses
+    the shadow buffer's memory for the new epoch's labels. ``query`` reads
+    any label buffer without touching it, so queries racing an in-flight
+    commit still see a stable snapshot (core/streaming.py, Snapshot
+    plumbing)."""
+
+    init: Callable       # () -> labels (one placed epoch buffer)
+    commit: Callable     # (committed, shadow, u, v) -> (labels, rounds)
+    query: Callable      # (labels, qa, qb) -> ans
+    labels: Callable     # (labels) -> (n,) real-vertex labels
+    ncomp: Callable      # (labels) -> component count (device scalar)
+    edge_shards: int     # devices a batch dispatch splits across
+    batch_size: Callable  # (k) -> padded dispatch size under the pad policy
+
+
 # ---------------------------------------------------------------------------
 # Backends.
 # ---------------------------------------------------------------------------
@@ -494,6 +515,27 @@ class SingleBackend(_Backend):
             query=streaming.query_batch,
             labels=lambda state: state.P[:n],
             ncomp=lambda state: num_components(state.P),
+            edge_shards=1,
+            batch_size=self._bucket,
+        )
+
+    def snapshot_ops(self, n: int, finish_fn, *,
+                     donate: Optional[bool] = None) -> SnapshotOps:
+        # donation is an override, not spec.donate: single pins donate=False
+        # for the finish dispatch, but the serve double-buffer rotation can
+        # donate its *shadow* buffer safely on any placement
+        donate = bool(donate) if donate is not None else self.spec.donate
+        key = ("snapshot", n, finish_fn, donate)
+        if key not in self._programs:
+            self._programs[key] = streaming.make_snapshot_commit(
+                finish_fn, kernels=self.kernels, donate=donate)
+        commit = self._programs[key]
+        return SnapshotOps(
+            init=lambda: init_labels(n),
+            commit=commit,
+            query=streaming._snapshot_query_jit,
+            labels=lambda P: P[:n],
+            ncomp=lambda P: num_components(P[: n + 1]),
             edge_shards=1,
             batch_size=self._bucket,
         )
@@ -628,6 +670,32 @@ class _MeshBackend(_Backend):
             query=query,
             labels=lambda state: state[:n],
             ncomp=lambda state: num_components(state[: n + 1]),
+            edge_shards=self.edge_shards,
+            batch_size=self._bucket,
+        )
+
+    def snapshot_ops(self, n: int, finish_fn, *,
+                     donate: Optional[bool] = None) -> SnapshotOps:
+        donate = bool(donate) if donate is not None else self.spec.donate
+        key = ("snapshot", n, finish_fn, donate)
+        if key not in self._programs:
+            progs = self._build_stream(n, finish_fn)
+
+            def commit(committed, shadow, u, v):
+                del shadow  # donated: its buffer backs the new epoch
+                return progs.insert(committed, u, v)
+
+            self._programs[key] = (
+                jax.jit(commit, donate_argnums=(1,) if donate else ()),
+                jax.jit(progs.query),
+            )
+        commit, query = self._programs[key]
+        return SnapshotOps(
+            init=lambda: self._init_state(n),
+            commit=commit,
+            query=query,
+            labels=lambda P: P[:n],
+            ncomp=lambda P: num_components(P[: n + 1]),
             edge_shards=self.edge_shards,
             batch_size=self._bucket,
         )

@@ -101,6 +101,51 @@ def process_batch_rounds_fn(state: StreamState, batch_u, batch_v, qa, qb,
 
 
 # ---------------------------------------------------------------------------
+# Snapshot plumbing (repro.serve): double-buffered epochs.
+#
+# The serving subsystem keeps TWO label buffers per logical graph: the
+# *committed* snapshot (read-only — every in-flight query gathers against
+# it) and the *shadow* buffer (the previous epoch's labels, no longer
+# reachable by queries). A commit computes the next epoch's labels from the
+# committed snapshot and — when donation is on — reuses the shadow buffer's
+# device memory for the result, so steady-state serving allocates nothing:
+# the two buffers alternate roles every epoch. The committed buffer is never
+# donated; queries racing an in-flight commit always read a stable snapshot
+# (the torn-read-freedom the serve layer's epoch contract relies on).
+# ---------------------------------------------------------------------------
+
+
+def snapshot_query(P: jax.Array, qa, qb) -> jax.Array:
+    """IsConnected against a raw compressed label buffer (single-device
+    snapshot read; mesh placements have their own shard_map query)."""
+    return P[qa] == P[qb]
+
+
+_snapshot_query_jit = jax.jit(snapshot_query)
+
+
+def make_snapshot_commit(finish_fn: Callable, *,
+                         kernels: Optional[str] = None,
+                         donate: bool = False) -> Callable:
+    """Build the single-device snapshot-commit program
+    ``(committed, shadow, u, v) -> (new_labels, rounds)``.
+
+    ``committed`` is read, never written; ``shadow`` is dead state whose
+    buffer is donated to the output when ``donate`` is set (double-buffer
+    rotation — see the section comment above). Mesh placements build the
+    equivalent program from their stream insert programs
+    (``core.execution``)."""
+
+    def commit(committed, shadow, u, v):
+        del shadow  # donated: its device buffer backs the new epoch
+        state, rounds = insert_batch_rounds_fn(
+            StreamState(committed), u, v, finish_fn, kernels)
+        return state.P, rounds
+
+    return jax.jit(commit, donate_argnums=(1,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
 # Legacy string-keyed entrypoints (deprecation shims).
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,33 @@
+"""repro.serve: the async query-serving subsystem (ROADMAP serving layer).
+
+Turns a planned ``ConnectIt(variant, exec=..., kernels=...)`` session into
+a service over a live graph: async admission with batch coalescing
+(server.py), double-buffered snapshot epochs so queries never see a
+half-committed insert batch (snapshot.py), multi-tenant vertex namespaces
+over one shared device state (tenancy.py), and closed/open-loop load
+generators for the latency/throughput benchmark (loadgen.py →
+benchmarks/serve_bench.py → BENCH_serve.json).
+
+Entry point::
+
+    server = ConnectIt("none+uf_sync_full", exec="sharded(x)").serve(1 << 16)
+    async with server:
+        epoch = await server.submit_inserts(u, v)
+        ans, at_epoch = await server.query(qa, qb)
+
+docs/API.md §Serving has the full reference (knobs, epoch semantics, the
+tenant grammar).
+"""
+
+from .config import ServeConfig
+from .loadgen import LoadResult, closed_loop, open_loop, percentiles, run_sync
+from .server import Server, ServerStats, TenantStats
+from .snapshot import PendingCommit, SnapshotStore
+from .tenancy import DEFAULT_TENANT, Tenant, TenantRegistry
+
+__all__ = [
+    "ServeConfig", "Server", "ServerStats", "TenantStats",
+    "SnapshotStore", "PendingCommit",
+    "Tenant", "TenantRegistry", "DEFAULT_TENANT",
+    "LoadResult", "closed_loop", "open_loop", "percentiles", "run_sync",
+]

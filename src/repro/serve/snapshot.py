@@ -1,0 +1,160 @@
+"""SnapshotStore: double-buffered label epochs with commit/read isolation.
+
+The store owns two label buffers planned by an execution backend's
+``snapshot_ops`` (core/execution.py):
+
+  * the **committed** snapshot — the labels of epoch ``e``; every query
+    between commits gathers against exactly this buffer, so a query can
+    never observe a half-applied batch (functional arrays make torn reads
+    impossible; the store's job is to make the *epoch tag* exact);
+  * the **shadow** buffer — epoch ``e-1``'s labels, unreachable by queries;
+    its device memory is donated to the next commit when donation is on.
+
+A commit is split into two halves so the serving layer (and the
+snapshot-isolation race test) can hold the epoch boundary open:
+
+    pending = store.begin_commit(u, v)   # dispatch: new = f(committed, batch)
+    ...                                  # queries here still read epoch e
+    store.finish_commit(pending)         # swap buffers, epoch -> e + 1
+
+``begin_commit`` only *dispatches* the device program; ``finish_commit``
+rotates the Python-side buffer references. Queries issued between the two
+read the prior epoch by construction — the contract the paper's batch
+linearization (§3.5) demands from a concurrent server: every operation
+lands in exactly one batch boundary.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PendingCommit", "SnapshotStore"]
+
+
+class PendingCommit(NamedTuple):
+    """An epoch-in-flight: dispatched but not yet visible to queries."""
+
+    labels: jax.Array   # the next epoch's labels (possibly still computing)
+    rounds: jax.Array   # finish rounds of the commit (device scalar)
+    edges: int          # real (non-padding) edges in the batch
+    epoch: int          # the epoch this commit will become
+
+
+class SnapshotStore:
+    """Double-buffered snapshot state for one served vertex space."""
+
+    def __init__(self, ops, n: int):
+        self._ops = ops
+        self.n = n
+        self.epoch = 0
+        self._committed = ops.init()
+        # the shadow starts as a second, independent buffer so the first
+        # donated commit has memory to rotate into
+        self._shadow = ops.init()
+        self._pending: Optional[PendingCommit] = None
+        # cumulative real edges committed as of each epoch (epoch 0 = empty
+        # graph) — the linearization log the serve tests audit against
+        self.epoch_edges: list[int] = [0]
+        self.rounds_total = 0
+
+    # -- commit path ---------------------------------------------------------
+
+    def _pad_edges(self, u, v):
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        k = int(u.shape[0])
+        size = int(self._ops.batch_size(k))
+        if size != k:
+            pad = np.full((size - k,), self.n, np.int32)
+            u = np.concatenate([u, pad])
+            v = np.concatenate([v, pad])
+        return jnp.asarray(u), jnp.asarray(v), size
+
+    def begin_commit(self, u, v) -> PendingCommit:
+        """Dispatch the next epoch's labels. At most one commit may be in
+        flight (there are exactly two buffers)."""
+        if self._pending is not None:
+            raise RuntimeError("a commit is already in flight; "
+                               "finish_commit it first")
+        uj, vj, _ = self._pad_edges(u, v)
+        k = int(np.sum(np.asarray(u, np.int64) < self.n))
+        labels, rounds = self._ops.commit(self._committed, self._shadow,
+                                          uj, vj)
+        # the shadow buffer may have been donated into `labels`; drop our
+        # reference either way (it is dead state until the rotation below)
+        self._shadow = None
+        self._pending = PendingCommit(labels, rounds, k, self.epoch + 1)
+        return self._pending
+
+    def finish_commit(self, pending: PendingCommit) -> int:
+        """Rotate buffers: the committed snapshot becomes the shadow, the
+        pending labels become the committed epoch. Returns the new epoch."""
+        if pending is not self._pending:
+            raise RuntimeError("finish_commit got a stale PendingCommit")
+        self._shadow = self._committed
+        self._committed = pending.labels
+        self.epoch = pending.epoch
+        self.epoch_edges.append(self.epoch_edges[-1] + pending.edges)
+        self.rounds_total += int(pending.rounds)
+        self._pending = None
+        return self.epoch
+
+    def commit(self, u, v) -> int:
+        """begin + block-until-computed + finish, in one call (the sync
+        convenience path; the async server overlaps the block)."""
+        pending = self.begin_commit(u, v)
+        jax.block_until_ready(pending.labels)
+        return self.finish_commit(pending)
+
+    # -- read path -----------------------------------------------------------
+
+    def _pad_queries(self, qa, qb):
+        qa = np.asarray(qa, np.int32)
+        qb = np.asarray(qb, np.int32)
+        k = int(qa.shape[0])
+        size = int(self._ops.batch_size(k))
+        if size != k:
+            qa = np.pad(qa, (0, size - k))
+            qb = np.pad(qb, (0, size - k))
+        return jnp.asarray(qa), jnp.asarray(qb), k
+
+    def query(self, qa, qb):
+        """IsConnected against the committed snapshot -> (ans, epoch).
+
+        ``ans`` is a device array (the caller decides when to sync); the
+        epoch tag is exact: the gather was dispatched against precisely the
+        buffer that carried ``epoch`` at call time."""
+        qaj, qbj, k = self._pad_queries(qa, qb)
+        ans = self._ops.query(self._committed, qaj, qbj)
+        return ans[:k], self.epoch
+
+    @property
+    def labels(self) -> jax.Array:
+        """Committed labels over real vertices (n,)."""
+        return self._ops.labels(self._committed)
+
+    def num_components(self) -> int:
+        return int(self._ops.ncomp(self._committed))
+
+    # -- warmup --------------------------------------------------------------
+
+    def warm(self, edge_sizes=(), query_sizes=()) -> None:
+        """Compile dispatch shapes against scratch buffers.
+
+        Runs the commit program on throwaway label buffers and the query
+        program on the committed snapshot with padding-only inputs —
+        nothing is committed, no epoch is consumed, and the served labels
+        are untouched (the seed warmup inserted real random edges; see
+        ServeConfig.warmup)."""
+        for k in sorted(set(int(s) for s in edge_sizes)):
+            scratch_a, scratch_b = self._ops.init(), self._ops.init()
+            u = jnp.full((int(self._ops.batch_size(k)),), self.n, jnp.int32)
+            labels, _ = self._ops.commit(scratch_a, scratch_b, u, u)
+            jax.block_until_ready(labels)
+        for k in sorted(set(int(s) for s in query_sizes)):
+            q = jnp.zeros((int(self._ops.batch_size(k)),), jnp.int32)
+            jax.block_until_ready(self._ops.query(self._committed, q, q))

@@ -1,0 +1,341 @@
+"""Serving subsystem tests (repro.serve): oracle-checked interleaved
+traffic per placement, the snapshot-isolation race, tenancy, coalescing,
+backpressure, warmup hygiene, and the CLI seed flag."""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.api import ConnectIt
+from repro.serve import ServeConfig, TenantRegistry
+
+EXECS = ["single", "replicated(x)", "sharded(x)"]
+
+
+def pairs_oracle(n, s, r, qa, qb) -> np.ndarray:
+    """scipy IsConnected oracle for query pairs over an explicit edge list."""
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import connected_components as scipy_cc
+    s, r = np.asarray(s), np.asarray(r)
+    mat = csr_matrix((np.ones(len(s)), (s, r)), shape=(n, n))
+    _, lab = scipy_cc(mat, directed=False)
+    return lab[np.asarray(qa)] == lab[np.asarray(qb)]
+
+
+def small_config(**kw) -> ServeConfig:
+    base = dict(max_batch_edges=256, max_batch_queries=256, flush_ms=0.5,
+                warmup=False)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Serving correctness: interleaved insert/query traffic vs the scipy oracle
+# on every placement (runs at 1 device in tier-1, 8 in the CI mesh leg).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_interleaved_traffic_matches_oracle(exec_str):
+    n = 128
+    rng = np.random.default_rng(5)
+    server = ConnectIt("none+uf_sync_full", exec=exec_str).serve(
+        n, config=small_config())
+    all_s, all_r = [], []
+
+    async def main():
+        async with server:
+            for rnd in range(6):
+                k = int(rng.integers(1, 40))
+                u = rng.integers(0, n, size=k).astype(np.int32)
+                v = rng.integers(0, n, size=k).astype(np.int32)
+                epoch = await server.submit_inserts(u, v)
+                assert epoch == rnd + 1
+                all_s.append(u)
+                all_r.append(v)
+                qa = rng.integers(0, n, size=33).astype(np.int32)
+                qb = rng.integers(0, n, size=33).astype(np.int32)
+                ans, at_epoch = await server.query(qa, qb)
+                assert at_epoch == epoch
+                expect = pairs_oracle(n, np.concatenate(all_s),
+                                      np.concatenate(all_r), qa, qb)
+                np.testing.assert_array_equal(np.asarray(ans), expect)
+
+    asyncio.run(main())
+    assert server.epoch == 6
+    assert server.epoch_edges[-1] == sum(len(s) for s in all_s)
+
+
+@pytest.mark.parametrize("variant", ["none+shiloach_vishkin",
+                                     "none+liu_tarjan_CRFA"])
+def test_serving_other_finish_variants(variant):
+    n = 96
+    rng = np.random.default_rng(11)
+    u = rng.integers(0, n, size=150).astype(np.int32)
+    v = rng.integers(0, n, size=150).astype(np.int32)
+    server = ConnectIt(variant).serve(n, config=small_config())
+    server.commit_now(u, v)
+    qa = rng.integers(0, n, size=40).astype(np.int32)
+    qb = rng.integers(0, n, size=40).astype(np.int32)
+    ans, epoch = server.query_now(qa, qb)
+    assert epoch == 1
+    np.testing.assert_array_equal(ans, pairs_oracle(n, u, v, qa, qb))
+
+
+# ---------------------------------------------------------------------------
+# Snapshot isolation: queries racing an in-flight insert batch read exactly
+# the prior epoch (the acceptance race test; 1 and 8 devices in CI).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_snapshot_isolation_race(exec_str):
+    n = 128
+    server = ConnectIt("none+uf_sync_full", exec=exec_str).serve(
+        n, config=small_config())
+    store = server.store
+    store.commit(np.arange(0, 20, dtype=np.int32),
+                 np.arange(1, 21, dtype=np.int32))
+    assert store.epoch == 1
+    # dispatch an insert batch but hold the epoch boundary open
+    pending = store.begin_commit(np.array([20], np.int32),
+                                 np.array([40], np.int32))
+    qa = np.array([0, 0, 0], np.int32)
+    qb = np.array([20, 40, 41], np.int32)
+    ans, epoch = store.query(qa, qb)
+    # the racing query reflects exactly the prior epoch: 0-20 connected,
+    # the uncommitted (20, 40) edge invisible
+    assert epoch == 1
+    assert np.asarray(ans).tolist() == [True, False, False]
+    assert store.finish_commit(pending) == 2
+    ans2, epoch2 = store.query(qa, qb)
+    assert epoch2 == 2
+    assert np.asarray(ans2).tolist() == [True, True, False]
+    assert store.epoch_edges == [0, 20, 21]
+
+
+def test_snapshot_store_rejects_overlapping_commits():
+    server = ConnectIt("none+uf_sync_full").serve(32, config=small_config())
+    u = np.array([0], np.int32)
+    v = np.array([1], np.int32)
+    pending = server.store.begin_commit(u, v)
+    with pytest.raises(RuntimeError, match="already in flight"):
+        server.store.begin_commit(u, v)
+    server.store.finish_commit(pending)
+    with pytest.raises(RuntimeError, match="stale"):
+        server.store.finish_commit(pending)
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_concurrent_traffic_linearizes(exec_str):
+    """Mixed async traffic: every query response must equal the oracle of
+    the edge prefix its epoch tag claims (the FIFO admission queue makes
+    the committed edge multiset per epoch a prefix of submission order)."""
+    n = 96
+    rng = np.random.default_rng(9)
+    server = ConnectIt("none+uf_sync_full", exec=exec_str).serve(
+        n, config=small_config(flush_ms=2.0, max_batch_edges=64))
+    submitted_s, submitted_r = [], []
+    results = []
+
+    async def main():
+        async with server:
+            tasks = []
+            for i in range(24):
+                k = int(rng.integers(1, 12))
+                u = rng.integers(0, n, size=k).astype(np.int32)
+                v = rng.integers(0, n, size=k).astype(np.int32)
+                submitted_s.append(u)
+                submitted_r.append(v)
+                tasks.append(asyncio.create_task(server.submit_inserts(u, v)))
+                qa = rng.integers(0, n, size=7).astype(np.int32)
+                qb = rng.integers(0, n, size=7).astype(np.int32)
+
+                async def q(qa=qa, qb=qb):
+                    ans, epoch = await server.query(qa, qb)
+                    results.append((qa, qb, np.asarray(ans), epoch))
+
+                tasks.append(asyncio.create_task(q()))
+                if i % 5 == 0:
+                    await asyncio.sleep(0.002)
+            await asyncio.gather(*tasks)
+
+    asyncio.run(main())
+    all_s = np.concatenate(submitted_s)
+    all_r = np.concatenate(submitted_r)
+    log = server.epoch_edges
+    assert log[-1] == all_s.shape[0]  # every submitted edge committed
+    assert len(results) == 24
+    for qa, qb, ans, epoch in results:
+        m = log[epoch]
+        expect = pairs_oracle(n, all_s[:m], all_r[:m], qa, qb)
+        np.testing.assert_array_equal(ans, expect)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenancy: namespaces over one shared state, per-tenant stats.
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_isolation_and_stats():
+    server = ConnectIt("none+uf_sync_full").serve(
+        tenants={"alpha": 64, "beta": 48}, config=small_config())
+
+    async def main():
+        async with server:
+            # a path in alpha, a star in beta — committed via one shared
+            # device state
+            await server.submit_inserts(np.arange(0, 30), np.arange(1, 31),
+                                        tenant="alpha")
+            await server.submit_inserts(np.zeros(20, np.int32),
+                                        np.arange(1, 21), tenant="beta")
+            ans_a, _ = await server.query([0, 0], [30, 31], tenant="alpha")
+            ans_b, _ = await server.query([1, 21], [2, 22], tenant="beta")
+            return ans_a, ans_b
+
+    ans_a, ans_b = asyncio.run(main())
+    assert ans_a.tolist() == [True, False]
+    assert ans_b.tolist() == [True, False]
+    # isolation is structural: alpha's 31-vertex component cannot leak into
+    # beta's block
+    assert server.num_components("alpha") == 64 - 30
+    assert server.num_components("beta") == 48 - 20
+    st = server.stats()
+    assert st.tenants["alpha"].edges_committed == 30
+    assert st.tenants["beta"].edges_committed == 20
+    assert st.tenants["alpha"].queries == 2
+    assert st.tenants["beta"].positives == 1
+    assert st.epoch >= 1
+
+
+def test_tenant_id_validation():
+    server = ConnectIt("none+uf_sync_full").serve(
+        tenants={"a": 16, "b": 16}, config=small_config())
+    with pytest.raises(ValueError, match="out of range"):
+        server.query_now([0], [16], tenant="a")
+    with pytest.raises(KeyError, match="unknown tenant"):
+        server.query_now([0], [1], tenant="nope")
+    reg = TenantRegistry({"a": 16, "b": 16})
+    assert reg.total == 32
+    assert reg.get("b").base == 16
+    with pytest.raises(ValueError):
+        TenantRegistry.build(n=8, tenants={"a": 4})
+    with pytest.raises(ValueError):
+        TenantRegistry({"bad name": 4})
+
+
+# ---------------------------------------------------------------------------
+# Coalescing, backpressure, flush timer, warmup hygiene.
+# ---------------------------------------------------------------------------
+
+
+def test_coalescing_merges_concurrent_requests():
+    server = ConnectIt("none+uf_sync_full").serve(
+        256, config=small_config(flush_ms=5.0))
+
+    async def main():
+        async with server:
+            tasks = [asyncio.create_task(
+                server.query(np.array([i], np.int32),
+                             np.array([i + 1], np.int32)))
+                for i in range(50)]
+            await asyncio.gather(*tasks)
+
+    asyncio.run(main())
+    st = server.stats()
+    assert st.queries_answered == 50
+    # 50 single-pair requests coalesced into a few size-bucketed dispatches
+    assert st.query_batches < 50
+    for shape in st.query_shapes:
+        assert shape & (shape - 1) == 0  # pow2 compiled shapes
+
+
+def test_backpressure_bounds_queue_depth():
+    cfg = small_config(max_batch_edges=32, max_pending_edges=64,
+                       flush_ms=0.0)
+    server = ConnectIt("none+uf_sync_full").serve(512, config=cfg)
+
+    async def main():
+        async with server:
+            tasks = [asyncio.create_task(server.submit_inserts(
+                np.full(16, i, np.int32), np.full(16, i + 1, np.int32)))
+                for i in range(30)]
+            return await asyncio.gather(*tasks)
+
+    epochs = asyncio.run(main())
+    assert len(epochs) == 30 and max(epochs) >= 1
+    st = server.stats()
+    assert st.edges_committed == 30 * 16
+    # admission never held more than the threshold plus one request
+    assert st.peak_pending_edges <= 64 + 16
+
+
+def test_flush_timer_dispatches_partial_batches():
+    server = ConnectIt("none+uf_sync_full").serve(
+        64, config=small_config(flush_ms=2.0, max_batch_edges=4096))
+
+    async def main():
+        async with server:
+            # far below the admission cap: only the flush timer can cut it
+            epoch = await asyncio.wait_for(
+                server.submit_inserts(np.array([1], np.int32),
+                                      np.array([2], np.int32)),
+                timeout=5.0)
+            return epoch
+
+    assert asyncio.run(main()) == 1
+
+
+def test_warmup_compiles_without_perturbing_state():
+    server = ConnectIt("none+uf_sync_full").serve(
+        64, config=small_config(warmup=True, max_batch_edges=32,
+                                max_batch_queries=32))
+
+    async def main():
+        async with server:
+            assert server.epoch == 0                  # no epoch consumed
+            assert server.num_components() == 64      # no edge committed
+            ans, epoch = await server.query([0], [1])
+            return ans, epoch
+
+    ans, epoch = asyncio.run(main())
+    assert epoch == 0 and ans.tolist() == [False]
+    assert server.epoch_edges == [0]
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="positive integer"):
+        ServeConfig(max_batch_edges=0)
+    with pytest.raises(ValueError, match="flush_ms"):
+        ServeConfig(flush_ms=-1)
+    with pytest.raises(ValueError, match="max_pending_edges"):
+        ServeConfig(max_batch_edges=128, max_pending_edges=64)
+    with pytest.raises(ValueError, match="warmup"):
+        ServeConfig(warmup="sometimes")
+    with pytest.raises(ValueError, match="pass n or tenants"):
+        ConnectIt("none+uf_sync_full").serve(64, tenants={"a": 4})
+
+
+# ---------------------------------------------------------------------------
+# CLI (launch/serve.py): reproducible runs via --seed, no warmup pollution.
+# ---------------------------------------------------------------------------
+
+
+def test_serve_cli_accepts_seed_flag():
+    from repro.launch.serve import main
+    assert main(["--n", "128", "--batches", "4", "--batch", "32",
+                 "--queries", "8", "--clients", "2", "--seed", "7",
+                 "--flush-ms", "0.5"]) == 0
+
+
+def test_serve_driver_excludes_warmup_from_workload():
+    from repro.launch.serve import serve
+    qps, server = serve(256, batches=4, batch_edges=64, queries=16,
+                        clients=2, seed=3, verbose=False)
+    assert qps > 0
+    st = server.stats()
+    # exactly the requested traffic was committed — the seed-era warmup
+    # inserted an extra throwaway batch of real random edges
+    assert st.edges_committed == st.tenants["default"].edges_submitted
+    assert server.epoch_edges[-1] == st.edges_committed

@@ -61,16 +61,19 @@ def test_ingest_driver_throughput_and_state():
 
 def test_serve_driver_answers_queries():
     """The serving entrypoint answers batched connectivity queries through
-    the session stream (the actual workload, not the quarantined LM driver)."""
+    the repro.serve subsystem (the actual workload, not the quarantined LM
+    driver). Warmup no longer commits edges: the measured workload is
+    exactly the requested traffic."""
     from repro.launch.serve import serve
-    qps, handle = serve(1 << 10, batches=4, batch_edges=256, queries=64,
-                        verbose=False)
+    qps, server = serve(1 << 10, batches=4, batch_edges=256, queries=64,
+                        clients=2, verbose=False)
     assert qps > 0
-    assert handle.edges_inserted == 5 * 256  # incl. the warmup batch
-    # a path query answered against the live state must be correct
-    handle.insert(np.arange(100, 131), np.arange(101, 132))
-    ans = handle.query(np.full(4, 100, np.int32),
-                       np.array([101, 115, 131, 99], np.int32))
+    assert server.epoch_edges[-1] == 4 * 256  # exactly the traffic, no warmup
+    # a path query answered against the committed snapshot must be correct
+    server.commit_now(np.arange(100, 131), np.arange(101, 132))
+    ans, epoch = server.query_now(np.full(4, 100, np.int32),
+                                  np.array([101, 115, 131, 99], np.int32))
+    assert epoch == server.epoch
     assert np.asarray(ans).tolist()[:3] == [True, True, True]
 
 
