@@ -1,0 +1,147 @@
+"""Batch-dynamic churn benchmark (repro.dynamic) → BENCH_dynamic.json.
+
+Per execution placement × delete fraction ∈ {0, 0.1, 0.5}: a sustained
+mixed-workload loop against a ``DynamicStream`` — every step inserts a
+random batch, deletes ``frac`` × batch edges sampled from the live insert
+history (so deletions really hit logged edges and, regularly, the spanning
+forest), and answers a query batch. Reported: update throughput
+(insert + delete entries per second of update wall time, device-synced per
+step) and query latency p50/p95 (each query batch timed to host
+materialization). The delete_frac=0 column is the pure-insert baseline the
+streaming suite already tracks, measured on the dynamic state so the
+deletion overhead is read directly across a row.
+
+``python -m benchmarks.dynamic_bench --smoke``       CI-sized
+``python -m benchmarks.run --dynamic``               → BENCH_dynamic.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (path bootstrap side effect)
+
+DELETE_FRACTIONS = (0.0, 0.1, 0.5)
+
+
+def _scale(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return dict(n=1 << 9, batch=64, steps=6, queries=32)
+    if quick:
+        return dict(n=1 << 12, batch=512, steps=10, queries=256)
+    return dict(n=1 << 16, batch=4096, steps=16, queries=1024)
+
+
+def _pow2_at_least(x: int) -> int:
+    return 1 << max(int(x - 1).bit_length(), 1)
+
+
+def churn_rows(quick: bool = True, smoke: bool = False,
+               variant: str = "none+uf_sync_full",
+               execs=("single", "replicated(x)", "sharded(x)"),
+               seed: int = 0) -> list:
+    """Machine-readable rows for BENCH_dynamic.json: one row per
+    placement × delete fraction."""
+    import jax
+    from repro.api import ConnectIt
+
+    sc = _scale(quick, smoke)
+    n, batch, steps, queries = (sc["n"], sc["batch"], sc["steps"],
+                                sc["queries"])
+    log = _pow2_at_least(4 * batch * (steps + 1))
+    rows = []
+    for exec_str in execs:
+        ci = ConnectIt(variant, exec=exec_str)
+        for frac in DELETE_FRACTIONS:
+            rng = np.random.default_rng(seed)
+            st = ci.stream(n, dynamic=True, log=log)
+            ndel = int(batch * frac)
+            # one untimed step per shape compiles the update/query programs
+            warm = rng.integers(0, n, size=(4, batch)).astype(np.int32)
+            st.process(warm[0][:ndel], warm[1][:ndel], warm[0], warm[1],
+                       warm[2][:queries], warm[3][:queries])
+            np.asarray(st.query(warm[2][:queries], warm[3][:queries]))
+
+            history: list = []
+            upd_s = 0.0
+            lat: list = []
+            entries = 0
+            for _ in range(steps):
+                ins = rng.integers(0, n, size=(2, batch)).astype(np.int32)
+                history.extend(zip(ins[0].tolist(), ins[1].tolist()))
+                if ndel:
+                    idx = rng.integers(0, len(history), size=(ndel,))
+                    dels = np.asarray([history[i] for i in idx], np.int32)
+                    du, dv = dels[:, 0], dels[:, 1]
+                else:
+                    du = dv = np.empty((0,), np.int32)
+                q = rng.integers(0, n, size=(2, queries)).astype(np.int32)
+                t0 = time.perf_counter()
+                st.process(du, dv, ins[0], ins[1],
+                           np.empty((0,), np.int32),
+                           np.empty((0,), np.int32))
+                jax.block_until_ready(st.state)
+                upd_s += time.perf_counter() - t0
+                entries += batch + ndel
+                t0 = time.perf_counter()
+                np.asarray(st.query(q[0], q[1]))
+                lat.append(time.perf_counter() - t0)
+            lat_ms = np.percentile(np.asarray(lat), [50, 95]) * 1e3
+            rows.append(dict(
+                variant=variant, exec=exec_str,
+                devices=st._backend.devices, delete_frac=frac,
+                n=n, batch=batch, steps=steps, log=log,
+                updates_per_s=round(entries / max(upd_s, 1e-9), 1),
+                query_p50_ms=round(float(lat_ms[0]), 3),
+                query_p95_ms=round(float(lat_ms[1]), 3),
+                edges_inserted=st.edges_inserted,
+                edges_deleted=st.edges_deleted,
+                log_used=st.log_used(),
+                finish_rounds=int(st.stats.finish_rounds),
+                components=st.num_components()))
+    return rows
+
+
+def write_json(rows: list, out: str, scale: str) -> dict:
+    payload = {"suite": "dynamic", "scale": scale, "rows": rows}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def run(quick: bool = True, smoke: bool = False,
+        variant: str = "none+uf_sync_full", out: str | None = None) -> list:
+    rows = churn_rows(quick=quick, smoke=smoke, variant=variant)
+    hdr = ["exec", "delete_frac", "updates_per_s", "query_p50_ms",
+           "query_p95_ms", "log_used", "components"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    if out:
+        scale = "smoke" if smoke else ("quick" if quick else "full")
+        write_json(rows, out, scale)
+        print(f"wrote {out} ({len(rows)} rows)")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized pass")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--variant", default="none+uf_sync_full")
+    ap.add_argument("--out", default=None,
+                    help="also write the BENCH_dynamic.json payload here")
+    args = ap.parse_args(argv)
+    run(quick=not args.full, smoke=args.smoke, variant=args.variant,
+        out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

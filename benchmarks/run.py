@@ -9,6 +9,8 @@
                                        placement) → BENCH_apps.json
 ``python -m benchmarks.run --serve``   serving latency/throughput sweep
                                        (repro.serve) → BENCH_serve.json
+``python -m benchmarks.run --dynamic`` batch-dynamic churn sweep
+                                       (repro.dynamic) → BENCH_dynamic.json
 
 Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
 from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
@@ -21,9 +23,10 @@ import json
 import sys
 import time
 
-from . import (amsf_bench, execution_bench, gather_edges, sampling_quality,
-               scan_bench, serve_bench, static_connectivity,
-               streaming_batchsize, streaming_throughput, synthetic_families)
+from . import (amsf_bench, dynamic_bench, execution_bench, gather_edges,
+               sampling_quality, scan_bench, serve_bench,
+               static_connectivity, streaming_batchsize,
+               streaming_throughput, synthetic_families)
 
 SUITES = {
     "static_connectivity": static_connectivity.run,     # Table 3
@@ -36,6 +39,7 @@ SUITES = {
     "gather_edges": gather_edges.run,                   # Table 8 / C.5.1
     "execution": execution_bench.run,                   # placements sweep
     "serve": serve_bench.run,                           # serving layer
+    "dynamic": dynamic_bench.run,                       # batch-dynamic churn
 }
 
 
@@ -86,6 +90,10 @@ def main(argv=None) -> int:
                     help="run the serving latency/throughput sweep only "
                          "and write BENCH_serve.json (p50/p95/p99 at "
                          "offered load + saturation QPS per placement)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="run the batch-dynamic churn sweep only and write "
+                         "BENCH_dynamic.json (updates/sec + query p50/p95 "
+                         "vs delete fraction per placement)")
     ap.add_argument("--out", default=None,
                     help="output path for the --apps/--serve JSON artifact")
     args = ap.parse_args(argv)
@@ -104,6 +112,12 @@ def main(argv=None) -> int:
         print("\n### serve " + "#" * 55)
         serve_bench.run(quick=not args.full, smoke=args.smoke,
                         out=args.out or "BENCH_serve.json")
+    elif args.dynamic:
+        if args.only or args.exec_spec:
+            ap.error("--dynamic is exclusive with --only/--exec")
+        print("\n### dynamic " + "#" * 53)
+        dynamic_bench.run(quick=not args.full, smoke=args.smoke,
+                          out=args.out or "BENCH_dynamic.json")
     elif args.exec_spec is not None:
         if args.only:
             ap.error("--exec and --only are mutually exclusive")

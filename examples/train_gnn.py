@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
+from repro.legacy import optim
 from repro.api import ConnectIt
 from repro.graphs import generators as gen
-from repro.models.gnn import GNNConfig, gnn_loss, init_gnn
+from repro.legacy.models.gnn import GNNConfig, gnn_loss, init_gnn
 
 
 def main():

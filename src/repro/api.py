@@ -69,9 +69,11 @@ from .core.execution import (
     ExecutionSpec,
     KERNEL_POLICIES,
     PLACEMENTS,
+    _per_chunk_counts,
     as_execution_spec,
     make_backend,
 )
+from .dynamic.engine import DEFAULT_SEARCH_ROUNDS
 from .core.finish import (
     COMPRESS_MODES,
     FOREST_METHODS,
@@ -84,7 +86,8 @@ from .core.sampling import KOUT_VARIANTS, make_sampler
 
 __all__ = [
     "SamplingSpec", "FinishSpec", "VariantSpec", "ExecutionSpec", "AppSpec",
-    "ConnectIt", "Stream", "enumerate_variants", "is_compatible",
+    "ConnectIt", "Stream", "DynamicStream", "enumerate_variants",
+    "is_compatible",
     "default_app_grid", "KOUT_VARIANTS", "COMPRESS_MODES",
     "LIU_TARJAN_VARIANTS", "PLACEMENTS", "KERNEL_POLICIES", "APPS",
     "FOREST_METHODS",
@@ -615,6 +618,162 @@ class Stream:
         return stats
 
 
+class DynamicStream:
+    """Batch-dynamic connectivity handle: mixed insert/delete/query batches
+    (``repro.dynamic``), bound to one forest-capable variant and one
+    execution placement.
+
+    The device state extends the stream labeling with the spanning forest
+    (recorded during inserts) and a fixed-capacity tombstoned edge log.
+    Deletions that miss the forest cost only the tombstone; forest hits
+    trigger the bounded replacement search (``search_rounds`` masked hook
+    rounds over the surviving log, then a component-local rebuild through
+    the finish program if the bound is exhausted). Within one batch the
+    linearization is deletes → inserts → queries.
+
+    Batches are padded onto pow2 dispatch shapes like ``Stream``; the three
+    size axes (deletes / inserts / queries) bucket independently. Log
+    capacity is tracked host-side with a conservative per-shard bound that
+    only syncs the true device occupancy when the bound would overflow —
+    steady-state updates stay sync-free.
+    """
+
+    def __init__(self, n: int, *, backend=None, variant: str = "",
+                 compress: str = "full", log: int = 0,
+                 search_rounds: int = DEFAULT_SEARCH_ROUNDS):
+        self.n = n
+        self.variant = variant
+        self._backend = (make_backend("single:dynamic") if backend is None
+                         else backend)
+        self._ops = self._backend.dynamic_ops(
+            n, compress=compress, log=log, search_rounds=search_rounds)
+        self._exec = dataclasses.replace(self._backend.spec, dynamic=True,
+                                         log=log)
+        self.state = self._ops.init()
+        self.batches = 0
+        self._dispatch_sizes: list[int] = []
+        self._edges = jnp.int32(0)
+        self._deletes = jnp.int32(0)
+        self._rounds = jnp.int32(0)
+        # conservative per-shard occupancy bound (tombstones never shrink
+        # it; a predicted overflow syncs the true per-shard live counts)
+        shards = self._ops.edge_shards
+        self._cap_local = self._ops.log_cap // shards
+        self._bound = np.zeros((shards,), np.int64)
+
+    # -- shape bucketing -----------------------------------------------------
+
+    def _pad(self, u, v, size_fn):
+        u = jnp.asarray(u, jnp.int32)
+        v = jnp.asarray(v, jnp.int32)
+        k = int(u.shape[0])
+        size = size_fn(k)
+        if size != k:
+            u = jnp.pad(u, (0, size - k), constant_values=self.n)
+            v = jnp.pad(v, (0, size - k), constant_values=self.n)
+        return u, v, k, size
+
+    def _ensure_capacity(self, k: int, size: int) -> None:
+        incoming = np.asarray(_per_chunk_counts(k, size,
+                                                self._ops.edge_shards))
+        if (self._bound + incoming <= self._cap_local).all():
+            self._bound += incoming
+            return
+        # the bound ignores tombstones — sync the true per-shard occupancy
+        # once, then re-check (the only host sync on the capacity path)
+        self._bound = np.asarray(self._ops.used(self.state), np.int64)
+        if (self._bound + incoming > self._cap_local).any():
+            raise ValueError(
+                f"edge log full: shard occupancy {self._bound.tolist()} + "
+                f"batch {incoming.tolist()} exceeds {self._cap_local} "
+                f"slots/shard — build the stream with a larger log= "
+                f"(total capacity {self._ops.log_cap})")
+        self._bound += incoming
+
+    # -- operations ----------------------------------------------------------
+
+    def process(self, du, dv, u, v, qa, qb) -> jax.Array:
+        """One mixed batch: delete ``(du, dv)``, insert ``(u, v)``, then
+        answer ``(qa, qb)`` — a single device dispatch."""
+        du, dv, _, _ = self._pad(du, dv, self._ops.delete_size)
+        u, v, k, size = self._pad(u, v, self._ops.batch_size)
+        qa, qb, qk, _ = self._pad(qa, qb, self._ops.batch_size)
+        self._ensure_capacity(k, size)
+        self.state, ans, rounds = self._ops.update(
+            self.state, du, dv, u, v, qa, qb)
+        self.batches += 1
+        self._dispatch_sizes.append(size)
+        self._edges = self._edges + jnp.sum(u < self.n, dtype=jnp.int32)
+        self._deletes = self._deletes + jnp.sum(du < self.n,
+                                                dtype=jnp.int32)
+        self._rounds = self._rounds + jnp.asarray(rounds, jnp.int32)
+        return ans[:qk]
+
+    def insert(self, u, v) -> "DynamicStream":
+        """Insert one batch of undirected edges."""
+        empty = np.empty((0,), np.int32)
+        self.process(empty, empty, u, v, empty, empty)
+        return self
+
+    def delete(self, u, v) -> "DynamicStream":
+        """Delete one batch of undirected edges (all logged copies of each
+        pair are removed; pairs not present are ignored)."""
+        empty = np.empty((0,), np.int32)
+        self.process(u, v, empty, empty, empty, empty)
+        return self
+
+    def query(self, qa, qb) -> jax.Array:
+        """IsConnected for each (qa[i], qb[i]) pair."""
+        qa, qb, qk, _ = self._pad(qa, qb, self._ops.batch_size)
+        return self._ops.query(self.state, qa, qb)[:qk]
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def edges_inserted(self) -> int:
+        """Real (non-padding) insert entries so far (syncs on read)."""
+        return int(self._edges)
+
+    @property
+    def edges_deleted(self) -> int:
+        """Real (non-padding) delete entries so far (syncs on read)."""
+        return int(self._deletes)
+
+    @property
+    def labels(self) -> jax.Array:
+        return self._ops.labels(self.state)
+
+    def num_components(self) -> int:
+        return int(self._ops.ncomp(self.state))
+
+    def log_used(self) -> int:
+        """Live (non-tombstoned) edge-log entries on device (syncs)."""
+        return int(np.asarray(self._ops.used(self.state)).sum())
+
+    def forest_edges(self) -> np.ndarray:
+        """Current spanning-forest edges, (k, 2) host array."""
+        fu, fv = self._ops.forest(self.state)
+        return _amsf_impl.forest_edges(fu, fv)
+
+    @property
+    def stats(self) -> driver.ConnectivityStats:
+        """Unified ConnectivityStats of the dynamic stream (syncs on read).
+        ``edges_total`` counts inserts net of deletes submitted;
+        ``edges_finish`` follows the stream convention (2× directed)."""
+        spec = self._exec
+        shards = self._ops.edge_shards
+        padded = 2 * sum(self._dispatch_sizes)
+        return driver.ConnectivityStats(
+            variant=self.variant, exec=str(spec), placement=spec.placement,
+            devices=self._backend.devices, fused=spec.fused,
+            edges_total=self.edges_inserted - self.edges_deleted,
+            edges_finish=2 * self.edges_inserted,
+            edges_finish_padded=padded,
+            dispatch_sizes=(padded // shards,) * shards,
+            batch_shapes=tuple(sorted(set(self._dispatch_sizes))),
+            finish_rounds=int(self._rounds))
+
+
 class ConnectIt:
     """One variant × one execution placement, three workloads: static /
     forest / streaming connectivity.
@@ -713,14 +872,43 @@ class ConnectIt:
         return self._backend.spanning_forest(
             g, self._sampler, key, compress=self.spec.forest_compress)
 
-    def stream(self, n: int) -> Stream:
+    def stream(self, n: int, *, dynamic: Optional[bool] = None,
+               log: Optional[int] = None,
+               search_rounds: int = DEFAULT_SEARCH_ROUNDS
+               ) -> Union[Stream, "DynamicStream"]:
         """Fresh batch-incremental handle over ``n`` vertices (paper §3.5),
-        executing under this session's placement."""
-        return Stream(n, self._finish, backend=self._backend,
-                      variant=str(self.spec))
+        executing under this session's placement.
+
+        With ``dynamic=True`` (or an exec spec carrying the ``dynamic`` opt)
+        the handle is a ``DynamicStream``: mixed insert/delete/query batches
+        backed by a spanning forest and a tombstoned edge log of capacity
+        ``log`` (power of two; default ``log=`` from the exec spec, else the
+        next power of two >= 4n). Requires a root-based (forest-capable)
+        finish. ``search_rounds`` bounds the device-side replacement search
+        before a deletion falls back to a component-local rebuild."""
+        dyn = self.exec.dynamic if dynamic is None else bool(dynamic)
+        if not dyn:
+            if log:
+                raise ValueError("log= is a dynamic-stream knob — pass "
+                                 "dynamic=True (or use a ':dynamic' exec)")
+            return Stream(n, self._finish, backend=self._backend,
+                          variant=str(self.spec))
+        if not self.spec.forest_capable:
+            raise ValueError(
+                f"dynamic streams maintain a spanning forest and need a "
+                f"root-based finish ({'/'.join(FOREST_METHODS)}), not "
+                f"{self.spec.finish_str!r} — paper §3.4")
+        cap = self.exec.log if log is None else log
+        if cap and cap & (cap - 1):
+            raise ValueError(f"log must be a power of two, got {cap}")
+        return DynamicStream(n, backend=self._backend,
+                             variant=str(self.spec),
+                             compress=self.spec.forest_compress,
+                             log=cap, search_rounds=search_rounds)
 
     def serve(self, n: Optional[int] = None, *, tenants=None, config=None,
-              **knobs):
+              dynamic: Optional[bool] = None, log: Optional[int] = None,
+              search_rounds: int = DEFAULT_SEARCH_ROUNDS, **knobs):
         """Async serving front-end over a live graph (``repro.serve``).
 
         Returns a not-yet-started ``repro.serve.Server``: an asyncio
@@ -735,6 +923,11 @@ class ConnectIt:
         (``max_batch_edges=...``, ``flush_ms=...``, ...) override its
         fields. See docs/API.md §Serving.
 
+        With ``dynamic=True`` (or a ``:dynamic`` exec spec) the server also
+        accepts ``submit_deletes`` — deletions coalesce into the same
+        snapshot-commit pipeline (forest-capable finish required; ``log``
+        sizes the tombstoned edge log as in ``stream``).
+
         >>> server = ConnectIt("none+uf_sync_full").serve(1 << 16)
         >>> async with server:
         ...     epoch = await server.submit_inserts(u, v)
@@ -745,8 +938,25 @@ class ConnectIt:
         cfg = config or ServeConfig()
         if knobs:
             cfg = dataclasses.replace(cfg, **knobs)
-        ops = self._backend.snapshot_ops(registry.total, self._finish,
-                                        donate=cfg.donate)
+        dyn = self.exec.dynamic if dynamic is None else bool(dynamic)
+        if dyn:
+            if not self.spec.forest_capable:
+                raise ValueError(
+                    f"dynamic serving needs a root-based finish "
+                    f"({'/'.join(FOREST_METHODS)}), not "
+                    f"{self.spec.finish_str!r} — paper §3.4")
+            cap = self.exec.log if log is None else log
+            if cap and cap & (cap - 1):
+                raise ValueError(f"log must be a power of two, got {cap}")
+            ops = self._backend.dynamic_snapshot_ops(
+                registry.total, compress=self.spec.forest_compress,
+                log=cap, search_rounds=search_rounds, donate=cfg.donate)
+        else:
+            if log:
+                raise ValueError("log= is a dynamic-serving knob — pass "
+                                 "dynamic=True (or use a ':dynamic' exec)")
+            ops = self._backend.snapshot_ops(registry.total, self._finish,
+                                            donate=cfg.donate)
         return Server(ops, registry, config=cfg, variant=str(self.spec),
                       exec_str=str(self.exec), devices=self._backend.devices)
 

@@ -104,13 +104,13 @@ def all_archs() -> list[str]:
 
 
 def load_all():
-    for mod in [
-        "pna", "egnn", "gin_tu", "nequip_cfg", "dlrm_rm2", "connectit_cfg",
-    ]:
+    for mod in ["connectit_cfg"]:
         importlib.import_module(f"repro.configs.{mod}")
-    # quarantined seed-era LM configs (unreferenced by any connectivity
-    # path); kept loadable for the arch-smoke harness — see legacy/__init__
+    # quarantined seed-era training configs (unreferenced by any
+    # connectivity path); kept loadable for the arch-smoke harness — see
+    # legacy/__init__ and repro/legacy/__init__
     for mod in [
+        "pna", "egnn", "gin_tu", "nequip_cfg", "dlrm_rm2",
         "h2o_danube_3_4b", "qwen3_4b", "stablelm_3b", "deepseek_moe_16b",
         "granite_moe_3b_a800m",
     ]:

@@ -2,7 +2,7 @@
 fine-grained experts (d_expert=1408). Deviation noted in DESIGN.md: the HF
 model's first layer is dense; here all 28 layers are MoE (scan-over-layers
 homogeneity)."""
-from ...models.transformer import TransformerConfig
+from ...legacy.models.transformer import TransformerConfig
 from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(

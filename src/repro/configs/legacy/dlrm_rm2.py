@@ -1,6 +1,6 @@
 """DLRM-RM2 [arXiv:1906.00091]: dot interaction, 26 sparse fields."""
-from ..models.dlrm import DLRMConfig
-from .base import Arch, RECSYS_SHAPES, register
+from ...legacy.models.dlrm import DLRMConfig
+from ..base import Arch, RECSYS_SHAPES, register
 
 MODEL = DLRMConfig(
     name="dlrm-rm2", n_dense=13, n_sparse=26, embed_dim=64,

@@ -1,6 +1,6 @@
 """GIN [arXiv:1810.00826]: sum aggregation, learnable eps."""
-from ..models.gnn import GNNConfig
-from .base import Arch, GNN_SHAPES, register
+from ...legacy.models.gnn import GNNConfig
+from ..base import Arch, GNN_SHAPES, register
 
 MODEL = GNNConfig(
     name="gin-tu", kind="gin", n_layers=5, d_hidden=64, d_in=0, n_classes=0,

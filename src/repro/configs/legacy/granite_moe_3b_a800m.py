@@ -1,6 +1,6 @@
 """granite-moe-3b-a800m [hf:ibm-granite/granite-3.0 family]: 40 routed
 experts top-8, d_expert=512."""
-from ...models.transformer import TransformerConfig
+from ...legacy.models.transformer import TransformerConfig
 from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(

@@ -1,5 +1,5 @@
 """h2o-danube-3-4b [arXiv:2401.16818]: llama+mistral mix with SWA."""
-from ...models.transformer import TransformerConfig
+from ...legacy.models.transformer import TransformerConfig
 from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(

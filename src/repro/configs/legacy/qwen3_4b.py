@@ -1,5 +1,5 @@
 """qwen3-4b [hf:Qwen/Qwen3-8B family]: GQA + qk-norm."""
-from ...models.transformer import TransformerConfig
+from ...legacy.models.transformer import TransformerConfig
 from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(

@@ -1,5 +1,5 @@
 """stablelm-3b [hf:stabilityai/stablelm family]: MHA (kv == heads)."""
-from ...models.transformer import TransformerConfig
+from ...legacy.models.transformer import TransformerConfig
 from ..base import Arch, LM_SHAPES, register
 
 MODEL = TransformerConfig(

@@ -432,6 +432,177 @@ def make_sharded_stream(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
 
 
 # ---------------------------------------------------------------------------
+# Batch-dynamic programs (repro.dynamic at mesh scale).
+#
+# The delete/rebuild machinery is the engine's (repro.dynamic.engine); the
+# only distributed ingredient is the forest hook round, which must record a
+# *deterministic* cross-shard winner per hooked root — exactly the
+# 3-pass pmin-merged ``_global_forest_round`` the AMSF programs already use.
+# Labels and forest buffers stay replicated across the edge shards (merged
+# every round), the edge log is sharded like stream batches, and the delete
+# batch is replicated so every shard tombstones its own log slots and all
+# shards agree on forest hits without any collective.
+# ---------------------------------------------------------------------------
+
+class DynamicPrograms(NamedTuple):
+    """Mesh programs behind an execution-aware ``repro.api.DynamicStream``."""
+
+    update: Callable   # (P, fu, fv, log_u, log_v, du, dv, bu, bv) -> (...)
+    query: Callable    # (labels, qa, qb) -> bool[q]
+    used: Callable     # (log_u) -> (edge_shards,) live log entries
+
+
+def _dynamic_body(labels, fu, fv, log_u, log_v, du, dv, bu, bv, *, n: int,
+                  mesh: Mesh, axes: Sequence[str], compress: str,
+                  search_rounds: int, kernels: Optional[str], cap: int):
+    """Per-shard mixed-batch update on full replicated labels.
+
+    Mirrors ``engine.make_update`` with the hook round swapped for the
+    globally-merged forest round; every label/forest/flag value is identical
+    on all shards after each merge, so the ``lax.cond`` predicates and while
+    conditions stay mesh-uniform (flags are still pmax-reduced to be safe)."""
+    from ..dynamic import engine
+
+    ids = jnp.arange(n + 1, dtype=labels.dtype)
+    flag_axes = tuple(mesh.axis_names)
+
+    def changed(old, new):
+        ch = jnp.any(old[0] != new[0]).astype(jnp.int32)
+        return jax.lax.pmax(ch, flag_axes) > 0
+
+    def round_(st, s, r, gid):
+        P2, fu2, fv2 = _global_forest_round(
+            st[0], st[1], st[2], s, r, gid, s < n, axes, kernels=kernels)
+        P2 = _compress(P2, compress, kernels=kernels)
+        return P2, fu2, fv2
+
+    # -- delete phase -------------------------------------------------------
+    slo, shi = engine.sorted_pairs(du, dv, n)
+    dead = engine.pairs_member(slo, shi, log_u, log_v)
+    log_u = jnp.where(dead, jnp.asarray(n, log_u.dtype), log_u)
+    log_v = jnp.where(dead, jnp.asarray(n, log_v.dtype), log_v)
+    hit = engine.pairs_member(slo, shi, fu, fv)
+
+    def rebuild(st):
+        P1, fu1, fv1 = st
+        aff = engine.affected_mask(P1, fu1, hit)
+        P1 = jnp.where(aff, ids, P1)
+        fu2 = jnp.where(aff, jnp.asarray(-1, fu1.dtype), fu1)
+        fv2 = jnp.where(aff, jnp.asarray(-1, fv1.dtype), fv1)
+        s, r = engine.masked_log_edges(log_u, log_v, aff, n)
+        gid = _shard_gid(mesh, axes, s.shape[0])
+        st2, k1 = iterate_to_fixpoint(
+            lambda t: round_(t, s, r, gid), (P1, fu2, fv2), search_rounds,
+            changed_fn=changed)
+        st2, k2 = jax.lax.cond(
+            k1 >= search_rounds,
+            lambda t: iterate_to_fixpoint(
+                lambda q: round_(q, s, r, gid), t, cap, changed_fn=changed),
+            lambda t: (t, 0), st2)
+        return st2, (k1 + k2).astype(jnp.int32)
+
+    (labels, fu, fv), drounds = jax.lax.cond(
+        jnp.any(hit), rebuild,
+        lambda st: (st, jnp.int32(0)), (labels, fu, fv))
+
+    # -- insert phase -------------------------------------------------------
+    bu2, bv2 = engine.sanitize_pairs(bu, bv, n)
+    log_u, log_v = engine.append_log(log_u, log_v, bu2, bv2, n)
+    s = jnp.concatenate([bu2, bv2])
+    r = jnp.concatenate([bv2, bu2])
+    gid = _shard_gid(mesh, axes, s.shape[0])
+    (labels, fu, fv), irounds = iterate_to_fixpoint(
+        lambda t: round_(t, s, r, gid), (labels, fu, fv), cap,
+        changed_fn=changed)
+    labels = full_compress(labels, kernels=kernels)
+    return labels, fu, fv, log_u, log_v, drounds + irounds.astype(jnp.int32)
+
+
+def make_replicated_dynamic(mesh: Mesh, axes: Sequence[str], n: int, *,
+                            compress: str = "full", search_rounds: int = 4,
+                            kernels: Optional[str] = None,
+                            max_rounds: Optional[int] = None
+                            ) -> DynamicPrograms:
+    """Batch-dynamic programs with labels/forest replicated, the edge log
+    and insert batches sharded over ``axes``, delete batches replicated."""
+    axes = tuple(axes)
+    espec = P(axes)
+    cap = _fixpoint_cap(mesh, axes, max_rounds)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(), P(), P(), espec, espec, P(), P(), espec, espec),
+             out_specs=(P(), P(), P(), espec, espec, P()), check_rep=False)
+    def update(labels, fu, fv, log_u, log_v, du, dv, bu, bv):
+        return _dynamic_body(labels, fu, fv, log_u, log_v, du, dv, bu, bv,
+                             n=n, mesh=mesh, axes=axes, compress=compress,
+                             search_rounds=search_rounds, kernels=kernels,
+                             cap=cap)
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(), espec, espec),
+             out_specs=espec, check_rep=False)
+    def query(labels, qa, qb):
+        return labels[qa] == labels[qb]
+
+    @partial(shard_map, mesh=mesh, in_specs=(espec,), out_specs=espec,
+             check_rep=False)
+    def used(log_u):
+        return jnp.sum(log_u < n, dtype=jnp.int32)[None]
+
+    return DynamicPrograms(update, query, used)
+
+
+def make_sharded_dynamic(mesh: Mesh, edge_axes: Sequence[str],
+                         label_axis: str, n: int, *,
+                         compress: str = "full", search_rounds: int = 4,
+                         kernels: Optional[str] = None,
+                         max_rounds: Optional[int] = None
+                         ) -> DynamicPrograms:
+    """Batch-dynamic programs with labels sharded over ``label_axis``: the
+    labels are gathered once per update (the forest-carrying precedent,
+    ``make_sharded_amsf``), the mixed-batch body runs on the full array with
+    merges over the edge axes, and the labeling is resharded at the end. The
+    padded tail above the dump row is sliced off before the body and rebuilt
+    after — tail slots are self-rooted and no edge can reference them."""
+    edge_axes = tuple(edge_axes)
+    espec = P(edge_axes)
+    lspec = P(label_axis)
+    cap = _fixpoint_cap(mesh, edge_axes, max_rounds)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(lspec, P(), P(), espec, espec, P(), P(), espec,
+                       espec),
+             out_specs=(lspec, P(), P(), espec, espec, P()), check_rep=False)
+    def update(lab_shard, fu, fv, log_u, log_v, du, dv, bu, bv):
+        shard_len = lab_shard.shape[0]
+        full = jax.lax.all_gather(lab_shard, label_axis, tiled=True)
+        length = full.shape[0]
+        labels, fu, fv, log_u, log_v, rounds = _dynamic_body(
+            full[: n + 1], fu, fv, log_u, log_v, du, dv, bu, bv, n=n,
+            mesh=mesh, axes=edge_axes, compress=compress,
+            search_rounds=search_rounds, kernels=kernels, cap=cap)
+        if length > n + 1:
+            tail = jnp.arange(n + 1, length, dtype=labels.dtype)
+            labels = jnp.concatenate([labels, tail])
+        idx = jax.lax.axis_index(label_axis)
+        shard = jax.lax.dynamic_slice_in_dim(labels, idx * shard_len,
+                                             shard_len)
+        return shard, fu, fv, log_u, log_v, rounds
+
+    @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
+             out_specs=espec, check_rep=False)
+    def query(lab_shard, qa, qb):
+        full = jax.lax.all_gather(lab_shard, label_axis, tiled=True)
+        return full[qa] == full[qb]
+
+    @partial(shard_map, mesh=mesh, in_specs=(espec,), out_specs=espec,
+             check_rep=False)
+    def used(log_u):
+        return jnp.sum(log_u < n, dtype=jnp.int32)[None]
+
+    return DynamicPrograms(update, query, used)
+
+
+# ---------------------------------------------------------------------------
 # Legacy factories (deprecation shims; pre-ExecutionSpec behavior preserved).
 #
 # These hardwire ``jumps``-round pointer jumping, run a fixed number of

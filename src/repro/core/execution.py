@@ -7,6 +7,7 @@ compression); ``ExecutionSpec`` says *where and how* to dispatch it:
     exec      := placement [ "(" axes ")" ] [ ":" opt ("," opt)* ]
     axes      := axis ("," axis)* [ "|" label_axis ]      # sharded only
     opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+               | "dynamic" | "log=" INT
                | "kernels=" ("auto" | "pallas" | "interpret" | "ref")
 
 Examples (canonical strings round-trip, ``ExecutionSpec.parse(str(s)) == s``):
@@ -38,6 +39,13 @@ construction, so equality and round-trips are canonical — same discipline as
   * ``rounds`` — fixed outer merge rounds for distributed placements
     (dry-run / fixed-budget programs); ``0`` runs to a global fixpoint.
     Pinned 0 for single (finish methods run to their own fixpoint).
+  * ``dynamic`` — streams accept mixed insert/delete/query batches
+    (``repro.dynamic``): the state carries a spanning forest and a
+    tombstoned edge log alongside the labels. Meaningful for every
+    placement.
+  * ``log`` — total edge-log capacity for dynamic streams (a power of two;
+    ``log=0``, the default, sizes the log automatically from ``n``). Only
+    valid together with ``dynamic``.
   * ``kernels`` — the KernelPolicy (``repro.kernels.ops``) the dispatched
     programs route their hot-path primitives through: ``auto`` (default;
     defers to ``REPRO_KERNELS`` then backend detection) | ``pallas`` |
@@ -66,11 +74,14 @@ from ..kernels.ops import KERNEL_POLICIES
 from . import driver, streaming
 from .apps import amsf as amsf_impl
 from .apps import scan as scan_impl
+from ..dynamic import engine as dyn_engine
 from .distributed import (
     make_replicated_amsf,
+    make_replicated_dynamic,
     make_replicated_finish,
     make_replicated_stream,
     make_sharded_amsf,
+    make_sharded_dynamic,
     make_sharded_finish,
     make_sharded_stream,
 )
@@ -86,6 +97,7 @@ from .registry import FactoryRegistry
 __all__ = [
     "ExecutionSpec", "PLACEMENTS", "KERNEL_POLICIES", "make_backend",
     "plan_mesh", "make_axis_mesh", "bucket_size", "StreamOps", "SnapshotOps",
+    "DynamicOps", "DynamicSnapshotOps",
 ]
 
 PLACEMENTS = ("single", "replicated", "sharded")
@@ -116,6 +128,8 @@ class ExecutionSpec:
     pad_multiple: int = 8       # pad="multiple": granularity
     donate: bool = False
     rounds: int = 0             # distributed outer rounds; 0 = fixpoint
+    dynamic: bool = False       # mixed insert/delete/query streams
+    log: int = 0                # dynamic edge-log capacity; 0 = auto
     kernels: str = "auto"       # KernelPolicy: auto | pallas | interpret | ref
 
     def __post_init__(self):
@@ -126,7 +140,7 @@ class ExecutionSpec:
             raise ValueError(f"unknown kernel policy {self.kernels!r}; "
                              f"have {KERNEL_POLICIES}")
         object.__setattr__(self, "axes", tuple(self.axes))
-        for name in ("pad_multiple", "rounds"):
+        for name in ("pad_multiple", "rounds", "log"):
             v = getattr(self, name)
             if int(v) != v:
                 raise ValueError(f"{name} must be an integer, got {v!r}")
@@ -139,6 +153,14 @@ class ExecutionSpec:
                              f"got {self.pad_multiple}")
         if self.rounds < 0:
             raise ValueError(f"rounds must be >= 0, got {self.rounds}")
+        if self.log and not self.dynamic:
+            raise ValueError(
+                f"log={self.log} requires the dynamic opt (the edge log "
+                "only exists on dynamic streams)")
+        if self.log < 0 or (self.log and self.log & (self.log - 1)):
+            raise ValueError(
+                f"log must be a power of two (dispatch-shape discipline), "
+                f"got {self.log}")
         if self.placement != "single":
             axes = self.axes or ("x",)
             for a in axes:
@@ -188,6 +210,10 @@ class ExecutionSpec:
             opts.append("donate")
         if self.rounds:
             opts.append(f"rounds={self.rounds}")
+        if self.dynamic:
+            opts.append("dynamic")
+        if self.log:
+            opts.append(f"log={self.log}")
         if self.kernels != "auto":
             opts.append(f"kernels={self.kernels}")
         return head + (":" + ",".join(opts) if opts else "")
@@ -233,6 +259,10 @@ class ExecutionSpec:
                 kw["donate"] = True
             elif key == "rounds" and eq:
                 kw["rounds"] = int(val)
+            elif key == "dynamic" and not eq:
+                kw["dynamic"] = True
+            elif key == "log" and eq:
+                kw["log"] = int(val)
             elif key == "kernels" and eq:
                 kw["kernels"] = val.strip()
             elif key == "pad" and eq:
@@ -428,6 +458,47 @@ class SnapshotOps(NamedTuple):
     batch_size: Callable  # (k) -> padded dispatch size under the pad policy
 
 
+class DynamicOps(NamedTuple):
+    """Planned batch-dynamic programs behind ``repro.api.DynamicStream``
+    (one per (ExecutionSpec, n, variant) triple; see ``repro.dynamic``).
+
+    The state is a ``DynamicState`` pytree placed per the backend (labels
+    per placement, forest replicated, edge log sharded like stream
+    batches). ``update`` applies one mixed batch — deletes, then inserts,
+    then queries — in a single dispatch."""
+
+    init: Callable        # () -> DynamicState (placed)
+    update: Callable      # (state, du, dv, u, v, qa, qb) -> (state, ans, k)
+    query: Callable       # (state, qa, qb) -> ans
+    labels: Callable      # (state) -> (n,) labels
+    ncomp: Callable       # (state) -> component count (device scalar)
+    used: Callable        # (state) -> (edge_shards,) live log entries
+    forest: Callable      # (state) -> (fu, fv) replicated forest buffers
+    edge_shards: int      # devices insert/query dispatches split across
+    batch_size: Callable  # (k) -> padded insert/query dispatch size
+    delete_size: Callable  # (k) -> padded delete dispatch size (replicated)
+    log_cap: int          # total edge-log capacity across shards
+
+
+class DynamicSnapshotOps(NamedTuple):
+    """Snapshot-epoch programs for dynamic serving: ``SnapshotOps`` whose
+    state is a full ``DynamicState`` and whose commit applies deletes before
+    inserts (``Server.submit_deletes`` coalesces into the same pow2
+    commit pipeline; the presence of ``log_cap`` is how the serve layer
+    detects a dynamic ops bundle)."""
+
+    init: Callable        # () -> DynamicState (one placed epoch state)
+    commit: Callable      # (committed, shadow, du, dv, u, v) -> (state, k)
+    query: Callable       # (state, qa, qb) -> ans
+    labels: Callable      # (state) -> (n,) labels
+    ncomp: Callable       # (state) -> component count (device scalar)
+    used: Callable        # (state) -> (edge_shards,) live log entries
+    edge_shards: int
+    batch_size: Callable
+    delete_size: Callable
+    log_cap: int
+
+
 # ---------------------------------------------------------------------------
 # Backends.
 # ---------------------------------------------------------------------------
@@ -454,6 +525,16 @@ class _Backend:
         return bucket_size(k, pad=self.spec.pad,
                            pad_multiple=self.spec.pad_multiple,
                            shards=self.edge_shards)
+
+    def _delete_bucket(self, k: int) -> int:
+        # delete batches are replicated on every placement (each shard
+        # tombstones its own log slots), so no shard-multiple constraint
+        return bucket_size(k, pad=self.spec.pad,
+                           pad_multiple=self.spec.pad_multiple, shards=1)
+
+    def _log_cap(self, n: int, log: int) -> int:
+        cap = log or self.spec.log or dyn_engine.default_log_cap(n)
+        return round_up(cap, self.edge_shards)
 
     @property
     def kernels(self) -> Optional[str]:
@@ -538,6 +619,73 @@ class SingleBackend(_Backend):
             ncomp=lambda P: num_components(P[: n + 1]),
             edge_shards=1,
             batch_size=self._bucket,
+        )
+
+    # -- batch-dynamic (repro.dynamic) --------------------------------------
+
+    def _dynamic_update(self, n: int, compress: str, search_rounds: int):
+        key = ("dynamic", n, compress, search_rounds)
+        if key not in self._programs:
+            upd = dyn_engine.make_update(n, compress=compress,
+                                         search_rounds=search_rounds,
+                                         kernels=self.kernels)
+
+            def update(state, du, dv, u, v, qa, qb):
+                state, rounds = upd(state, du, dv, u, v)
+                return state, state.P[qa] == state.P[qb], rounds
+
+            self._programs[key] = (upd, jax.jit(update),
+                                   jax.jit(dyn_engine.query_state))
+        return self._programs[key]
+
+    def dynamic_ops(self, n: int, *, compress: str = "full", log: int = 0,
+                    search_rounds: int = dyn_engine.DEFAULT_SEARCH_ROUNDS
+                    ) -> DynamicOps:
+        cap = self._log_cap(n, log)
+        _, update, query = self._dynamic_update(n, compress, search_rounds)
+        return DynamicOps(
+            init=lambda: dyn_engine.init_dynamic(n, cap),
+            update=update,
+            query=query,
+            labels=lambda st: st.P[:n],
+            ncomp=lambda st: num_components(st.P),
+            used=lambda st: dyn_engine.used_slots(st, n),
+            forest=lambda st: (st.fu, st.fv),
+            edge_shards=1,
+            batch_size=self._bucket,
+            delete_size=self._delete_bucket,
+            log_cap=cap,
+        )
+
+    def dynamic_snapshot_ops(self, n: int, *, compress: str = "full",
+                             log: int = 0,
+                             search_rounds: int =
+                             dyn_engine.DEFAULT_SEARCH_ROUNDS,
+                             donate: Optional[bool] = None
+                             ) -> DynamicSnapshotOps:
+        donate = bool(donate) if donate is not None else self.spec.donate
+        cap = self._log_cap(n, log)
+        upd, _, query = self._dynamic_update(n, compress, search_rounds)
+        key = ("dynsnap", n, compress, search_rounds, donate)
+        if key not in self._programs:
+
+            def commit(committed, shadow, du, dv, u, v):
+                del shadow  # donated: its buffers back the new epoch
+                return upd(committed, du, dv, u, v)
+
+            self._programs[key] = jax.jit(
+                commit, donate_argnums=(1,) if donate else ())
+        return DynamicSnapshotOps(
+            init=lambda: dyn_engine.init_dynamic(n, cap),
+            commit=self._programs[key],
+            query=query,
+            labels=lambda st: st.P[:n],
+            ncomp=lambda st: num_components(st.P),
+            used=lambda st: dyn_engine.used_slots(st, n),
+            edge_shards=1,
+            batch_size=self._bucket,
+            delete_size=self._delete_bucket,
+            log_cap=cap,
         )
 
     # -- applications (paper §5) --------------------------------------------
@@ -700,6 +848,96 @@ class _MeshBackend(_Backend):
             batch_size=self._bucket,
         )
 
+    # -- batch-dynamic (repro.dynamic) --------------------------------------
+
+    def _init_dynamic_state(self, n: int, cap: int):
+        st = dyn_engine.init_dynamic(n, cap)
+        rep = NamedSharding(self.mesh, P())
+        esh = NamedSharding(self.mesh, P(self.spec.axes))
+        return dyn_engine.DynamicState(
+            P=self._place_labels(st.P),
+            fu=jax.device_put(st.fu, rep),
+            fv=jax.device_put(st.fv, rep),
+            log_u=jax.device_put(st.log_u, esh),
+            log_v=jax.device_put(st.log_v, esh),
+        )
+
+    def _dynamic_programs(self, n: int, compress: str, search_rounds: int):
+        key = ("dynamic", n, compress, search_rounds)
+        if key not in self._programs:
+            progs = self._build_dynamic(n, compress=compress,
+                                        search_rounds=search_rounds)
+
+            def raw_update(state, du, dv, u, v):
+                out = progs.update(state.P, state.fu, state.fv, state.log_u,
+                                   state.log_v, du, dv, u, v)
+                return dyn_engine.DynamicState(*out[:5]), out[5]
+
+            def update(state, du, dv, u, v, qa, qb):
+                state, rounds = raw_update(state, du, dv, u, v)
+                return state, progs.query(state.P, qa, qb), rounds
+
+            donate = (0,) if self.spec.donate else ()
+            self._programs[key] = (
+                raw_update,
+                jax.jit(update, donate_argnums=donate),
+                jax.jit(lambda st, qa, qb: progs.query(st.P, qa, qb)),
+                jax.jit(lambda st: progs.used(st.log_u)),
+            )
+        return self._programs[key]
+
+    def dynamic_ops(self, n: int, *, compress: str = "full", log: int = 0,
+                    search_rounds: int = dyn_engine.DEFAULT_SEARCH_ROUNDS
+                    ) -> DynamicOps:
+        cap = self._log_cap(n, log)
+        _, update, query, used = self._dynamic_programs(n, compress,
+                                                        search_rounds)
+        return DynamicOps(
+            init=lambda: self._init_dynamic_state(n, cap),
+            update=update,
+            query=query,
+            labels=lambda st: st.P[:n],
+            ncomp=lambda st: num_components(st.P[: n + 1]),
+            used=used,
+            forest=lambda st: (st.fu, st.fv),
+            edge_shards=self.edge_shards,
+            batch_size=self._bucket,
+            delete_size=self._delete_bucket,
+            log_cap=cap,
+        )
+
+    def dynamic_snapshot_ops(self, n: int, *, compress: str = "full",
+                             log: int = 0,
+                             search_rounds: int =
+                             dyn_engine.DEFAULT_SEARCH_ROUNDS,
+                             donate: Optional[bool] = None
+                             ) -> DynamicSnapshotOps:
+        donate = bool(donate) if donate is not None else self.spec.donate
+        cap = self._log_cap(n, log)
+        raw_update, _, query, used = self._dynamic_programs(n, compress,
+                                                            search_rounds)
+        key = ("dynsnap", n, compress, search_rounds, donate)
+        if key not in self._programs:
+
+            def commit(committed, shadow, du, dv, u, v):
+                del shadow  # donated: its buffers back the new epoch
+                return raw_update(committed, du, dv, u, v)
+
+            self._programs[key] = jax.jit(
+                commit, donate_argnums=(1,) if donate else ())
+        return DynamicSnapshotOps(
+            init=lambda: self._init_dynamic_state(n, cap),
+            commit=self._programs[key],
+            query=query,
+            labels=lambda st: st.P[:n],
+            ncomp=lambda st: num_components(st.P[: n + 1]),
+            used=used,
+            edge_shards=self.edge_shards,
+            batch_size=self._bucket,
+            delete_size=self._delete_bucket,
+            log_cap=cap,
+        )
+
     # -- applications (paper §5) --------------------------------------------
 
     def _amsf_program(self, *, compress: str, skip: bool):
@@ -774,6 +1012,12 @@ class ReplicatedBackend(_MeshBackend):
                                     compress=compress, skip=skip,
                                     kernels=self.kernels)
 
+    def _build_dynamic(self, n, *, compress: str, search_rounds: int):
+        return make_replicated_dynamic(self.mesh, self.spec.axes, n,
+                                       compress=compress,
+                                       search_rounds=search_rounds,
+                                       kernels=self.kernels)
+
     def _place_labels(self, P0):
         return jax.device_put(P0, NamedSharding(self.mesh, P()))
 
@@ -805,6 +1049,12 @@ class ShardedBackend(_MeshBackend):
         return make_sharded_amsf(
             self.mesh, self.spec.axes, self.spec.label_axis,
             compress=compress, skip=skip, kernels=self.kernels)
+
+    def _build_dynamic(self, n, *, compress: str, search_rounds: int):
+        return make_sharded_dynamic(
+            self.mesh, self.spec.axes, self.spec.label_axis, n,
+            compress=compress, search_rounds=search_rounds,
+            kernels=self.kernels)
 
     def _place_labels(self, P0):
         # pad (n + 1,) to divide the label axis; extra slots are self-rooted

@@ -1,0 +1,21 @@
+"""repro.dynamic — batch-dynamic connectivity (inserts, deletes, queries).
+
+The fifth layer of the spec stack: ``ConnectIt(spec, exec=...).stream(n,
+dynamic=True, log=...)`` returns a ``repro.api.DynamicStream`` whose device
+state (``DynamicState``: compressed labels + spanning forest + tombstoned
+edge log) accepts mixed insert/delete/query batches under every placement.
+See docs/API.md §"Batch-dynamic".
+"""
+
+from .engine import (
+    DEFAULT_SEARCH_ROUNDS,
+    DynamicState,
+    default_log_cap,
+    init_dynamic,
+    make_update,
+)
+
+__all__ = [
+    "DynamicState", "init_dynamic", "default_log_cap", "make_update",
+    "DEFAULT_SEARCH_ROUNDS",
+]

@@ -1,0 +1,285 @@
+"""Batch-dynamic connectivity engine (single-device bodies + shared helpers).
+
+The dynamic state extends the streaming labeling with the two structures
+deletions need (PAPERS.md: Simsiri et al. incremental connectivity, De Man
+et al. batch-dynamic connectivity):
+
+  * a **spanning forest** recorded during inserts (``hook_and_record``,
+    paper §3.4 / Theorem 6): one edge per hooked root, endpoints stored as
+    the *original* vertex ids so a deletion can be matched against them;
+  * a fixed-capacity **edge log** with tombstones: every surviving inserted
+    edge, so a forest-hitting deletion can search for replacement paths.
+
+Delete semantics per batch (all device-side, no host syncs):
+
+  1. tombstone every log entry matching a deleted pair (an undirected-pair
+     membership test against the sorted delete batch — repeated inserts of
+     the same pair are all removed);
+  2. deletions that miss the forest are **free**: the tombstone is the whole
+     cost;
+  3. forest hits mark the affected components (scatter over the component
+     labels of the hit forest edges), reset their vertices to singleton
+     labels and clear their forest slots, then run a **bounded replacement
+     search**: ``search_rounds`` rounds of the masked hook+compress forest
+     round over the surviving affected log edges. If the bound is exhausted
+     the engine falls back to a component-local rebuild through the existing
+     finish program (``uf_sync_forest``) — correct for any churn, and a
+     ``lax.cond`` so the fallback costs nothing when the search converges.
+
+Correctness notes. Labels between updates are fully compressed and every
+log/forest edge has both endpoints inside one component, so the affected
+mask (computed from pre-reset labels) is endpoint-consistent: no surviving
+edge crosses the affected/unaffected boundary, and rebuilding the affected
+subgraph from singletons over its surviving edges recomputes exactly the
+post-deletion components. Unaffected components are untouched (their edges
+are masked out; they could not hook anyway — same label both sides).
+
+Batch linearization: deletes apply first, then inserts, then queries — a
+pair deleted and re-inserted in one batch survives.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.finish import _compress, uf_sync_forest
+from ..core.primitives import (
+    DEFAULT_MAX_ROUNDS,
+    INT_MAX,
+    full_compress,
+    hook_and_record,
+    iterate_to_fixpoint,
+    num_components,
+    parents_of,
+)
+
+__all__ = [
+    "DynamicState", "init_dynamic", "default_log_cap", "make_update",
+    "sanitize_pairs", "sorted_pairs", "pairs_member", "append_log",
+    "affected_mask", "masked_log_edges", "forest_round",
+]
+
+DEFAULT_SEARCH_ROUNDS = 4
+
+
+class DynamicState(NamedTuple):
+    """Device state of a batch-dynamic stream.
+
+    ``P`` is the compressed ``(n + 1,)`` labeling (dump row ``n``, see
+    primitives.py); ``fu``/``fv`` the ``(n + 1,)`` forest slots (original
+    endpoints, ``-1`` = empty); ``log_u``/``log_v`` the fixed-capacity edge
+    log (free/tombstoned slots hold the dump id ``n``)."""
+
+    P: jax.Array
+    fu: jax.Array
+    fv: jax.Array
+    log_u: jax.Array
+    log_v: jax.Array
+
+
+def default_log_cap(n: int) -> int:
+    """Default edge-log capacity: the next power of two >= 4n (>= 1024)."""
+    return 1 << max(max(4 * n - 1, 1023).bit_length(), 10)
+
+
+def init_dynamic(n: int, cap: int, dtype=jnp.int32) -> DynamicState:
+    return DynamicState(
+        P=jnp.arange(n + 1, dtype=dtype),
+        fu=jnp.full((n + 1,), -1, dtype),
+        fv=jnp.full((n + 1,), -1, dtype),
+        log_u=jnp.full((cap,), n, dtype),
+        log_v=jnp.full((cap,), n, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pair matching: undirected (lo, hi) pairs, sorted batch + binary search.
+# Two int32 keys (no int64 dependency); invalid/pad entries can never match
+# a real pair (real pairs have lo < hi < n; pads normalize to INT_MAX).
+# ---------------------------------------------------------------------------
+
+def sanitize_pairs(u, v, n: int):
+    """Map out-of-range endpoints and self-loops to the dump pair (n, n)."""
+    valid = (u >= 0) & (u < n) & (v >= 0) & (v < n) & (u != v)
+    dump = jnp.asarray(n, u.dtype)
+    return jnp.where(valid, u, dump), jnp.where(valid, v, dump)
+
+
+def sorted_pairs(u, v, n: int):
+    """Normalize a delete batch to lexicographically sorted (lo, hi) pairs;
+    invalid entries (pads, self-loops) become (INT_MAX, INT_MAX)."""
+    lo = jnp.minimum(u, v)
+    hi = jnp.maximum(u, v)
+    valid = (lo >= 0) & (hi < n) & (lo != hi)
+    lo = jnp.where(valid, lo, INT_MAX)
+    hi = jnp.where(valid, hi, INT_MAX)
+    order = jnp.lexsort((hi, lo))
+    return lo[order], hi[order]
+
+
+def pairs_member(slo, shi, qu, qv):
+    """Vectorized membership of undirected pairs (qu, qv) in the sorted pair
+    set (slo, shi) — a lower-bound binary search with a static step count.
+    Sentinel queries ((n, n) free log slots, (-1, -1) empty forest slots)
+    never match: real pairs satisfy 0 <= lo < hi < INT_MAX."""
+    qlo = jnp.minimum(qu, qv)
+    qhi = jnp.maximum(qu, qv)
+    d = slo.shape[0]
+    lo_i = jnp.zeros(qlo.shape, jnp.int32)
+    hi_i = jnp.full(qlo.shape, d, jnp.int32)
+    for _ in range(max(int(d).bit_length(), 1)):
+        cont = lo_i < hi_i
+        m = jnp.clip((lo_i + hi_i) // 2, 0, d - 1)
+        sl = slo[m]
+        sh = shi[m]
+        less = (sl < qlo) | ((sl == qlo) & (sh < qhi))
+        lo_i = jnp.where(cont & less, m + 1, lo_i)
+        hi_i = jnp.where(cont & ~less, m, hi_i)
+    j = jnp.clip(lo_i, 0, d - 1)
+    return (lo_i < d) & (slo[j] == qlo) & (shi[j] == qhi)
+
+
+# ---------------------------------------------------------------------------
+# Edge-log maintenance.
+# ---------------------------------------------------------------------------
+
+def append_log(log_u, log_v, bu, bv, n: int):
+    """Append a (sanitized) insert batch into free log slots.
+
+    Free slots are ranked in order; batch slot ``i`` lands in the i-th free
+    slot. Pad entries (n, n) write the free sentinel back — a no-op — so the
+    caller only has to guarantee capacity for the *real* prefix."""
+    free = log_u >= n
+    rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    b = bu.shape[0]
+    take = free & (rank < b)
+    src = jnp.clip(rank, 0, b - 1)
+    return (jnp.where(take, bu[src], log_u),
+            jnp.where(take, bv[src], log_v))
+
+
+def affected_mask(P, fu, hit):
+    """Per-vertex mask of the components owning hit forest edges.
+
+    ``P`` is compressed, and a forest slot's endpoints live in the slot's
+    component, so one scatter at the hit edges' labels + one gather through
+    ``P`` covers every member vertex. The dump row stays unaffected."""
+    n1 = P.shape[0]
+    lab = P[jnp.clip(fu, 0, n1 - 1)]
+    tgt = jnp.where(hit, lab, n1 - 1)
+    aff_lab = jnp.zeros((n1,), bool).at[tgt].set(True).at[n1 - 1].set(False)
+    return aff_lab[jnp.clip(P, 0, n1 - 1)]
+
+
+def masked_log_edges(log_u, log_v, aff, n: int):
+    """Symmetrized surviving log edges restricted to affected components
+    (everything else points at the dump slot — a masked dispatch, paper
+    §5.1's bucket idiom)."""
+    act = (log_u < n) & aff[jnp.clip(log_u, 0, n)]
+    dump = jnp.asarray(n, log_u.dtype)
+    mu = jnp.where(act, log_u, dump)
+    mv = jnp.where(act, log_v, dump)
+    return jnp.concatenate([mu, mv]), jnp.concatenate([mv, mu])
+
+
+# ---------------------------------------------------------------------------
+# Forest rounds (single-device; the mesh variant pmin-merges per round in
+# core/distributed.py).
+# ---------------------------------------------------------------------------
+
+def forest_round(st, s, r, *, compress: str = "full",
+                 kernels: Optional[str] = None):
+    """One uf_sync hook+compress round that records original endpoints."""
+    P, fu, fv = st
+    pu = P[s]
+    pv = P[r]
+    root_u = parents_of(P, pu) == pu
+    mask = root_u & (pv < pu)
+    P2, fu, fv = hook_and_record(P, pu, pv, mask, s, r, fu, fv,
+                                 kernels=kernels)
+    P2 = _compress(P2, compress, kernels=kernels)
+    return P2, fu, fv
+
+
+def _labels_changed(old, new):
+    return jnp.any(old[0] != new[0])
+
+
+def make_update(n: int, *, compress: str = "full",
+                search_rounds: int = DEFAULT_SEARCH_ROUNDS,
+                kernels: Optional[str] = None,
+                max_rounds: int = DEFAULT_MAX_ROUNDS):
+    """Build the single-device mixed-batch update:
+    ``(state, du, dv, bu, bv) -> (state, rounds)``."""
+    ids = jnp.arange(n + 1, dtype=jnp.int32)
+
+    def round_(st, s, r):
+        return forest_round(st, s, r, compress=compress, kernels=kernels)
+
+    def update(state, du, dv, bu, bv):
+        P, fu, fv, log_u, log_v = state
+
+        # -- delete phase: tombstone, then rebuild only on forest hits ------
+        slo, shi = sorted_pairs(du, dv, n)
+        dead = pairs_member(slo, shi, log_u, log_v)
+        log_u = jnp.where(dead, jnp.asarray(n, log_u.dtype), log_u)
+        log_v = jnp.where(dead, jnp.asarray(n, log_v.dtype), log_v)
+        hit = pairs_member(slo, shi, fu, fv)
+
+        def rebuild(st):
+            P, fu, fv = st
+            aff = affected_mask(P, fu, hit)
+            P1 = jnp.where(aff, ids, P)
+            fu1 = jnp.where(aff, jnp.asarray(-1, fu.dtype), fu)
+            fv1 = jnp.where(aff, jnp.asarray(-1, fv.dtype), fv)
+            s, r = masked_log_edges(log_u, log_v, aff, n)
+            st2, k1 = iterate_to_fixpoint(
+                lambda t: round_(t, s, r), (P1, fu1, fv1), search_rounds,
+                changed_fn=_labels_changed)
+
+            def fallback(t):
+                fs, k2 = uf_sync_forest(t[0], s, r, t[1], t[2],
+                                        compress=compress,
+                                        max_rounds=max_rounds,
+                                        kernels=kernels)
+                return tuple(fs), k2.astype(jnp.int32)
+
+            st2, k2 = jax.lax.cond(
+                k1 >= search_rounds, fallback,
+                lambda t: (t, jnp.int32(0)), st2)
+            return st2, k1.astype(jnp.int32) + k2
+
+        (P, fu, fv), drounds = jax.lax.cond(
+            jnp.any(hit), rebuild,
+            lambda st: (st, jnp.int32(0)), (P, fu, fv))
+
+        # -- insert phase: log append + forest hook rounds ------------------
+        bu2, bv2 = sanitize_pairs(bu, bv, n)
+        log_u, log_v = append_log(log_u, log_v, bu2, bv2, n)
+        s = jnp.concatenate([bu2, bv2])
+        r = jnp.concatenate([bv2, bu2])
+        (P, fu, fv), irounds = iterate_to_fixpoint(
+            lambda t: round_(t, s, r), (P, fu, fv), max_rounds,
+            changed_fn=_labels_changed)
+        P = full_compress(P, kernels=kernels)
+        state = DynamicState(P, fu, fv, log_u, log_v)
+        return state, drounds + irounds.astype(jnp.int32)
+
+    return update
+
+
+def query_state(state: DynamicState, qa, qb):
+    """Connectivity answers against a compressed dynamic state."""
+    return state.P[qa] == state.P[qb]
+
+
+def used_slots(state: DynamicState, n: int):
+    """Live (non-tombstoned) log entries, shape (1,) for shard symmetry."""
+    return jnp.sum(state.log_u < n, dtype=jnp.int32)[None]
+
+
+def ncomp_state(state: DynamicState):
+    return num_components(state.P)

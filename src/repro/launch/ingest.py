@@ -20,10 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import checkpoint as ckpt
+from ..legacy import checkpoint as ckpt
 from ..core import streaming
 from ..core.finish import resolve_finish
-from ..data import EdgeStream
+from ..legacy.data import EdgeStream
 from ..graphs import generators as gen
 
 

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ...configs import get_arch
-from ...models import transformer as tfm
+from ...legacy.models import transformer as tfm
 
 
 def serve(arch_name: str, *, batch: int = 4, prompt_len: int = 32,

@@ -17,15 +17,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .. import optim
+from ..legacy import optim
 from ..configs.base import Arch
 from ..core import execution as cexec
 from ..core.finish import make_finish
 from ..graphs.containers import round_up
-from ..models import dlrm as dlrm_mod
-from ..models import gnn as gnn_mod
-from ..models import nequip as nequip_mod
-from ..models import transformer as tfm
+from ..legacy.models import dlrm as dlrm_mod
+from ..legacy.models import gnn as gnn_mod
+from ..legacy.models import nequip as nequip_mod
+from ..legacy.models import transformer as tfm
 from ..graphs.sampler import sample_subgraph
 from .mesh import all_axes, data_axes
 from .shardings import batch_sharding, make_shard_fn, named, param_specs, replicated
@@ -289,7 +289,7 @@ def _gnn_cell(arch: Arch, shape_name: str, mesh) -> Cell:
                     donate=(0, 1), meta=meta)
 
     if spec.get("spmd"):
-        from ..models.gnn_spmd import make_spmd_gnn_loss
+        from ..legacy.models.gnn_spmd import make_spmd_gnn_loss
         loss_fn, _ = make_spmd_gnn_loss(mesh, mcfg, n1=n + 1, n_real=n_real,
                                         dax=dax, n_graphs=n_graphs)
         s_spec, r_spec = _gnn_edge_specs(m_pad)

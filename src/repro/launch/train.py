@@ -22,15 +22,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import checkpoint as ckpt
-from .. import optim
+from ..legacy import checkpoint as ckpt
+from ..legacy import optim
 from ..configs import get_arch
-from ..data import RecsysStream, TokenStream
+from ..legacy.data import RecsysStream, TokenStream
 from ..graphs import generators as gen
-from ..models import dlrm as dlrm_mod
-from ..models import gnn as gnn_mod
-from ..models import nequip as nequip_mod
-from ..models import transformer as tfm
+from ..legacy.models import dlrm as dlrm_mod
+from ..legacy.models import gnn as gnn_mod
+from ..legacy.models import nequip as nequip_mod
+from ..legacy.models import transformer as tfm
 
 
 def smoke_model(arch):

@@ -1,0 +1,5 @@
+"""Quarantined seed-era ML-training stack (models / optim / checkpoint /
+data pipelines) — unrelated to the connectivity system and kept only so the
+launch harness and arch-smoke tests keep importing. Nothing under
+``repro.legacy`` may be imported from the connectivity layers (core /
+dynamic / serve / graphs / api); new work goes elsewhere."""

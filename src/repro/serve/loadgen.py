@@ -16,6 +16,14 @@ Both mix insert traffic into the query stream (``insert_every`` /
 coalescing, snapshot epochs all engaged), and return a ``LoadResult`` with
 p50/p95/p99 latency, achieved throughput, and insert rates. ``run_sync``
 wraps one measurement in its own event loop for sync callers.
+
+``delete_frac`` mixes deletions into the churn against a *dynamic* server
+(``ConnectIt(...).serve(n, dynamic=True)``): each insert request is
+followed by a delete of ``delete_frac`` × ``insert_edges`` edges sampled
+from that worker's own insert history, so deletions always target edges
+that were really submitted (the adversarial-churn shape from the
+batch-dynamic literature). At ``0.0`` the code path is identical to the
+static generators.
 """
 
 from __future__ import annotations
@@ -42,6 +50,7 @@ class LoadResult:
     achieved_qps: float       # completed query requests / wall second
     queries: int              # query requests completed
     inserts: int              # insert submissions completed
+    deletes: int              # delete submissions completed (dynamic only)
     edges_per_s: float        # committed edge throughput
     duration_s: float
     p50_ms: float
@@ -74,23 +83,42 @@ def _traffic(rng: np.random.Generator, n: int, query_pairs: int,
     return q[0], q[1], e[0], e[1]
 
 
+def _sample_deletes(rng: np.random.Generator, history: list,
+                    count: int):
+    """Draw ``count`` previously inserted edges from a worker's history
+    (with replacement; duplicates just re-tombstone)."""
+    idx = rng.integers(0, len(history), size=(count,))
+    pairs = np.asarray([history[i] for i in idx], np.int32)
+    return pairs[:, 0], pairs[:, 1]
+
+
 async def closed_loop(server: Server, *, clients: int = 8,
                       requests_per_client: int = 32, query_pairs: int = 64,
                       insert_every: int = 4, insert_edges: int = 256,
+                      delete_frac: float = 0.0,
                       tenant: str = "default", seed: int = 0) -> LoadResult:
     """Back-to-back workers: the achieved QPS estimates saturation."""
     n = server.tenants.get(tenant).n
     lat: list[float] = []
     inserts = 0
+    deletes = 0
+    del_edges = int(insert_edges * delete_frac) if delete_frac else 0
 
     async def worker(wid: int):
-        nonlocal inserts
+        nonlocal inserts, deletes
         rng = np.random.default_rng(seed + 1000 * wid)
+        history: list = []
         for i in range(requests_per_client):
             qa, qb, eu, ev = _traffic(rng, n, query_pairs, insert_edges)
             if insert_every and i % insert_every == 0:
                 await server.submit_inserts(eu, ev, tenant)
                 inserts += 1
+                if del_edges:
+                    history.extend(zip(eu.tolist(), ev.tolist()))
+                    du, dv = _sample_deletes(rng, history,
+                                             max(1, del_edges))
+                    await server.submit_deletes(du, dv, tenant)
+                    deletes += 1
             t0 = time.perf_counter()
             await server.query(qa, qb, tenant)
             lat.append(time.perf_counter() - t0)
@@ -101,14 +129,15 @@ async def closed_loop(server: Server, *, clients: int = 8,
     dt = max(time.perf_counter() - t0, 1e-9)
     return LoadResult(
         mode="closed", offered_qps=None, achieved_qps=len(lat) / dt,
-        queries=len(lat), inserts=inserts,
+        queries=len(lat), inserts=inserts, deletes=deletes,
         edges_per_s=(server.epoch_edges[-1] - edges0) / dt,
         duration_s=dt, **percentiles(lat))
 
 
 async def open_loop(server: Server, *, qps: float, requests: int = 128,
                     query_pairs: int = 64, insert_every: int = 4,
-                    insert_edges: int = 256, tenant: str = "default",
+                    insert_edges: int = 256, delete_frac: float = 0.0,
+                    tenant: str = "default",
                     seed: int = 0) -> LoadResult:
     """Fixed-schedule arrivals at an offered QPS; latency includes any
     queueing delay the server accumulates at that load."""
@@ -118,6 +147,9 @@ async def open_loop(server: Server, *, qps: float, requests: int = 128,
     lat: list[float] = []
     tasks: list = []
     inserts = 0
+    deletes = 0
+    del_edges = int(insert_edges * delete_frac) if delete_frac else 0
+    history: list = []
 
     async def fire_query(qa, qb):
         t0 = time.perf_counter()
@@ -138,12 +170,18 @@ async def open_loop(server: Server, *, qps: float, requests: int = 128,
             tasks.append(asyncio.create_task(
                 server.submit_inserts(eu, ev, tenant)))
             inserts += 1
+            if del_edges:
+                history.extend(zip(eu.tolist(), ev.tolist()))
+                du, dv = _sample_deletes(rng, history, max(1, del_edges))
+                tasks.append(asyncio.create_task(
+                    server.submit_deletes(du, dv, tenant)))
+                deletes += 1
         tasks.append(asyncio.create_task(fire_query(qa, qb)))
     await asyncio.gather(*tasks)
     dt = max(loop.time() - t0, 1e-9)
     return LoadResult(
         mode="open", offered_qps=float(qps), achieved_qps=len(lat) / dt,
-        queries=len(lat), inserts=inserts,
+        queries=len(lat), inserts=inserts, deletes=deletes,
         edges_per_s=(server.epoch_edges[-1] - edges0) / dt,
         duration_s=dt, **percentiles(lat))
 

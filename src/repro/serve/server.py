@@ -49,6 +49,8 @@ class TenantStats:
 
     edges_submitted: int = 0
     edges_committed: int = 0
+    deletes_submitted: int = 0
+    deletes_committed: int = 0
     queries: int = 0
     positives: int = 0
 
@@ -62,6 +64,7 @@ class ServerStats:
     devices: int
     epoch: int
     edges_committed: int
+    edges_deleted: int
     commit_batches: int
     query_batches: int
     queries_answered: int
@@ -75,11 +78,12 @@ class ServerStats:
 class _Pending:
     """One admitted request waiting for its batch."""
 
-    __slots__ = ("u", "v", "k", "tenant", "future", "t")
+    __slots__ = ("u", "v", "k", "tenant", "future", "t", "kind")
 
-    def __init__(self, u, v, k, tenant, future, t):
+    def __init__(self, u, v, k, tenant, future, t, kind="ins"):
         self.u, self.v, self.k = u, v, k
         self.tenant, self.future, self.t = tenant, future, t
+        self.kind = kind  # "ins" | "del" — mixed in one commit queue
 
 
 class Server:
@@ -134,7 +138,9 @@ class Server:
             await asyncio.to_thread(
                 self.store.warm,
                 self._warm_sizes(self.config.max_batch_edges),
-                self._warm_sizes(self.config.max_batch_queries))
+                self._warm_sizes(self.config.max_batch_queries),
+                self._warm_sizes(self.config.max_batch_edges)
+                if self.store.dynamic else ())
         self._accepting = True
         self._tasks = [
             asyncio.create_task(self._insert_loop(), name="serve-inserts"),
@@ -223,6 +229,46 @@ class Server:
             self._insert_full.set()
         return await fut
 
+    async def submit_deletes(self, u, v,
+                             tenant: str = DEFAULT_TENANT) -> int:
+        """Delete a batch of tenant-local undirected edges (dynamic serving
+        only); resolves with the epoch whose snapshot excludes them.
+
+        Deletions coalesce into the same commit pipeline as inserts: a mixed
+        batch commits deletes before inserts within one epoch (the engine's
+        batch linearization), under the same backpressure and flush timer."""
+        if not self._accepting:
+            raise RuntimeError("server is not running (use 'async with')")
+        if not self.store.dynamic:
+            raise RuntimeError(
+                "this server has no deletion support — serve with "
+                "dynamic=True (or a ':dynamic' exec spec)")
+        t = self.tenants.get(tenant)
+        u, v = self._check_pair(u, v, "delete")
+        u, v = t.translate(u), t.translate(v)
+        k = int(u.shape[0])
+        self._tstats[tenant].deletes_submitted += k
+        if k == 0:
+            return self.store.epoch
+        async with self._space:
+            await self._space.wait_for(
+                lambda: self._pending_edges < self.config.max_pending_edges
+                or not self._accepting)
+        if not self._accepting:
+            raise RuntimeError("server closed while awaiting admission")
+        loop = asyncio.get_running_loop()
+        fut = loop.create_future()
+        self._open.add(fut)
+        fut.add_done_callback(self._open.discard)
+        self._inserts.append(_Pending(u, v, k, tenant, fut, loop.time(),
+                                      kind="del"))
+        self._pending_edges += k
+        self._peak_pending = max(self._peak_pending, self._pending_edges)
+        self._insert_arrival.set()
+        if self._pending_edges >= self.config.max_batch_edges:
+            self._insert_full.set()
+        return await fut
+
     async def query(self, qa, qb, tenant: str = DEFAULT_TENANT):
         """IsConnected for tenant-local pairs -> (bool ndarray, epoch).
 
@@ -294,10 +340,18 @@ class Server:
                 continue
             total = sum(p.k for p in batch)
             self._pending_edges -= total
-            u = np.concatenate([p.u for p in batch])
-            v = np.concatenate([p.v for p in batch])
+            ins = [p for p in batch if p.kind == "ins"]
+            dels = [p for p in batch if p.kind == "del"]
+            empty = np.empty((0,), np.int32)
+            u = np.concatenate([p.u for p in ins]) if ins else empty
+            v = np.concatenate([p.v for p in ins]) if ins else empty
             try:
-                pending = self.store.begin_commit(u, v)
+                if dels:
+                    du = np.concatenate([p.u for p in dels])
+                    dv = np.concatenate([p.v for p in dels])
+                    pending = self.store.begin_commit(u, v, du, dv)
+                else:
+                    pending = self.store.begin_commit(u, v)
                 await asyncio.to_thread(jax.block_until_ready,
                                         pending.labels)
                 epoch = self.store.finish_commit(pending)
@@ -307,9 +361,13 @@ class Server:
                         p.future.set_exception(e)
                 continue
             self._commit_batches += 1
-            self._commit_shapes.add(int(self.store._ops.batch_size(total)))
+            self._commit_shapes.add(int(self.store._ops.batch_size(
+                sum(p.k for p in ins))))
             for p in batch:
-                self._tstats[p.tenant].edges_committed += p.k
+                if p.kind == "del":
+                    self._tstats[p.tenant].deletes_committed += p.k
+                else:
+                    self._tstats[p.tenant].edges_committed += p.k
                 if not p.future.done():
                     p.future.set_result(epoch)
             async with self._space:
@@ -360,6 +418,22 @@ class Server:
         self._commit_batches += 1
         return self.store.commit(u, v)
 
+    def delete_now(self, u, v, tenant: str = DEFAULT_TENANT) -> int:
+        """Synchronous delete commit, bypassing admission (dynamic serving
+        only; CLI/tests)."""
+        if not self.store.dynamic:
+            raise RuntimeError(
+                "this server has no deletion support — serve with "
+                "dynamic=True (or a ':dynamic' exec spec)")
+        t = self.tenants.get(tenant)
+        u, v = self._check_pair(u, v, "delete")
+        u, v = t.translate(u), t.translate(v)
+        self._tstats[tenant].deletes_submitted += int(u.shape[0])
+        self._tstats[tenant].deletes_committed += int(u.shape[0])
+        self._commit_batches += 1
+        empty = np.empty((0,), np.int32)
+        return self.store.commit(empty, empty, u, v)
+
     def query_now(self, qa, qb, tenant: str = DEFAULT_TENANT):
         """Synchronous query against the committed snapshot (CLI/tests)."""
         t = self.tenants.get(tenant)
@@ -383,6 +457,11 @@ class Server:
         """Cumulative committed real edges per epoch (linearization log)."""
         return self.store.epoch_edges
 
+    @property
+    def epoch_deletes(self) -> list:
+        """Cumulative committed real deletes per epoch (dynamic serving)."""
+        return self.store.epoch_deletes
+
     def num_components(self, tenant: Optional[str] = None) -> int:
         """Component count over the shared space, or within one tenant's
         block (each untouched vertex is its own component)."""
@@ -397,6 +476,7 @@ class Server:
             exec=self.exec_str, variant=self.variant, devices=self.devices,
             epoch=self.store.epoch,
             edges_committed=self.store.epoch_edges[-1],
+            edges_deleted=self.store.epoch_deletes[-1],
             commit_batches=self._commit_batches,
             query_batches=self._query_batches,
             queries_answered=self._queries_answered,

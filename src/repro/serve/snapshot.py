@@ -32,16 +32,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.execution import _per_chunk_counts
+
 __all__ = ["PendingCommit", "SnapshotStore"]
 
 
 class PendingCommit(NamedTuple):
     """An epoch-in-flight: dispatched but not yet visible to queries."""
 
-    labels: jax.Array   # the next epoch's labels (possibly still computing)
+    labels: jax.Array   # the next epoch's state (possibly still computing);
+                        # a bare label buffer, or a DynamicState pytree in
+                        # dynamic mode
     rounds: jax.Array   # finish rounds of the commit (device scalar)
     edges: int          # real (non-padding) edges in the batch
     epoch: int          # the epoch this commit will become
+    deletes: int = 0    # real delete entries in the batch (dynamic mode)
 
 
 class SnapshotStore:
@@ -51,6 +56,9 @@ class SnapshotStore:
         self._ops = ops
         self.n = n
         self.epoch = 0
+        # a DynamicSnapshotOps bundle (repro.dynamic serving: deletes in the
+        # commit pipeline) announces itself by carrying a log capacity
+        self.dynamic = hasattr(ops, "log_cap")
         self._committed = ops.init()
         # the shadow starts as a second, independent buffer so the first
         # donated commit has memory to rotate into
@@ -59,7 +67,13 @@ class SnapshotStore:
         # cumulative real edges committed as of each epoch (epoch 0 = empty
         # graph) — the linearization log the serve tests audit against
         self.epoch_edges: list[int] = [0]
+        self.epoch_deletes: list[int] = [0]
         self.rounds_total = 0
+        if self.dynamic:
+            # conservative per-shard log-occupancy bound; synced against the
+            # true live counts only when a batch would overflow it
+            self._cap_local = ops.log_cap // ops.edge_shards
+            self._bound = np.zeros((ops.edge_shards,), np.int64)
 
     # -- commit path ---------------------------------------------------------
 
@@ -74,20 +88,60 @@ class SnapshotStore:
             v = np.concatenate([v, pad])
         return jnp.asarray(u), jnp.asarray(v), size
 
-    def begin_commit(self, u, v) -> PendingCommit:
+    def _pad_deletes(self, du, dv):
+        du = np.asarray(du, np.int32) if du is not None else \
+            np.empty((0,), np.int32)
+        dv = np.asarray(dv, np.int32) if dv is not None else \
+            np.empty((0,), np.int32)
+        k = int(du.shape[0])
+        size = int(self._ops.delete_size(k))
+        if size != k:
+            pad = np.full((size - k,), self.n, np.int32)
+            du = np.concatenate([du, pad])
+            dv = np.concatenate([dv, pad])
+        return jnp.asarray(du), jnp.asarray(dv), k
+
+    def _ensure_capacity(self, k: int, size: int) -> None:
+        incoming = np.asarray(_per_chunk_counts(k, size,
+                                                self._ops.edge_shards))
+        if (self._bound + incoming <= self._cap_local).all():
+            self._bound += incoming
+            return
+        self._bound = np.asarray(self._ops.used(self._committed), np.int64)
+        if (self._bound + incoming > self._cap_local).any():
+            raise ValueError(
+                f"edge log full: shard occupancy {self._bound.tolist()} + "
+                f"batch {incoming.tolist()} exceeds {self._cap_local} "
+                f"slots/shard — serve with a larger log= (total capacity "
+                f"{self._ops.log_cap})")
+        self._bound += incoming
+
+    def begin_commit(self, u, v, du=None, dv=None) -> PendingCommit:
         """Dispatch the next epoch's labels. At most one commit may be in
-        flight (there are exactly two buffers)."""
+        flight (there are exactly two buffers). ``du``/``dv`` (dynamic mode
+        only) apply before the inserts within the same epoch."""
         if self._pending is not None:
             raise RuntimeError("a commit is already in flight; "
                                "finish_commit it first")
-        uj, vj, _ = self._pad_edges(u, v)
+        if (du is not None or dv is not None) and not self.dynamic:
+            raise RuntimeError(
+                "deletions need a dynamic snapshot store — serve with "
+                "dynamic=True (or a ':dynamic' exec spec)")
+        uj, vj, size = self._pad_edges(u, v)
         k = int(np.sum(np.asarray(u, np.int64) < self.n))
-        labels, rounds = self._ops.commit(self._committed, self._shadow,
-                                          uj, vj)
+        if self.dynamic:
+            duj, dvj, dk = self._pad_deletes(du, dv)
+            self._ensure_capacity(k, size)
+            labels, rounds = self._ops.commit(self._committed, self._shadow,
+                                              duj, dvj, uj, vj)
+        else:
+            dk = 0
+            labels, rounds = self._ops.commit(self._committed, self._shadow,
+                                              uj, vj)
         # the shadow buffer may have been donated into `labels`; drop our
         # reference either way (it is dead state until the rotation below)
         self._shadow = None
-        self._pending = PendingCommit(labels, rounds, k, self.epoch + 1)
+        self._pending = PendingCommit(labels, rounds, k, self.epoch + 1, dk)
         return self._pending
 
     def finish_commit(self, pending: PendingCommit) -> int:
@@ -99,14 +153,15 @@ class SnapshotStore:
         self._committed = pending.labels
         self.epoch = pending.epoch
         self.epoch_edges.append(self.epoch_edges[-1] + pending.edges)
+        self.epoch_deletes.append(self.epoch_deletes[-1] + pending.deletes)
         self.rounds_total += int(pending.rounds)
         self._pending = None
         return self.epoch
 
-    def commit(self, u, v) -> int:
+    def commit(self, u, v, du=None, dv=None) -> int:
         """begin + block-until-computed + finish, in one call (the sync
         convenience path; the async server overlaps the block)."""
-        pending = self.begin_commit(u, v)
+        pending = self.begin_commit(u, v, du, dv)
         jax.block_until_ready(pending.labels)
         return self.finish_commit(pending)
 
@@ -142,7 +197,7 @@ class SnapshotStore:
 
     # -- warmup --------------------------------------------------------------
 
-    def warm(self, edge_sizes=(), query_sizes=()) -> None:
+    def warm(self, edge_sizes=(), query_sizes=(), delete_sizes=()) -> None:
         """Compile dispatch shapes against scratch buffers.
 
         Runs the commit program on throwaway label buffers and the query
@@ -153,8 +208,24 @@ class SnapshotStore:
         for k in sorted(set(int(s) for s in edge_sizes)):
             scratch_a, scratch_b = self._ops.init(), self._ops.init()
             u = jnp.full((int(self._ops.batch_size(k)),), self.n, jnp.int32)
-            labels, _ = self._ops.commit(scratch_a, scratch_b, u, u)
+            if self.dynamic:
+                d = jnp.full((int(self._ops.delete_size(0)),), self.n,
+                             jnp.int32)
+                labels, _ = self._ops.commit(scratch_a, scratch_b, d, d,
+                                             u, u)
+            else:
+                labels, _ = self._ops.commit(scratch_a, scratch_b, u, u)
             jax.block_until_ready(labels)
         for k in sorted(set(int(s) for s in query_sizes)):
             q = jnp.zeros((int(self._ops.batch_size(k)),), jnp.int32)
             jax.block_until_ready(self._ops.query(self._committed, q, q))
+        if self.dynamic:
+            u0 = jnp.full((int(self._ops.batch_size(0)),), self.n,
+                          jnp.int32)
+            for k in sorted(set(int(s) for s in delete_sizes)):
+                scratch_a, scratch_b = self._ops.init(), self._ops.init()
+                d = jnp.full((int(self._ops.delete_size(k)),), self.n,
+                             jnp.int32)
+                labels, _ = self._ops.commit(scratch_a, scratch_b, d, d,
+                                             u0, u0)
+                jax.block_until_ready(labels)

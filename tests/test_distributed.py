@@ -154,7 +154,7 @@ def mesh3():
 
 
 def test_spmd_moe_matches_ref(mesh3):
-    from repro.models.moe import MoEConfig, moe_apply_spmd, moe_init, moe_ref
+    from repro.legacy.models.moe import MoEConfig, moe_apply_spmd, moe_init, moe_ref
     cfg = MoEConfig(d_model=32, d_expert=64, n_experts=16, top_k=2,
                     n_shared=1, capacity_factor=8.0)
     p = moe_init(jax.random.PRNGKey(1), cfg)
@@ -177,8 +177,8 @@ def test_spmd_moe_matches_ref(mesh3):
 
 @pytest.mark.parametrize("kind", ["gin", "pna", "egnn"])
 def test_spmd_gnn_loss_matches_dense(mesh3, kind):
-    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn
-    from repro.models.gnn_spmd import make_spmd_gnn_loss
+    from repro.legacy.models.gnn import GNNConfig, gnn_loss, init_gnn
+    from repro.legacy.models.gnn_spmd import make_spmd_gnn_loss
     g = gen.rmat(255, 1000, seed=1)
     n1 = g.n + 1
     mpad = g.m_pad - (g.m_pad % 8)
@@ -203,8 +203,8 @@ def test_spmd_gnn_loss_matches_dense(mesh3, kind):
 
 
 def test_spmd_nequip_loss_matches_dense(mesh3):
-    from repro.models.gnn_spmd import make_spmd_gnn_loss
-    from repro.models.nequip import NequIPConfig, init_nequip, nequip_loss
+    from repro.legacy.models.gnn_spmd import make_spmd_gnn_loss
+    from repro.legacy.models.nequip import NequIPConfig, init_nequip, nequip_loss
     g = gen.rmat(255, 1000, seed=1)
     n1 = g.n + 1
     mpad = g.m_pad - (g.m_pad % 8)

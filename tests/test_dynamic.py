@@ -1,0 +1,389 @@
+"""Batch-dynamic connectivity tests (repro.dynamic): spec grammar, engine
+semantics (tombstones, forest hits, replacement search), randomized mixed
+schedules vs a scipy oracle on every placement × kernel policy, churn
+generators, and dynamic serving (submit_deletes + the snapshot race)."""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.api import ConnectIt, DynamicStream, ExecutionSpec
+from repro.dynamic import engine
+
+EXECS = ["single", "replicated(x)", "sharded(x)"]
+
+
+def live_oracle(n, multiset, qa, qb):
+    """scipy IsConnected over the live edge multiset."""
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import connected_components as scipy_cc
+    if multiset:
+        s = np.asarray([e[0] for e in multiset])
+        r = np.asarray([e[1] for e in multiset])
+        mat = csr_matrix((np.ones(len(s)), (s, r)), shape=(n, n))
+    else:
+        mat = csr_matrix((n, n))
+    _, lab = scipy_cc(mat, directed=False)
+    return lab[np.asarray(qa)] == lab[np.asarray(qb)]
+
+
+def replay(multiset, ins, dels):
+    """Host-side live-multiset replay of one mixed batch (deletes first;
+    a delete removes every logged copy of the undirected pair)."""
+    for d in dels.tolist():
+        pair = tuple(sorted(d))
+        multiset[:] = [e for e in multiset
+                       if tuple(sorted(e)) != pair]
+    multiset.extend(e for e in ins.tolist() if e[0] != e[1])
+
+
+# ---------------------------------------------------------------------------
+# ExecutionSpec grammar: dynamic / log opts.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [
+    "single:dynamic",
+    "single:dynamic,log=1024",
+    "replicated(x):dynamic,log=64",
+    "sharded(x):fused,dynamic,log=4096,kernels=interpret",
+    "sharded(pod,data|model):pad=512,dynamic",
+])
+def test_spec_roundtrip(s):
+    spec = ExecutionSpec.parse(s)
+    assert spec.dynamic
+    assert str(spec) == s
+    assert ExecutionSpec.parse(str(spec)) == spec
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="log"):
+        ExecutionSpec.parse("single:log=64")           # log without dynamic
+    with pytest.raises(ValueError, match="power of two"):
+        ExecutionSpec.parse("single:dynamic,log=100")
+    with pytest.raises(ValueError, match="power of two"):
+        ExecutionSpec.parse("single:dynamic,log=-4")
+    assert not ExecutionSpec.parse("single").dynamic
+
+
+def test_stream_knob_validation():
+    ci = ConnectIt("none+uf_sync_full")
+    with pytest.raises(ValueError, match="dynamic"):
+        ci.stream(16, log=64)                          # log needs dynamic
+    with pytest.raises(ValueError, match="power of two"):
+        ci.stream(16, dynamic=True, log=100)
+    with pytest.raises(ValueError, match="root-based"):
+        ConnectIt("none+label_prop").stream(16, dynamic=True)
+    # exec-spec opt-in: plain stream(n) becomes dynamic
+    st = ConnectIt("none+uf_sync_full",
+                   exec="single:dynamic,log=256").stream(16)
+    assert isinstance(st, DynamicStream)
+    assert st._ops.log_cap == 256
+
+
+# ---------------------------------------------------------------------------
+# Engine semantics (single device).
+# ---------------------------------------------------------------------------
+
+
+def test_default_log_cap():
+    assert engine.default_log_cap(1) == 1024
+    assert engine.default_log_cap(256) == 1024
+    assert engine.default_log_cap(1000) == 4096
+    cap = engine.default_log_cap(1 << 16)
+    assert cap >= 4 * (1 << 16) and cap & (cap - 1) == 0
+
+
+def test_delete_miss_is_tombstone_only():
+    """A deletion outside the forest must not disturb the labeling."""
+    st = ConnectIt("none+uf_sync_full").stream(8, dynamic=True, log=64)
+    st.insert([0, 1, 2, 0], [1, 2, 3, 2])  # (0,2) is a non-forest extra
+    before = np.asarray(st.labels).copy()
+    st.delete([0], [2])
+    assert (np.asarray(st.labels) == before).all()
+    assert bool(st.query([0], [3])[0])
+    # the tombstone really landed: the slot count dropped
+    assert st.log_used() == 3
+
+
+def test_forest_hit_finds_replacement():
+    """Deleting a forest edge with a surviving alternative path keeps the
+    component connected (the replacement search must find the path)."""
+    st = ConnectIt("none+uf_sync_full").stream(8, dynamic=True, log=64)
+    st.insert([0, 1, 2, 3, 0], [1, 2, 3, 0, 2])  # a 4-cycle + chord
+    forest = {tuple(sorted(e)) for e in st.forest_edges().tolist()}
+    victim = next(iter(forest))
+    st.delete([victim[0]], [victim[1]])
+    assert bool(st.query([0], [3])[0])
+    assert st.num_components() == 4 + 1  # {0..3} + 4 singletons
+
+
+def test_forest_hit_splits_component():
+    st = ConnectIt("none+uf_sync_full").stream(6, dynamic=True, log=64)
+    st.insert([0, 1], [1, 2])
+    assert bool(st.query([0], [2])[0])
+    st.delete([1], [2])
+    assert not bool(st.query([0], [2])[0])
+    assert bool(st.query([0], [1])[0])
+    # forest invariant: no live forest edge references the deleted pair
+    assert (2 not in {x for e in st.forest_edges().tolist() for x in e})
+
+
+def test_self_loops_never_enter_forest_or_log():
+    st = ConnectIt("none+uf_sync_full").stream(8, dynamic=True, log=64)
+    st.insert([3, 3, 0], [3, 3, 1])
+    assert st.log_used() == 1            # only (0, 1)
+    assert st.forest_edges().shape[0] == 1
+    assert st.num_components() == 7
+
+
+def test_duplicate_inserts_all_removed_by_one_delete():
+    """The log is a multiset; a delete removes every copy of the pair."""
+    st = ConnectIt("none+uf_sync_full").stream(8, dynamic=True, log=64)
+    st.insert([0, 1, 0, 0], [1, 0, 1, 2])
+    assert st.log_used() == 4
+    st.delete([1], [0])                  # orientation-insensitive
+    assert st.log_used() == 1
+    assert not bool(st.query([0], [1])[0])
+    assert bool(st.query([0], [2])[0])
+
+
+def test_deleted_then_reinserted_in_one_batch_survives():
+    st = ConnectIt("none+uf_sync_full").stream(8, dynamic=True, log=64)
+    st.insert([0], [1])
+    empty = np.empty((0,), np.int32)
+    st.process([0], [1], [0], [1], empty, empty)   # delete + re-insert
+    assert bool(st.query([0], [1])[0])
+    assert st.log_used() == 1
+
+
+def test_log_capacity_guard():
+    st = ConnectIt("none+uf_sync_full").stream(64, dynamic=True, log=16)
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 32, 12).astype(np.int32)
+    v = rng.integers(32, 64, 12).astype(np.int32)
+    st.insert(u, v)
+    with pytest.raises(ValueError, match="edge log full"):
+        st.insert(u, v)
+    # deletions free capacity and the guard re-syncs the true occupancy
+    st.delete(u, v)
+    st.insert(u[:4], v[:4])
+
+
+def test_tombstoned_slots_are_reused():
+    st = ConnectIt("none+uf_sync_full").stream(64, dynamic=True, log=16)
+    for r in range(6):                   # 6 × 8 inserts through 16 slots
+        u = np.arange(8, dtype=np.int32)
+        v = u + 8 + 8 * (r % 2)
+        st.insert(u, v)
+        st.delete(u, v)
+    assert st.log_used() == 0
+
+
+# ---------------------------------------------------------------------------
+# Randomized mixed schedules vs scipy, every placement × kernel policy.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+@pytest.mark.parametrize("kernels", ["ref", "interpret"])
+def test_mixed_schedule_matches_oracle(exec_str, kernels):
+    n = 48
+    rng = np.random.default_rng(hash((exec_str, kernels)) % (1 << 31))
+    ci = ConnectIt("none+uf_sync_full",
+                   exec=f"{exec_str}:dynamic,log=512,kernels={kernels}")
+    st = ci.stream(n)
+    multiset: list = []
+    for step in range(10):
+        ins = rng.integers(0, n, size=(int(rng.integers(0, 8)), 2)
+                           ).astype(np.int32)
+        ndel = int(rng.integers(0, 4)) if multiset else 0
+        if ndel:
+            idx = rng.integers(0, len(multiset), size=(ndel,))
+            dels = np.asarray([multiset[i] for i in idx], np.int32)
+        else:
+            dels = np.zeros((0, 2), np.int32)
+        qa = rng.integers(0, n, size=(6,)).astype(np.int32)
+        qb = rng.integers(0, n, size=(6,)).astype(np.int32)
+        ans = np.asarray(st.process(dels[:, 0], dels[:, 1],
+                                    ins[:, 0], ins[:, 1], qa, qb))
+        replay(multiset, ins, dels)
+        want = live_oracle(n, multiset, qa, qb)
+        assert (ans == want).all(), (exec_str, kernels, step)
+    # final state: exact component structure + forest invariants
+    ids = np.arange(n, dtype=np.int32)
+    assert (np.asarray(st.query(ids, np.asarray(st.labels)[:n]))).all()
+    survivors = {tuple(sorted(e)) for e in multiset}
+    forest = [tuple(sorted(e)) for e in st.forest_edges().tolist()]
+    assert len(forest) == len(set(forest))
+    assert set(forest) <= survivors     # live forest ⊆ surviving edges
+    assert st.log_used() == len(multiset)
+
+
+def test_adversarial_bounded_search_fallback():
+    """A long path forces the bounded replacement search into its
+    component-local-rebuild fallback (search_rounds=1) — answers must
+    still be exact."""
+    n = 32
+    ci = ConnectIt("none+uf_sync_full")
+    st = ci.stream(n, dynamic=True, log=256, search_rounds=1)
+    u = np.arange(n - 1, dtype=np.int32)
+    st.insert(u, u + 1)                  # path 0-1-...-31
+    st.insert([0], [n - 1])              # close the cycle
+    st.delete([n // 2], [n // 2 + 1])    # forest hit, long detour survives
+    assert bool(st.query([0], [n - 1])[0])
+    assert st.num_components() == 1
+    st.delete([0], [n - 1])              # cut the detour too
+    assert not bool(st.query([n // 2], [n // 2 + 1])[0])
+    assert st.num_components() == 2
+
+
+# ---------------------------------------------------------------------------
+# Churn generators.
+# ---------------------------------------------------------------------------
+
+
+def test_sliding_window_schedule():
+    from repro.graphs.generators import sliding_window
+    steps = list(sliding_window(64, steps=8, batch=16, window=3,
+                                queries=4, seed=1))
+    assert len(steps) == 8
+    live = 0
+    for i, (ins, dels, q) in enumerate(steps):
+        assert ins.shape == (16, 2) and q.shape == (4, 2)
+        live += len(ins) - len(dels)
+        assert (len(dels) == 0) == (i < 3)
+    assert live == 3 * 16                # steady window after warmup
+
+
+def test_flash_crowd_hits_forest():
+    from repro.graphs.generators import flash_crowd
+    steps = list(flash_crowd(64, steps=8, batch=16, queries=4, seed=2))
+    hubs = {int(e[0]) for ins, _, _ in steps[:2] for e in ins}
+    assert len(hubs) == 1                # star phase: one hub endpoint
+    assert any(len(dels) for _, dels, _ in steps[2:])
+
+
+def test_partition_heal_matches_oracle():
+    from repro.graphs.generators import partition_heal
+    n = 48
+    ci = ConnectIt("none+uf_sync_full", exec="single:dynamic,log=8192")
+    st = ci.stream(n)
+    multiset: list = []
+    for ins, dels, q in partition_heal(n, steps=6, batch=32, queries=8,
+                                       seed=3):
+        ans = np.asarray(st.process(dels[:, 0], dels[:, 1],
+                                    ins[:, 0], ins[:, 1], q[:, 0], q[:, 1]))
+        replay(multiset, ins, dels)
+        assert (ans == live_oracle(n, multiset, q[:, 0], q[:, 1])).all()
+
+
+# ---------------------------------------------------------------------------
+# Dynamic serving: submit_deletes + snapshot isolation under deletions.
+# ---------------------------------------------------------------------------
+
+
+def serve_config(**kw):
+    from repro.serve import ServeConfig
+    base = dict(max_batch_edges=256, max_batch_queries=256, flush_ms=0.5,
+                warmup=False)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_serve_mixed_traffic_matches_oracle(exec_str):
+    n = 96
+    rng = np.random.default_rng(7)
+    server = ConnectIt("none+uf_sync_full", exec=exec_str).serve(
+        n, dynamic=True, log=1024, config=serve_config())
+    multiset: list = []
+
+    async def main():
+        async with server:
+            for _ in range(5):
+                ins = rng.integers(0, n, size=(20, 2)).astype(np.int32)
+                await server.submit_inserts(ins[:, 0], ins[:, 1])
+                replay(multiset, ins, np.zeros((0, 2), np.int32))
+                idx = rng.integers(0, len(multiset), size=(4,))
+                dels = np.asarray([multiset[i] for i in idx], np.int32)
+                await server.submit_deletes(dels[:, 0], dels[:, 1])
+                replay(multiset, np.zeros((0, 2), np.int32), dels)
+                qa = rng.integers(0, n, size=(16,)).astype(np.int32)
+                qb = rng.integers(0, n, size=(16,)).astype(np.int32)
+                ans, _ = await server.query(qa, qb)
+                assert (ans == live_oracle(n, multiset, qa, qb)).all()
+            st = server.stats()
+            assert st.edges_deleted == 20
+            assert st.tenants["default"].deletes_committed == 20
+
+    asyncio.run(main())
+
+
+@pytest.mark.parametrize("exec_str", EXECS)
+def test_snapshot_race_with_deletions(exec_str):
+    """A query admitted while a delete commit is in flight reads exactly
+    the prior epoch: the deleted edge still answers connected, and after
+    finish_commit the flip is visible — with an exact epoch tag."""
+    server = ConnectIt("none+uf_sync_full", exec=exec_str).serve(
+        32, dynamic=True, log=256, config=serve_config())
+    store = server.store
+    store.commit([0, 1], [1, 2])
+    assert store.epoch == 1
+    pending = store.begin_commit([], [], [1], [2])    # delete mid-flight
+    ans, epoch = store.query([0], [2])
+    assert epoch == 1 and bool(np.asarray(ans)[0])    # prior epoch
+    assert store.finish_commit(pending) == 2
+    ans, epoch = store.query([0], [2])
+    assert epoch == 2 and not bool(np.asarray(ans)[0])
+    assert store.epoch_deletes == [0, 0, 1]
+
+
+def test_serve_delete_requires_dynamic():
+    server = ConnectIt("none+uf_sync_full").serve(16)
+    with pytest.raises(RuntimeError, match="dynamic"):
+        server.delete_now([0], [1])
+
+    async def main():
+        async with server:
+            with pytest.raises(RuntimeError, match="dynamic"):
+                await server.submit_deletes([0], [1])
+
+    asyncio.run(main())
+    with pytest.raises(ValueError, match="root-based"):
+        ConnectIt("none+label_prop").serve(16, dynamic=True)
+
+
+def test_serve_dynamic_sync_path_and_warmup():
+    server = ConnectIt("none+uf_sync_full",
+                       exec="single:dynamic,log=512").serve(
+        48, config=serve_config(warmup=True))
+
+    async def main():
+        async with server:
+            pass
+
+    asyncio.run(main())                  # warmup compiles delete shapes
+    server.commit_now([0, 1], [1, 2])
+    server.delete_now([1], [2])
+    ans, _ = server.query_now([0, 0], [1, 2])
+    assert bool(ans[0]) and not bool(ans[1])
+
+
+def test_loadgen_delete_frac():
+    from repro.serve import closed_loop, run_sync
+    server = ConnectIt("none+uf_sync_full").serve(
+        64, dynamic=True, log=4096, config=serve_config())
+    res = run_sync(server, closed_loop, clients=2, requests_per_client=4,
+                   query_pairs=8, insert_every=2, insert_edges=16,
+                   delete_frac=0.5, seed=0)
+    assert res.deletes > 0
+    assert server.stats().edges_deleted > 0
+    # delete_frac=0.0 stays on the static path (works on a static server)
+    server2 = ConnectIt("none+uf_sync_full").serve(64,
+                                                   config=serve_config())
+    res2 = run_sync(server2, closed_loop, clients=2, requests_per_client=4,
+                    query_pairs=8, insert_every=2, insert_edges=16,
+                    delete_frac=0.0, seed=0)
+    assert res2.deletes == 0

@@ -8,9 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import checkpoint as ckpt
-from repro import optim
-from repro.data import RecsysStream, TokenStream
+from repro.legacy import checkpoint as ckpt
+from repro.legacy import optim
+from repro.legacy.data import RecsysStream, TokenStream
 
 
 def test_checkpoint_roundtrip(tmp_path):

@@ -8,13 +8,13 @@ import numpy as np
 import pytest
 
 from repro.graphs import generators as gen
-from repro.models.dlrm import (DLRMConfig, dlrm_forward, dlrm_loss, init_dlrm,
+from repro.legacy.models.dlrm import (DLRMConfig, dlrm_forward, dlrm_loss, init_dlrm,
                                retrieval_score)
-from repro.models.gnn import GNNConfig, gnn_forward, gnn_loss, init_gnn
-from repro.models.layers import chunked_attention, dot_attention_ref
-from repro.models.moe import MoEConfig, moe_apply, moe_init, moe_ref
-from repro.models.nequip import NequIPConfig, init_nequip, nequip_forward
-from repro.models.transformer import (TransformerConfig, decode_step, forward,
+from repro.legacy.models.gnn import GNNConfig, gnn_forward, gnn_loss, init_gnn
+from repro.legacy.models.layers import chunked_attention, dot_attention_ref
+from repro.legacy.models.moe import MoEConfig, moe_apply, moe_init, moe_ref
+from repro.legacy.models.nequip import NequIPConfig, init_nequip, nequip_forward
+from repro.legacy.models.transformer import (TransformerConfig, decode_step, forward,
                                       init_cache, init_params, lm_loss)
 
 KEY = jax.random.PRNGKey(0)

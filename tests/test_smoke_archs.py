@@ -13,7 +13,7 @@ import pytest
 from repro.configs import all_archs, get_arch
 from repro.graphs import generators as gen
 from repro.launch.train import build_trainable
-from repro.models import transformer as tfm
+from repro.legacy.models import transformer as tfm
 
 LM_ARCHS = [a for a in all_archs() if get_arch(a).family == "lm"]
 OTHER_ARCHS = [a for a in all_archs()

@@ -71,3 +71,44 @@ def test_monotone_component_count():
         ncomp = len(np.unique(np.asarray(state.P[: g.n])))
         assert ncomp <= prev
         prev = ncomp
+
+
+# ---------------------------------------------------------------------------
+# Insert hygiene on the api.Stream handle: duplicate edges and self-loops
+# (satellites of the batch-dynamic work — the same invariants the dynamic
+# log/forest rely on).
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_edge_inserts_are_idempotent():
+    from repro.api import ConnectIt
+    st = ConnectIt("none+uf_sync_full").stream(16)
+    st.insert([0, 1], [1, 2])
+    before = np.asarray(st.labels).copy()
+    for _ in range(3):
+        st.insert([0, 1, 1], [1, 2, 0])     # repeats, both orientations
+    assert (np.asarray(st.labels) == before).all()
+    assert int(st.num_components()) == 14
+
+
+def test_self_loop_inserts_are_inert():
+    from repro.api import ConnectIt
+    st = ConnectIt("none+uf_sync_full").stream(16)
+    ids = np.arange(8, dtype=np.int32)
+    st.insert(ids, ids)                      # all self-loops
+    assert int(st.num_components()) == 16
+    assert (np.asarray(st.labels) == np.arange(16)).all()
+
+
+def test_self_loops_never_recorded_by_forest_finish():
+    from repro.core.finish import uf_sync_forest
+    from repro.core.primitives import init_forest
+    n = 8
+    P = jnp.arange(n + 1, dtype=jnp.int32)
+    fu, fv = init_forest(n)
+    s = jnp.asarray([3, 3, 0, n, 3, 3, 1, n], jnp.int32)   # symmetrized
+    r = jnp.asarray([3, 3, 1, n, 3, 3, 0, n], jnp.int32)
+    (P, fu, fv), _ = uf_sync_forest(P, s, r, fu, fv)
+    rec = [tuple(sorted((int(a), int(b))))
+           for a, b in zip(np.asarray(fu), np.asarray(fv)) if int(a) >= 0]
+    assert rec == [(0, 1)]                   # the self-loops left no record
