@@ -1,12 +1,24 @@
 """Execution placements head-to-head: the same VariantSpec dispatched under
 every ExecutionSpec placement (single / replicated / sharded, compacted vs
-fused), static connectivity and streaming. On a 1-device host this measures
-the dispatch-layer overhead of each placement; under
-``XLA_FLAGS=--xla_force_host_platform_device_count=N`` it exercises the real
-collectives. ``python -m benchmarks.run --exec [SPEC]`` runs just this suite
-(optionally restricted to one spec)."""
+fused vs overlap). Two entry points:
+
+* :func:`run` — the legacy fixed-size head-to-head (static + streaming per
+  placement), kept for ``--only execution`` and ``--exec SPEC``.
+* :func:`sweep` — graph size × placement sweep behind
+  ``python -m benchmarks.run --exec [--smoke|--full]``. Writes the
+  machine-readable ``BENCH_exec.json`` artifact: per-(n, exec) wall time
+  plus the *crossover point* — the smallest n at which any sharded
+  placement beats ``single`` (``null`` when no size crosses, which is the
+  expected honest result on a single-physical-core host where forced
+  devices time-slice one core and sharding cannot reduce total work).
+
+On a 1-device host this measures the dispatch-layer overhead of each
+placement; under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` it
+exercises the real collectives."""
 
 from __future__ import annotations
+
+import json
 
 import jax
 import numpy as np
@@ -19,6 +31,13 @@ FULL_EXECS = QUICK_EXECS + ("replicated(pod,data)", "sharded(pod,data|model)",
                             "sharded(pod,data|model):fused")
 
 VARIANT = "kout_hybrid_k2+uf_sync_naive"
+
+# The sweep pits single against every sharded flavour the rework added:
+# frontier-compacted merge (default), fused reduce-scatter merge, the
+# overlapped double-buffer pipeline, and the 2-D edges×labels mesh.
+SWEEP_EXECS = ("single", "replicated(x)", "sharded(x)", "sharded(x):fused",
+               "sharded(x):overlap", "sharded(x,y)")
+SWEEP_VARIANT = "none+uf_sync_full"
 
 
 def run(quick: bool = True, execs=None):
@@ -62,5 +81,83 @@ def run(quick: bool = True, execs=None):
     return rows
 
 
+def _crossover(rows) -> tuple:
+    """Smallest n where the best sharded time beats single at the same n.
+
+    Returns ``(n | None, note)``; the note records the honest reason when
+    no crossover exists (wall time on time-sliced host devices reflects
+    total work, and sharding adds merge work on top of single's)."""
+    by_n: dict = {}
+    for r in rows:
+        by_n.setdefault(r["n"], {})[r["exec"]] = float(r["time_s"])
+    for n in sorted(by_n):
+        t = by_n[n]
+        single = t.get("single")
+        sharded = {e: v for e, v in t.items() if e.startswith("sharded")}
+        if single is None or not sharded:
+            continue
+        best = min(sharded, key=sharded.get)
+        if sharded[best] < single:
+            return n, (f"sharded first beats single at n={n} "
+                       f"({best}: {sharded[best]:.4f}s vs {single:.4f}s)")
+    return None, ("no crossover at the swept sizes: every placement "
+                  "time-slices the same physical cores, so wall time "
+                  "tracks total work and the sharded merge adds "
+                  "collective work on top of single's finish; expect a "
+                  "crossover only when devices map to distinct "
+                  "cores/chips (real multi-core or TPU hosts)")
+
+
+def sweep(quick: bool = True, smoke: bool = False, execs=None,
+          out: str = "BENCH_exec.json") -> dict:
+    """Graph size × placement sweep → ``BENCH_exec.json``."""
+    from repro.api import ConnectIt, ExecutionSpec
+    from repro.graphs import generators as gen
+
+    if smoke:
+        logns = (8, 10)
+    elif quick:
+        logns = (10, 12, 14)
+    else:
+        logns = (10, 12, 14, 16, 18)
+    execs = [str(ExecutionSpec.parse(e))
+             for e in (execs or SWEEP_EXECS)]
+    iters = 2 if smoke else 3
+
+    rows = []
+    for logn in logns:
+        n = 1 << logn
+        g = gen.rmat(n, 8 * n, seed=7)
+        for exec_str in execs:
+            session = ConnectIt(SWEEP_VARIANT, exec=exec_str)
+            t = timeit(lambda: session.connectivity(g), warmup=1,
+                       iters=iters)
+            stats = session.stats
+            rows.append(dict(
+                n=n, m=g.m, exec=exec_str, devices=stats.devices,
+                time_s=round(t, 5), finish_rounds=stats.finish_rounds))
+            print(f"n=2^{logn:<3} {exec_str:24} {t * 1e3:10.1f}ms "
+                  f"rounds={stats.finish_rounds}", flush=True)
+
+    cross_n, note = _crossover(rows)
+    payload = {
+        "suite": "exec",
+        "scale": "smoke" if smoke else ("quick" if quick else "full"),
+        "variant": SWEEP_VARIANT,
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "crossover_n": cross_n,
+        "notes": note,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"crossover_n={cross_n} ({note})")
+    print(f"wrote {out} ({len(rows)} rows, "
+          f"{payload['device_count']} devices)")
+    return payload
+
+
 if __name__ == "__main__":
-    run(quick=False)
+    sweep(quick=False)

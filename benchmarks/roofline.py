@@ -11,6 +11,13 @@ connectivity hot-path op (scatter_min / pointer_jump / hook_compress /
 edge_relabel / edge_rewrite) timed under the ``ref`` policy vs the Pallas
 code path (``pallas`` on TPU, ``interpret`` elsewhere — the interpreted
 numbers gate *correct wiring*, not speed; compiled speedups need a TPU).
+
+``--collectives`` times the three label-merge exchange strategies the
+sharded backend chooses between — full-array ``pmin``, ``all_to_all``
+min-reduce-scatter (+ gather), and the frontier-compacted index/value
+exchange — per device count (submeshes of the forced host devices), at a
+fixed frontier density. Bytes-on-the-wire are modeled alongside wall time
+so the table stays meaningful on hosts where devices share cores.
 """
 
 from __future__ import annotations
@@ -132,10 +139,102 @@ def run_kernels(quick: bool = True):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Label-merge collective strategies vs device count (--collectives).
+# ---------------------------------------------------------------------------
+
+def run_collectives(quick: bool = True, density: float = 1 / 64):
+    """Time the sharded backend's three merge-exchange strategies per
+    device count.
+
+    Each submesh round merges per-device candidate label arrays that
+    differ from a shared base in ``density * n`` positions — the regime
+    frontier compaction targets. Strategies:
+
+    * ``pmin``: one full-array min all-reduce (the replicated merge).
+    * ``rs_gather``: all_to_all min-reduce-scatter of n/k chunks, then
+      all_gather (the ``fused`` sharded merge).
+    * ``compacted``: per-device ``compact_mask`` of changed slots, gather
+      of 2·k·F index/value words, local scatter_min (the frontier path).
+
+    ``wire_bytes`` is the modeled per-device traffic; on forced host
+    devices wall time also pays serialization of the compute, so the bytes
+    column is the architecture-portable signal.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from benchmarks.common import timeit
+    from repro.kernels import ops
+
+    n = 1 << 16 if quick else 1 << 20
+    F = max(1, int(n * density))
+    devs = jax.devices()
+    counts = [k for k in (1, 2, 4, 8, 16) if k <= len(devs)]
+    rng = np.random.default_rng(0)
+    base = jnp.arange(n, dtype=jnp.int32)
+
+    print(f"collective smoke: n={n} frontier={F} "
+          f"(density {density:.4f}) backend={jax.default_backend()} "
+          f"devices={len(devs)}")
+    hdr = f"{'devices':>8s} {'strategy':>12s} {'time_ms':>10s} " \
+          f"{'wire_bytes':>12s}"
+    print(hdr)
+    rows = []
+    for k in counts:
+        mesh = Mesh(np.asarray(devs[:k]), ("x",))
+        # per-device candidates: base lowered in F random slots
+        X = np.tile(np.arange(n, dtype=np.int32), (k, 1))
+        for d in range(k):
+            idx = rng.choice(n, F, replace=False)
+            X[d, idx] = rng.integers(0, n, F).astype(np.int32)
+            X[d] = np.minimum(X[d], np.arange(n, dtype=np.int32))
+        X = jnp.asarray(X)
+
+        def body_pmin(x):
+            return jax.lax.pmin(x, "x")
+
+        def body_rs(x):
+            chunk = x[0].reshape(k, n // k)
+            chunk = jax.lax.all_to_all(chunk, "x", 0, 0, tiled=False)
+            own = jnp.min(chunk, axis=0)
+            return jax.lax.all_gather(own, "x", tiled=True)[None, :]
+
+        def body_compact(x):
+            row = x[0]
+            diff = row < base
+            fi, fv = ops.compact_mask(diff, row, F)
+            gi = jax.lax.all_gather(fi, "x", tiled=True)
+            gv = jax.lax.all_gather(fv, "x", tiled=True)
+            pad = jnp.concatenate([base, base[-1:]])
+            out = ops.scatter_min(pad, gi, gv, gi >= 0)[:n]
+            return out[None, :]
+
+        progs = {
+            "pmin": (body_pmin, 2 * (k - 1) * (n // max(k, 1)) * 4 * 2),
+            "rs_gather": (body_rs,
+                          ((k - 1) * n // max(k, 1)) * 4 * 2),
+            "compacted": (body_compact, 2 * (k - 1) * F * 4),
+        }
+        for name, (body, wire) in progs.items():
+            fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x"),),
+                                   out_specs=P("x"), check_rep=False))
+            t = timeit(fn, X, warmup=1, iters=3 if quick else 5)
+            rows.append(dict(devices=k, strategy=name, time_s=t,
+                             wire_bytes=wire))
+            print(f"{k:8d} {name:>12s} {t * 1e3:10.3f} {wire:12d}")
+    return rows
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     if "--kernels" in argv:
         run_kernels(quick="--full" not in argv)
+    elif "--collectives" in argv:
+        run_collectives(quick="--full" not in argv)
     else:
         run(quick=False,
             path=argv[0] if argv and not argv[0].startswith("-")

@@ -3,8 +3,10 @@
 ``python -m benchmarks.run``           quick pass (CI-sized)
 ``python -m benchmarks.run --full``    paper-scale pass
 ``python -m benchmarks.run --only streaming_throughput``
-``python -m benchmarks.run --exec``    execution-placement sweep only
+``python -m benchmarks.run --exec``    graph-size × placement sweep →
+                                       BENCH_exec.json (crossover point)
 ``python -m benchmarks.run --exec "sharded(x)"``   one ExecutionSpec
+                                       (legacy fixed-size head-to-head)
 ``python -m benchmarks.run --apps``    applications sweep (AMSF + SCAN per
                                        placement) → BENCH_apps.json
 ``python -m benchmarks.run --serve``   serving latency/throughput sweep
@@ -74,14 +76,17 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized pass (the default; explicit flag for CI)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes (apps suite only)")
+                    help="tiny shapes (apps/serve/dynamic/exec suites)")
     ap.add_argument("--only", default=None, choices=sorted(SUITES),
                     metavar="SUITE")
     ap.add_argument("--exec", nargs="?", const="sweep", default=None,
                     metavar="SPEC", dest="exec_spec",
-                    help="run the execution-placement suite only; with an "
-                         "argument, restrict it to that ExecutionSpec "
-                         "string (e.g. 'sharded(x):fused')")
+                    help="run the graph-size × placement sweep only and "
+                         "write BENCH_exec.json (per-size wall time per "
+                         "placement + the single→sharded crossover "
+                         "point); with an argument, run the legacy "
+                         "fixed-size head-to-head restricted to that "
+                         "ExecutionSpec string (e.g. 'sharded(x):fused')")
     ap.add_argument("--apps", action="store_true",
                     help="run the applications sweep only and write "
                          "BENCH_apps.json (per-app, per-placement wall "
@@ -121,9 +126,13 @@ def main(argv=None) -> int:
     elif args.exec_spec is not None:
         if args.only:
             ap.error("--exec and --only are mutually exclusive")
-        execs = None if args.exec_spec == "sweep" else (args.exec_spec,)
         print("\n### execution " + "#" * 51)
-        execution_bench.run(quick=not args.full, execs=execs)
+        if args.exec_spec == "sweep":
+            execution_bench.sweep(quick=not args.full, smoke=args.smoke,
+                                  out=args.out or "BENCH_exec.json")
+        else:
+            execution_bench.run(quick=not args.full,
+                                execs=(args.exec_spec,))
     else:
         names = [args.only] if args.only else list(SUITES)
         for name in names:

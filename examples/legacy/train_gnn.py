@@ -1,13 +1,13 @@
 """Train a GNN end-to-end with the framework substrate — ConnectIt labels the
 components of the synthetic dataset and drives the batched-graph readout.
 
-    PYTHONPATH=src python examples/train_gnn.py
+    PYTHONPATH=src python examples/legacy/train_gnn.py
 """
 
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import jax
 import jax.numpy as jnp

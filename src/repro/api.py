@@ -36,8 +36,13 @@ Execution grammar (same round-trip discipline; see core/execution.py):
     exec      := placement [ "(" axes ")" ] [ ":" opt ("," opt)* ]
     placement := "single" | "replicated" | "sharded"
     axes      := axis ("," axis)* [ "|" label_axis ]     # sharded only
-    opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+    opt       := "fused" | "overlap" | "donate" | "frontier=" INT
+               | "pad=" ("pow2" | INT) | "rounds=" INT
                | "kernels=" ("auto" | "pallas" | "interpret" | "ref")
+
+``sharded(x,y)`` (no bar) shards edges over both axes and labels over the
+last; ``frontier``/``overlap`` tune the sharded min-merge (frontier-
+compacted exchange and collective/compute overlap — see docs/API.md).
 
 ``enumerate_variants()`` materializes the paper's sampling × finish ×
 compression cross-product with the paper's documented incompatibilities

@@ -12,11 +12,21 @@ paper's finish × compression methods) instead of hardwired pointer-jumping:
     labeling and the outer loop converges to the global fixpoint.
 
   * **sharded labels** (hyperlink-scale): labels sharded over one axis,
-    edges over the remaining axes (or the same axis on a 1-D mesh). Per
-    outer round: all-gather labels along the label axis → local finish →
-    min-merge back to shards. The baseline merge is a full ``pmin`` + slice;
-    the ``reduce_scatter`` variant is all_to_all + local min (a
-    min-reduce-scatter, ~1/|label axis| of the wire bytes).
+    edges over the remaining axes (or the same axis on a 1-D mesh; on the
+    2-D ``sharded(x,y)`` mesh edges shard over both axes and labels over
+    the last). Per outer round: all-gather labels along the label axis →
+    local finish → min-merge back to shards. The merge is *frontier
+    compacted* by default: each shard exchanges only the (index, value)
+    pairs its finish actually lowered this round (``ops.compact_mask``
+    into fixed-cap buffers, gated on a mesh-reduced frontier count), so
+    rounds get cheaper as components merge; rounds whose frontier exceeds
+    the cap fall back to the dense merge — a full ``pmin`` + slice, or
+    with ``reduce_scatter`` an all_to_all + local min (a
+    min-reduce-scatter, ~1/|label axis| of the wire bytes). With
+    ``overlap`` the edge shard splits into two blocks that alternate per
+    round and round r's frontier exchange is applied at the top of round
+    r+1, so the collective overlaps with the next block's local
+    hook+compress (double-buffered labels).
 
 The outer loop runs to a global fixpoint by default (``rounds=0``) or for a
 fixed number of rounds (dry-run / throughput programs). Correctness argument
@@ -44,6 +54,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..graphs.containers import round_up
 from ..kernels import ops
 from .apps.amsf import _skip_lmax_mask
 from .finish import _compress
@@ -90,6 +101,27 @@ def _outer_loop(body, labels, rounds: int, max_rounds: int,
         changed_fn=lambda old, new: changed_fn(jnp.any(new != old)))
 
 
+def _outer_loop_flagged(body, labels, rounds: int, cap: int):
+    """``_outer_loop`` for bodies that report their own (already
+    mesh-uniform) continue flag: ``body: labels -> (labels, go)``. Avoids
+    the old-vs-new array compare *and* its flag-reduction collective — the
+    flag comes free from the merge itself."""
+    if rounds > 0:
+        out = jax.lax.fori_loop(0, rounds, lambda i, L: body(L)[0], labels)
+        return out, jnp.int32(rounds)
+
+    def cond(st):
+        return st[1] & (st[2] < cap)
+
+    def step(st):
+        L2, go = body(st[0])
+        return L2, go, st[2] + 1
+
+    L, _, k = jax.lax.while_loop(
+        cond, step, (labels, jnp.bool_(True), jnp.int32(0)))
+    return L, k
+
+
 # ---------------------------------------------------------------------------
 # Replicated-label programs (spec-parameterized).
 # ---------------------------------------------------------------------------
@@ -131,32 +163,94 @@ def make_replicated_finish(mesh: Mesh, axes: Sequence[str],
 # Sharded-label programs (spec-parameterized).
 # ---------------------------------------------------------------------------
 
+def _auto_frontier(n1: int, ngather: int) -> int:
+    """Auto per-device frontier cap. The compacted exchange moves
+    ``2 * ngather * F`` int32s per round vs the dense merge's ``n1``-wide
+    reduce, so the cap sits near ``n1 / (4 * ngather)`` (lane-rounded up):
+    sparse rounds are cheaper than dense by construction, and rounds whose
+    frontier exceeds the cap fall back to dense."""
+    return min(n1, max(128, round_up(max(n1 // (4 * ngather), 1), 128)))
+
+
 def make_sharded_finish(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
                         finish_fn: Callable, *, reduce_scatter: bool = False,
                         rounds: int = 0,
                         max_rounds: Optional[int] = None,
-                        symmetrize: bool = False):
+                        symmetrize: bool = False,
+                        frontier: int = -1, overlap: bool = False,
+                        kernels: Optional[str] = None):
     """Distributed finish with labels sharded over ``label_axis``.
 
     The label array length must divide evenly by the label-axis size (pad
     with self-rooted slots above the dump row; see execution.py). On a 1-D
     mesh ``edge_axes`` may equal ``(label_axis,)``: edges and labels then
-    shard over the same axis and the merge reduces over it once.
-    ``symmetrize`` mirrors edge shards locally (see make_replicated_finish)."""
+    shard over the same axis and the merge reduces over it once; on a 2-D
+    mesh the label axis may be one of the edge axes (``sharded(x,y)``) and
+    labels replicate over the rest. ``symmetrize`` mirrors edge shards
+    locally (see make_replicated_finish).
+
+    ``frontier`` caps the compacted merge exchange per device (-1 auto from
+    n and the mesh, 0 dense-only, N explicit). ``overlap`` runs the
+    double-buffered two-block pipeline: round r's frontier exchange is
+    consumed *after* round r+1's local finish on the other edge block, so
+    the collective and the next block's compute can overlap. Correctness of
+    the deferred application rests on monotonicity: a finish on stale
+    labels only proposes valid (component-internal, possibly larger) label
+    values, and min-folding the late exchange can only lower them further.
+    Convergence requires two consecutive clean rounds (both blocks verified
+    on settled labels with no exchange in flight)."""
     edge_axes = tuple(edge_axes)
     extra_axes = tuple(a for a in edge_axes if a != label_axis)
     merge_axes = tuple(dict.fromkeys(edge_axes + (label_axis,)))
     nshards = mesh.shape[label_axis]
+    ngather = prod(mesh.shape[a] for a in merge_axes)
+    # the continue flag reduces over *every* mesh axis so the while cond is
+    # uniform even on user meshes with axes the spec does not use
+    flag_axes = tuple(mesh.axis_names)
     espec = P(edge_axes)
     lspec = P(label_axis)
     cap = _fixpoint_cap(mesh, edge_axes, max_rounds)
 
-    # fixpoint detection must be mesh-uniform: the labels carried are
-    # per-shard, so every device reduces its local changed flag over all
-    # mesh axes before the while cond
-    def all_devices_changed(ch):
-        ch = jax.lax.pmax(ch.astype(jnp.int32), tuple(mesh.axis_names))
-        return ch > 0
+    def dense_candidate(full2, shard_len):
+        """Dense merge: the candidate shard slice min-reduced over the mesh."""
+        if reduce_scatter:
+            # min-reduce-scatter: all_to_all over label chunks + local
+            # min moves 1/|label| of the bytes of a full all-reduce
+            chunks = full2.reshape(nshards, shard_len)
+            mine = jax.lax.all_to_all(chunks, label_axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            mine = jnp.min(mine, axis=0)
+            if extra_axes:
+                mine = jax.lax.pmin(mine, extra_axes)
+            return mine
+        merged = jax.lax.pmin(full2, merge_axes)
+        idx = jax.lax.axis_index(label_axis)
+        return jax.lax.dynamic_slice_in_dim(merged, idx * shard_len,
+                                            shard_len)
+
+    def gather_frontier(fi, fv):
+        """Exchange compacted (global index, value) frontier buffers."""
+        for a in merge_axes:
+            fi = jax.lax.all_gather(fi, a, tiled=True)
+            fv = jax.lax.all_gather(fv, a, tiled=True)
+        return fi, fv
+
+    def apply_frontier(shard, fi, fv, kernels=kernels):
+        """Scatter an exchanged frontier into the local shard window (out-
+        of-window and unused ``-1`` slots dump; see ops.scatter_min)."""
+        shard_len = shard.shape[0]
+        offset = jax.lax.axis_index(label_axis) * shard_len
+        pad = jnp.concatenate([shard, shard[-1:]])
+        out = ops.scatter_min(pad, fi - offset, fv, fi >= 0, policy=kernels)
+        return out[:shard_len]
+
+    def resolve_cap(shard_len: int) -> int:
+        n1 = shard_len * nshards
+        if frontier == 0:
+            return 0
+        if frontier > 0:
+            return min(frontier, n1)
+        return _auto_frontier(n1, ngather)
 
     @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
              out_specs=(lspec, P()), check_rep=False)
@@ -164,30 +258,112 @@ def make_sharded_finish(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
         if symmetrize:
             s, r = (jnp.concatenate([s, r]), jnp.concatenate([r, s]))
         shard_len = lab_shard.shape[0]
-        idx = jax.lax.axis_index(label_axis)
+        F = resolve_cap(shard_len)
 
         def body(shard):
             full = jax.lax.all_gather(shard, label_axis, tiled=True)
             full2, _ = finish_fn(full, s, r)
-            if reduce_scatter:
-                # min-reduce-scatter: all_to_all over label chunks + local
-                # min moves 1/|label| of the bytes of a full all-reduce
-                chunks = full2.reshape(nshards, shard_len)
-                mine = jax.lax.all_to_all(chunks, label_axis, split_axis=0,
-                                          concat_axis=0, tiled=False)
-                mine = jnp.min(mine, axis=0)
-                if extra_axes:
-                    mine = jax.lax.pmin(mine, extra_axes)
+            diff = full2 < full
+            cnt = jnp.sum(diff, dtype=jnp.int32)
+            gmax = jax.lax.pmax(cnt, flag_axes)
+            if F > 0:
+                def sparse(_):
+                    fi, fv = ops.compact_mask(diff, full2, F)
+                    return apply_frontier(shard, *gather_frontier(fi, fv))
+
+                def dense(_):
+                    return jnp.minimum(shard,
+                                       dense_candidate(full2, shard_len))
+
+                # gmax <= F guarantees no shard overflows its cap, and the
+                # pmax-reduced count makes the branch mesh-uniform
+                shard2 = jax.lax.cond(gmax <= F, sparse, dense, None)
             else:
-                merged = jax.lax.pmin(full2, merge_axes)
-                mine = jax.lax.dynamic_slice_in_dim(
-                    merged, idx * shard_len, shard_len)
-            return jnp.minimum(shard, mine)
+                shard2 = jnp.minimum(shard, dense_candidate(full2, shard_len))
+            # gmax == 0 ⟺ no shard's finish lowered any label ⟺ every
+            # edge satisfied: the fixpoint flag comes free from the merge
+            return shard2, gmax > 0
 
-        return _outer_loop(body, lab_shard, rounds, cap,
-                           changed_fn=all_devices_changed)
+        return _outer_loop_flagged(body, lab_shard, rounds, cap)
 
-    return program
+    @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
+             out_specs=(lspec, P()), check_rep=False)
+    def program_overlap(lab_shard, s, r):
+        shard_len = lab_shard.shape[0]
+        F = resolve_cap(shard_len)
+        m = s.shape[0]
+        if m >= 2:
+            blocks = ((s[: m // 2], r[: m // 2]), (s[m // 2:], r[m // 2:]))
+        else:
+            blocks = ((s, r), (s, r))
+        if symmetrize:
+            # mirror per block so each block sees both edge directions
+            blocks = tuple((jnp.concatenate([bs, br]),
+                            jnp.concatenate([br, bs])) for bs, br in blocks)
+        empty_i = jnp.full((ngather * F,), -1, jnp.int32)
+        empty_v = jnp.full((ngather * F,), INT_MAX, lab_shard.dtype)
+
+        def local_finish(full, k):
+            return jax.lax.cond(
+                k % 2 == 0,
+                lambda L: finish_fn(L, *blocks[0])[0],
+                lambda L: finish_fn(L, *blocks[1])[0], full)
+
+        def step(st):
+            shard, pi, pv, streak, k = st
+            full = jax.lax.all_gather(shard, label_axis, tiled=True)
+            # local finish on the round's block reads the *stale* labels —
+            # it does not depend on the in-flight exchange below, so the
+            # scheduler can overlap the two
+            full2 = local_finish(full, k)
+            diff = full2 < full
+            gmax = jax.lax.pmax(jnp.sum(diff, dtype=jnp.int32), flag_axes)
+            if F > 0:
+                # consume last round's exchange only now
+                mine = apply_frontier(shard, pi, pv)
+                pend = jnp.any(pi >= 0)
+            else:
+                mine, pend = shard, jnp.bool_(False)
+            offset = jax.lax.axis_index(label_axis) * shard_len
+            own = jnp.minimum(mine, jax.lax.dynamic_slice_in_dim(
+                full2, offset, shard_len))
+            if F > 0:
+                def sparse(_):
+                    fi, fv = ops.compact_mask(diff, full2, F)
+                    fi, fv = gather_frontier(fi, fv)
+                    return own, fi, fv
+
+                def dense(_):
+                    return (jnp.minimum(own,
+                                        dense_candidate(full2, shard_len)),
+                            empty_i, empty_v)
+
+                shard2, pi2, pv2 = jax.lax.cond(gmax <= F, sparse, dense,
+                                                None)
+            else:
+                shard2 = jnp.minimum(own, dense_candidate(full2, shard_len))
+                pi2, pv2 = empty_i, empty_v
+            # clean ⟺ this block found nothing on settled labels and no
+            # exchange was in flight; two consecutive clean rounds cover
+            # both blocks ⇒ global fixpoint (pend/gmax are device-identical)
+            clean = (gmax == 0) & ~pend
+            streak = jnp.where(clean, streak + 1, jnp.int32(0))
+            return shard2, pi2, pv2, streak, k + 1
+
+        init = (lab_shard, empty_i, empty_v, jnp.int32(0), jnp.int32(0))
+        if rounds > 0:
+            st = jax.lax.fori_loop(0, rounds, lambda i, t: step(t), init)
+            k = jnp.int32(rounds)
+        else:
+            st = jax.lax.while_loop(
+                lambda t: (t[3] < 2) & (t[4] < cap), step, init)
+            k = st[4]
+        shard = st[0]
+        if F > 0:  # drain the trailing in-flight exchange
+            shard = apply_frontier(shard, st[1], st[2])
+        return shard, k
+
+    return program_overlap if overlap else program
 
 
 def make_sharded_compress(mesh: Mesh, label_axis: str,
@@ -222,12 +398,22 @@ def make_sharded_compress(mesh: Mesh, label_axis: str,
 # ---------------------------------------------------------------------------
 
 def _global_forest_round(P, fu, fv, s, r, gid, active, axes, *,
+                         compress: str = "full",
                          kernels: Optional[str] = None):
-    """One globally-merged forest hook round on an edge shard.
+    """One globally-merged forest hook round (+ compression) on an edge
+    shard → ``(P, fu, fv, changed)``.
 
     ``gid`` is the globally-unique edge id of each local slot; ``axes`` are
     the mesh axes the proposal buffers merge over. Labels in/out are the
-    full replicated array; fu/fv are replicated forest buffers."""
+    full replicated array; fu/fv are replicated forest buffers.
+
+    Pass 1 alone decides whether any root hooks this round; the edge-id and
+    endpoint passes plus the compression run under a ``lax.cond`` on that
+    flag (mesh-uniform — the value buffer is pmin-merged before the test),
+    so the fixpoint-confirmation round every bucket pays costs one scatter
+    and one pmin instead of the full three-pass round. The ``changed`` flag
+    is local: all inputs are replicated-identical and all merged buffers
+    identical by construction, so no flag-reduction collective is needed."""
     n1 = P.shape[0]
     act = active & (P[s] != P[r])
     pu = P[s]
@@ -238,31 +424,52 @@ def _global_forest_round(P, fu, fv, s, r, gid, active, axes, *,
     # pass 1: winning hook value per root, merged across shards
     vbuf = ops.scatter_min(big, pu, pv, mask, policy=kernels)
     vbuf = jax.lax.pmin(vbuf, axes)
-    # pass 2: winning global edge id among achievers of the winning value
-    safe_pu = jnp.clip(pu, 0, n1 - 1)
-    achieve = mask & (pv == vbuf[safe_pu])
-    ebuf = ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, gid,
-                           achieve, policy=kernels)
-    ebuf = jax.lax.pmin(ebuf, axes)
-    # pass 3: the unique winning shard publishes the edge endpoints
-    mine = achieve & (gid == ebuf[safe_pu])
-    ubuf = jax.lax.pmin(
-        ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, s, mine,
-                        policy=kernels), axes)
-    wbuf = jax.lax.pmin(
-        ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, r, mine,
-                        policy=kernels), axes)
-    # apply: hook roots to the merged winning values, record first-time hooks
-    sel = (ebuf < INT_MAX) & (fu == -1)
-    fu2 = jnp.where(sel, ubuf, fu)
-    fv2 = jnp.where(sel, wbuf, fv)
-    P2 = jnp.minimum(P, vbuf)
-    return P2, fu2, fv2
+    hooked = jnp.any(vbuf < INT_MAX)
+
+    def rest(_):
+        # pass 2: winning global edge id among achievers of the value
+        safe_pu = jnp.clip(pu, 0, n1 - 1)
+        achieve = mask & (pv == vbuf[safe_pu])
+        ebuf = ops.scatter_min(jnp.full((n1,), INT_MAX, jnp.int32), pu, gid,
+                               achieve, policy=kernels)
+        ebuf = jax.lax.pmin(ebuf, axes)
+        # pass 3: the unique winning shard publishes *both* edge endpoints
+        # through one stacked (2·n1+1,) buffer — one scatter + one pmin
+        # where separate sender/receiver buffers would cost two of each
+        mine = achieve & (gid == ebuf[safe_pu])
+        uw = ops.scatter_min(
+            jnp.full((2 * n1 + 1,), INT_MAX, jnp.int32),
+            jnp.concatenate([pu, pu + n1]), jnp.concatenate([s, r]),
+            jnp.concatenate([mine, mine]), policy=kernels)
+        uw = jax.lax.pmin(uw[: 2 * n1], axes)
+        # apply: hook roots to the winning values, record first-time hooks
+        sel = (ebuf < INT_MAX) & (fu == -1)
+        fu2 = jnp.where(sel, uw[:n1], fu)
+        fv2 = jnp.where(sel, uw[n1:], fv)
+        P2 = _compress(jnp.minimum(P, vbuf), compress, kernels=kernels)
+        return P2, fu2, fv2
+
+    if compress == "full":
+        # P stays fully compressed between rounds, so "no root hooked" is
+        # exactly the bucket fixpoint — skip compression on the no-op round
+        P2, fu2, fv2 = jax.lax.cond(hooked, rest,
+                                    lambda _: (P, fu, fv), None)
+        return P2, fu2, fv2, hooked
+    # partial compression can unlock hooks later even on a hook-free round,
+    # so it must still run; the changed flag then tracks P itself
+    P2, fu2, fv2 = jax.lax.cond(
+        hooked, rest,
+        lambda _: (_compress(P, compress, kernels=kernels), fu, fv), None)
+    return P2, fu2, fv2, hooked | jnp.any(P2 != P)
 
 
 def _bucket_sweep(P, fu, fv, s, r, bids, gid, axes, *, compress: str,
                   skip: bool, kernels: Optional[str], cap: int):
-    """The shared device-side bucket sweep body (full replicated labels)."""
+    """The shared device-side bucket sweep body (full replicated labels).
+
+    The per-bucket fixpoint is flag-driven: the forest round reports its
+    own changed flag (device-identical by construction), so convergence
+    costs no old-vs-new array compare and no flag-reduction collective."""
     bmax_local = jnp.max(jnp.where(bids < INT_MAX, bids, -1))
     bmax = jax.lax.pmax(bmax_local, axes)
 
@@ -275,20 +482,20 @@ def _bucket_sweep(P, fu, fv, s, r, bids, gid, axes, *, compress: str,
         if skip:
             active &= _skip_lmax_mask(P, s, r, kernels)
 
-        def round_(st2):
-            P, fu, fv = st2
-            P2, fu2, fv2 = _global_forest_round(
-                P, fu, fv, s, r, gid, active, axes, kernels=kernels)
-            P2 = _compress(P2, compress, kernels=kernels)
-            return P2, fu2, fv2
+        def round_cond(st2):
+            return st2[3] & (st2[4] < cap)
 
-        # labels after every pmin merge are identical on all devices, but the
-        # while cond must still be mesh-uniform — reduce the flag to be safe
-        (P, fu, fv), rounds = iterate_to_fixpoint(
-            round_, (P, fu, fv), cap,
-            changed_fn=lambda old, new: jax.lax.pmax(
-                jnp.any(old[0] != new[0]).astype(jnp.int32), axes) > 0)
-        return P, fu, fv, b + 1, tot + rounds.astype(jnp.int32)
+        def round_body(st2):
+            P, fu, fv, _, k = st2
+            P, fu, fv, ch = _global_forest_round(
+                P, fu, fv, s, r, gid, active, axes, compress=compress,
+                kernels=kernels)
+            return P, fu, fv, ch, k + 1
+
+        P, fu, fv, _, rounds = jax.lax.while_loop(
+            round_cond, round_body,
+            (P, fu, fv, jnp.bool_(True), jnp.int32(0)))
+        return P, fu, fv, b + 1, tot + rounds
 
     P, fu, fv, b, tot = jax.lax.while_loop(
         bucket_cond, bucket_body,
@@ -403,6 +610,7 @@ def make_sharded_stream(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
                         finish_fn: Callable, *, reduce_scatter: bool = False,
                         rounds: int = 0,
                         max_rounds: Optional[int] = None,
+                        frontier: int = -1, overlap: bool = False,
                         kernels: Optional[str] = None
                         ) -> StreamPrograms:
     """Batch insert+query with labels sharded over ``label_axis``."""
@@ -411,7 +619,9 @@ def make_sharded_stream(mesh: Mesh, edge_axes: Sequence[str], label_axis: str,
     lspec = P(label_axis)
     run = make_sharded_finish(mesh, edge_axes, label_axis, finish_fn,
                               reduce_scatter=reduce_scatter, rounds=rounds,
-                              max_rounds=max_rounds, symmetrize=True)
+                              max_rounds=max_rounds, symmetrize=True,
+                              frontier=frontier, overlap=overlap,
+                              kernels=kernels)
     compress = make_sharded_compress(mesh, label_axis, kernels=kernels)
 
     @partial(shard_map, mesh=mesh, in_specs=(lspec, espec, espec),
@@ -460,20 +670,19 @@ def _dynamic_body(labels, fu, fv, log_u, log_v, du, dv, bu, bv, *, n: int,
     Mirrors ``engine.make_update`` with the hook round swapped for the
     globally-merged forest round; every label/forest/flag value is identical
     on all shards after each merge, so the ``lax.cond`` predicates and while
-    conditions stay mesh-uniform (flags are still pmax-reduced to be safe)."""
+    conditions are mesh-uniform with *local* flags — no reduction
+    collective in the convergence check."""
     from ..dynamic import engine
 
     ids = jnp.arange(n + 1, dtype=labels.dtype)
-    flag_axes = tuple(mesh.axis_names)
 
     def changed(old, new):
-        ch = jnp.any(old[0] != new[0]).astype(jnp.int32)
-        return jax.lax.pmax(ch, flag_axes) > 0
+        return jnp.any(old[0] != new[0])
 
     def round_(st, s, r, gid):
-        P2, fu2, fv2 = _global_forest_round(
-            st[0], st[1], st[2], s, r, gid, s < n, axes, kernels=kernels)
-        P2 = _compress(P2, compress, kernels=kernels)
+        P2, fu2, fv2, _ = _global_forest_round(
+            st[0], st[1], st[2], s, r, gid, s < n, axes, compress=compress,
+            kernels=kernels)
         return P2, fu2, fv2
 
     # -- delete phase -------------------------------------------------------

@@ -6,7 +6,8 @@ compression); ``ExecutionSpec`` says *where and how* to dispatch it:
     placement := single | replicated | sharded
     exec      := placement [ "(" axes ")" ] [ ":" opt ("," opt)* ]
     axes      := axis ("," axis)* [ "|" label_axis ]      # sharded only
-    opt       := "fused" | "donate" | "pad=" ("pow2" | INT) | "rounds=" INT
+    opt       := "fused" | "overlap" | "donate"
+               | "frontier=" INT | "pad=" ("pow2" | INT) | "rounds=" INT
                | "dynamic" | "log=" INT
                | "kernels=" ("auto" | "pallas" | "interpret" | "ref")
 
@@ -18,8 +19,11 @@ Examples (canonical strings round-trip, ``ExecutionSpec.parse(str(s)) == s``):
     single:kernels=interpret   Pallas kernels under interpret=True (CPU CI)
     replicated(pod,data)       edges sharded over pod×data, labels replicated
     sharded(x)                 1-D mesh: edges AND labels sharded over x
+    sharded(x,y)               2-D mesh: edges over x×y, labels over y
     sharded(pod,data|model)    edges over pod×data, labels over model
     sharded(x):fused,rounds=8  min-reduce-scatter merge, 8 fixed rounds
+    sharded(x):frontier=1024   compacted merge capped at 1024 ids per shard
+    sharded(x):overlap         double-buffered merge/compute overlap
 
 Knob semantics per placement (unused knobs are pinned to their defaults on
 construction, so equality and round-trips are canonical — same discipline as
@@ -29,6 +33,18 @@ construction, so equality and round-trips are canonical — same discipline as
     finish-phase edge list); sharded: merge labelings with an all_to_all
     min-reduce-scatter instead of a full pmin (≈1/|label| wire bytes).
     Pinned False for replicated (its merge is already a single pmin).
+  * ``frontier`` — sharded: the per-device cap of the *compacted* merge
+    exchange. Each round only the labels a shard actually lowered are
+    exchanged (index/value buffers, ``kernels.ops.compact_mask``), so
+    rounds get cheaper as components merge; rounds whose frontier exceeds
+    the cap fall back to the dense merge. ``-1`` (default) sizes the cap
+    automatically from n and the mesh, ``0`` disables compaction (always
+    dense), ``N`` pins the cap. Pinned -1 for single/replicated.
+  * ``overlap`` — sharded: double-buffered merge. Edge shards split into
+    two blocks that alternate per round and the frontier exchange of round
+    r is applied at the top of round r+1, so the collective overlaps with
+    the next block's local hook+compress. Pinned False for
+    single/replicated.
   * ``pad`` — dispatch-shape bucketing for the compacted finish edge list
     and stream batches: ``pow2`` (default) buckets to the next power of two,
     ``pad=N`` to multiples of N. Either way distributed dispatches are
@@ -109,8 +125,9 @@ _HEAD_RE = re.compile(r"([a-z_]+)(?:\((.*)\))?")
 # pinned defaults per placement (the rest of the fields stay meaningful);
 # single source of truth for canonicalization in __post_init__
 _PINNED = {
-    "single": ("axes", "label_axis", "donate", "rounds"),
-    "replicated": ("label_axis", "fused"),
+    "single": ("axes", "label_axis", "donate", "rounds", "frontier",
+               "overlap"),
+    "replicated": ("label_axis", "fused", "frontier", "overlap"),
     "sharded": (),
 }
 _EXEC_DEFAULTS: dict = {}
@@ -124,6 +141,8 @@ class ExecutionSpec:
     axes: tuple = ()            # mesh axes carrying edges
     label_axis: str = ""        # sharded: mesh axis carrying labels
     fused: bool = False
+    frontier: int = -1          # sharded merge: -1 auto | 0 dense | N cap
+    overlap: bool = False       # sharded: double-buffered merge/compute
     pad: str = "pow2"           # dispatch-shape bucketing policy
     pad_multiple: int = 8       # pad="multiple": granularity
     donate: bool = False
@@ -140,11 +159,15 @@ class ExecutionSpec:
             raise ValueError(f"unknown kernel policy {self.kernels!r}; "
                              f"have {KERNEL_POLICIES}")
         object.__setattr__(self, "axes", tuple(self.axes))
-        for name in ("pad_multiple", "rounds", "log"):
+        for name in ("pad_multiple", "rounds", "log", "frontier"):
             v = getattr(self, name)
             if int(v) != v:
                 raise ValueError(f"{name} must be an integer, got {v!r}")
             object.__setattr__(self, name, int(v))
+        if self.frontier < -1:
+            raise ValueError(
+                f"frontier must be -1 (auto), 0 (dense), or a positive "
+                f"per-device cap, got {self.frontier}")
         if self.pad not in PAD_POLICIES:
             raise ValueError(f"unknown pad policy {self.pad!r}; have "
                              f"{PAD_POLICIES} (or pad=<int> in spec strings)")
@@ -197,13 +220,19 @@ class ExecutionSpec:
             head = "single"
         elif self.placement == "replicated":
             head = f"replicated({','.join(self.axes)})"
-        elif self.axes == (self.label_axis,):
-            head = f"sharded({self.label_axis})"
+        elif self.axes and self.label_axis == self.axes[-1]:
+            # canonical no-bar form: the last edge axis carries the labels
+            # (1-D ``sharded(x)`` and the 2-D ``sharded(x,y)`` mesh)
+            head = f"sharded({','.join(self.axes)})"
         else:
             head = f"sharded({','.join(self.axes)}|{self.label_axis})"
         opts = []
         if self.fused:
             opts.append("fused")
+        if self.overlap:
+            opts.append("overlap")
+        if self.frontier != -1:
+            opts.append(f"frontier={self.frontier}")
         if self.pad == "multiple":
             opts.append(f"pad={self.pad_multiple}")
         if self.donate:
@@ -245,16 +274,22 @@ class ExecutionSpec:
                 kw["axes"] = names
                 kw["label_axis"] = lpart.strip()
             elif placement == "sharded":
-                # without '|': last axis carries labels; a 1-D mesh shards
-                # edges and labels over the same axis
+                # without '|': edge blocks shard over *every* listed axis
+                # and the last axis also carries the labels — ``sharded(x)``
+                # is the 1-D mesh, ``sharded(x,y)`` the 2-D multi-host mesh
+                # (labels over y, replicated over x; merges over both)
                 kw["label_axis"] = names[-1]
-                kw["axes"] = names if len(names) == 1 else names[:-1]
+                kw["axes"] = names
             else:
                 kw["axes"] = names
         for opt in filter(None, (o.strip() for o in optpart.split(","))):
             key, eq, val = opt.partition("=")
             if key == "fused" and not eq:
                 kw["fused"] = True
+            elif key == "overlap" and not eq:
+                kw["overlap"] = True
+            elif key == "frontier" and eq:
+                kw["frontier"] = int(val)
             elif key == "donate" and not eq:
                 kw["donate"] = True
             elif key == "rounds" and eq:
@@ -943,8 +978,12 @@ class _MeshBackend(_Backend):
     def _amsf_program(self, *, compress: str, skip: bool):
         key = ("amsf", compress, skip)
         if key not in self._programs:
+            # the label/forest buffers are built fresh per call, so donation
+            # is always safe — it keeps the round boundary copy-free
+            donate = (0, 1, 2) if self.spec.donate else ()
             self._programs[key] = jax.jit(
-                self._build_amsf(compress=compress, skip=skip))
+                self._build_amsf(compress=compress, skip=skip),
+                donate_argnums=donate)
         return self._programs[key]
 
     def amsf(self, g, weights, app, forest_fn, *, compress: str, stats):
@@ -1037,12 +1076,15 @@ class ShardedBackend(_MeshBackend):
     def _build_finish(self, finish_fn):
         return make_sharded_finish(
             self.mesh, self.spec.axes, self.spec.label_axis, finish_fn,
-            reduce_scatter=self.spec.fused, rounds=self.spec.rounds)
+            reduce_scatter=self.spec.fused, rounds=self.spec.rounds,
+            frontier=self.spec.frontier, overlap=self.spec.overlap,
+            kernels=self.kernels)
 
     def _build_stream(self, n, finish_fn):
         return make_sharded_stream(
             self.mesh, self.spec.axes, self.spec.label_axis, finish_fn,
             reduce_scatter=self.spec.fused, rounds=self.spec.rounds,
+            frontier=self.spec.frontier, overlap=self.spec.overlap,
             kernels=self.kernels)
 
     def _build_amsf(self, *, compress: str, skip: bool):

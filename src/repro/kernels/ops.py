@@ -61,7 +61,7 @@ from .scatter_min.ref import scatter_min_ref
 __all__ = [
     "KERNEL_POLICIES", "ENV_VAR", "default_policy", "resolve_policy",
     "scatter_min", "pointer_jump", "hook_compress", "edge_relabel",
-    "edge_rewrite", "embedding_bag",
+    "edge_rewrite", "embedding_bag", "compact_mask",
 ]
 
 KERNEL_POLICIES = ("auto", "pallas", "interpret", "ref")
@@ -181,12 +181,20 @@ def pointer_jump(labels: jax.Array, *, k: int = 1,
 
 
 def hook_compress(P: jax.Array, senders: jax.Array, receivers: jax.Array,
-                  *, k: int = 1, policy: Optional[str] = None,
+                  *, k: int = 1, mask: Optional[jax.Array] = None,
+                  policy: Optional[str] = None,
                   block_m: int = 8192) -> jax.Array:
     """One fused uf_sync round: root-masked min-hook + ``k`` shortcut hops.
 
     Equivalent to ``write_min(P, P[s], P[r], root-mask)`` followed by
-    ``pointer_jump(·, k)`` on the hooked array, in a single dispatch."""
+    ``pointer_jump(·, k)`` on the hooked array, in a single dispatch.
+    ``mask=False`` edges are rewritten onto the dump row before dispatch
+    (a no-op hook under the dump-slot contract), so frontier-compacted
+    callers can deactivate satisfied edges without recompacting the list."""
+    if mask is not None:
+        dump = jnp.asarray(P.shape[0] - 1, senders.dtype)
+        senders = jnp.where(mask, senders, dump)
+        receivers = jnp.where(mask, receivers, dump)
     p = resolve_policy(policy)
     if p == "ref":
         return hook_compress_ref(P, senders, receivers, k=k)
@@ -197,6 +205,31 @@ def hook_compress(P: jax.Array, senders: jax.Array, receivers: jax.Array,
     out = _hook_compress_pallas(Ppad, s, r, k=k, block_m=block_m,
                                 interpret=(p == "interpret"))
     return out[: n + 1]
+
+
+def compact_mask(mask: jax.Array, vals: jax.Array, cap: int, *,
+                 policy: Optional[str] = None) -> tuple:
+    """Stream-compact the ``True`` positions of ``mask`` (and their ``vals``)
+    into fixed-capacity ``(cap,)`` buffers — the frontier-exchange primitive
+    behind the sharded min-merge (core/distributed.py).
+
+    Returns ``(idx, out)``: ``idx[j]`` is the j-th set position (int32, in
+    mask order) and ``out[j]`` its value; unused slots carry ``idx = -1`` and
+    the value dtype's max sentinel, so the pair feeds ``scatter_min``
+    directly. Entries beyond ``cap`` are dropped — callers gate on the
+    mesh-reduced frontier count before taking the compacted path. Every
+    kernel policy shares the jnp path (a cumsum + two scatters; the op is
+    bandwidth-trivial next to the scatter_min it feeds)."""
+    del policy  # uniform signature with the other ops; no kernel pair yet
+    m = mask.shape[0]
+    big = jnp.iinfo(vals.dtype).max
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    tgt = jnp.where(mask & (pos < cap), pos, cap)  # overflow → dropped slot
+    src = jnp.arange(m, dtype=jnp.int32)
+    idx = jnp.full((cap + 1,), -1, jnp.int32).at[tgt].set(src)[:cap]
+    out = jnp.full((cap + 1,), big, vals.dtype).at[tgt].set(
+        jnp.where(mask, vals, big))[:cap]
+    return idx, out
 
 
 def edge_relabel(labels: jax.Array, senders: jax.Array, receivers: jax.Array,

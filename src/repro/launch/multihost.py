@@ -1,0 +1,162 @@
+"""Multi-host entry path for sharded connectivity runs.
+
+A sharded ExecutionSpec (``sharded(x,y)``) describes a *logical* mesh; this
+module maps it onto a multi-process jax runtime. Each host process calls
+:func:`initialize` (a thin, idempotent wrapper over
+``jax.distributed.initialize``) and then builds the global mesh with
+:func:`global_mesh` — the spec's axes are factored over **all** processes'
+devices, so the same ``ConnectIt(spec, exec=..., mesh=...)`` call works
+unchanged from one laptop process to an N-host cluster.
+
+Degradation is deliberate and silent where it should be: with no
+coordinator address (neither argument nor ``JAX_COORDINATOR_ADDRESS``) and
+no process count, :func:`initialize` is a no-op returning a single-process
+:class:`HostTopology`, so scripts using this module stay runnable on a bare
+CPU host — this is what the tests exercise. On a real cluster the
+coordinator address/process env (``JAX_COORDINATOR_ADDRESS``,
+``JAX_NUM_PROCESSES``, ``JAX_PROCESS_ID``) or explicit CLI flags select the
+distributed path.
+
+CLI (shares the ExecutionSpec grammar with every other entry point)::
+
+    python -m repro.launch.multihost --exec "sharded(x,y)" --n 4096 \
+        --coordinator host0:1234 --num-processes 4 --process-id $RANK
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+
+__all__ = [
+    "HostTopology",
+    "initialize",
+    "global_mesh",
+    "main",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTopology:
+    """What the process knows about the job after :func:`initialize`."""
+
+    num_processes: int
+    process_id: int
+    coordinator: Optional[str]
+    distributed: bool
+
+    @property
+    def is_leader(self) -> bool:
+        return self.process_id == 0
+
+
+_TOPOLOGY: Optional[HostTopology] = None
+
+
+def _env(name: str, default=None):
+    v = os.environ.get(name)
+    return v if v not in (None, "") else default
+
+
+def initialize(coordinator: Optional[str] = None,
+               num_processes: Optional[int] = None,
+               process_id: Optional[int] = None) -> HostTopology:
+    """Initialize the jax distributed runtime (idempotent).
+
+    Falls back to a single-process topology when no coordinator address is
+    configured, or when ``jax.distributed.initialize`` raises (e.g. the
+    coordinator is unreachable, or the runtime was already initialized by
+    the launcher) — multi-host is an opt-in fast path, never a hard
+    import-time dependency.
+    """
+    global _TOPOLOGY
+    if _TOPOLOGY is not None:
+        return _TOPOLOGY
+
+    coordinator = coordinator or _env("JAX_COORDINATOR_ADDRESS")
+    if num_processes is None:
+        num_processes = int(_env("JAX_NUM_PROCESSES", 1))
+    if process_id is None:
+        process_id = int(_env("JAX_PROCESS_ID", 0))
+
+    if coordinator is None or num_processes <= 1:
+        _TOPOLOGY = HostTopology(1, 0, None, distributed=False)
+        return _TOPOLOGY
+
+    try:
+        jax.distributed.initialize(
+            coordinator_address=coordinator,
+            num_processes=num_processes,
+            process_id=process_id)
+        _TOPOLOGY = HostTopology(
+            jax.process_count(), jax.process_index(), coordinator,
+            distributed=True)
+    except (RuntimeError, ValueError):
+        # Unreachable coordinator / already-initialized runtime: degrade to
+        # whatever jax reports rather than crashing the entry point.
+        _TOPOLOGY = HostTopology(
+            jax.process_count(), jax.process_index(), coordinator,
+            distributed=jax.process_count() > 1)
+    return _TOPOLOGY
+
+
+def global_mesh(exec="sharded(x)", topology: Optional[HostTopology] = None):
+    """Build the global mesh for a sharded spec over all processes' devices.
+
+    The spec's ``mesh_axes`` are factored over ``jax.devices()`` — which,
+    after :func:`initialize` on a multi-process job, enumerates every
+    process's devices — using the same balanced factorization as
+    single-process planning. Returns ``(spec, mesh)``; mesh is ``None`` for
+    ``single``.
+    """
+    from ..core.execution import as_execution_spec, plan_mesh
+
+    if topology is None:
+        topology = initialize()
+    spec = as_execution_spec(exec)
+    return spec, plan_mesh(spec)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="Multi-host sharded connectivity entry point")
+    parser.add_argument("--exec", default="sharded(x)",
+                        help="ExecutionSpec string (see docs/API.md)")
+    parser.add_argument("--variant", default="none+uf_sync_full")
+    parser.add_argument("--n", type=int, default=1 << 12)
+    parser.add_argument("--m", type=int, default=None,
+                        help="edge count (default 8*n)")
+    parser.add_argument("--coordinator", default=None,
+                        help="coordinator address host:port "
+                             "(default $JAX_COORDINATOR_ADDRESS)")
+    parser.add_argument("--num-processes", type=int, default=None)
+    parser.add_argument("--process-id", type=int, default=None)
+    args = parser.parse_args(argv)
+
+    topo = initialize(args.coordinator, args.num_processes, args.process_id)
+    spec, mesh = global_mesh(args.exec, topo)
+
+    from ..api import ConnectIt
+    from ..core.primitives import num_components
+    from ..graphs.generators import rmat
+
+    g = rmat(args.n, args.m or 8 * args.n, seed=7)
+    ci = ConnectIt(args.variant, exec=spec, mesh=mesh)
+    labels, stats = ci.connectivity(g, return_stats=True)
+    jax.block_until_ready(labels)
+
+    if topo.is_leader:
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+        print(f"processes={topo.num_processes} distributed={topo.distributed} "
+              f"mesh={shape} exec={spec} n={args.n} "
+              f"components={int(num_components(labels))} "
+              f"rounds={stats.finish_rounds}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

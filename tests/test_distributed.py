@@ -25,6 +25,10 @@ EXECS = [
     "sharded(x)",
     "sharded(pod,data|model)",
     "sharded(pod,data|model):fused",
+    "sharded(x):overlap",
+    "sharded(x):frontier=8",
+    "sharded(x,y)",
+    "sharded(x,y):fused,overlap",
 ]
 
 VARIANTS = [
@@ -106,6 +110,49 @@ def test_distributed_stream_mixed_batches(graph, oracle, exec_str):
     # pow2 bucketing: ragged batches share a handful of compiled shapes
     assert all(sz & (sz - 1) == 0 for sz in stats.batch_shapes)
     assert len(stats.batch_shapes) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Round-count convergence: the frontier-merge loop's free fixpoint flag
+# (gmax == 0) must agree with the compare-based single/replicated loops.
+# ---------------------------------------------------------------------------
+
+ROUND_FAMILIES = {
+    "path": lambda: gen.path(512),
+    "star": lambda: gen.star(512),
+    "rmat": lambda: gen.rmat(512, 2048, seed=6),
+    "planted": lambda: gen.planted_components(300, 5, 4.0, seed=3),
+}
+
+
+@pytest.mark.parametrize("family", sorted(ROUND_FAMILIES))
+@pytest.mark.parametrize("variant", ["none+uf_sync_full",
+                                     "none+shiloach_vishkin"])
+def test_finish_rounds_agree_across_placements(family, variant):
+    """Same graph + variant ⇒ identical outer ``finish_rounds`` under
+    replicated and every non-overlap sharded flavour: the frontier loop's
+    free flag must detect the fixpoint on exactly the round the
+    compare-based replicated loop does. (Overlap intentionally runs a
+    different round structure — half-edge blocks + a two-round convergence
+    streak — and ``single`` counts the variant's *inner* rounds, which can
+    undercut the outer count when cross-shard propagation needs an extra
+    merge.) The fixpoint loop must also exit early — far below the
+    outer-round cap."""
+    g = ROUND_FAMILIES[family]()
+    rounds, labels = {}, {}
+    for exec_str in ("single", "replicated(x)", "sharded(x)",
+                     "sharded(x):frontier=0", "sharded(x,y)"):
+        ci = ConnectIt(variant, exec=exec_str)
+        labels[exec_str] = np.asarray(ci.connectivity(g))
+        rounds[exec_str] = ci.stats.finish_rounds
+    distributed = {e: r for e, r in rounds.items() if e != "single"}
+    assert len(set(distributed.values())) == 1, rounds
+    # early exit: fixpoint detected well before the while-loop cap
+    cap = cdist._fixpoint_cap(None, (), None)
+    assert 1 <= rounds["sharded(x)"] < cap
+    for exec_str, lab in labels.items():
+        np.testing.assert_array_equal(lab, labels["single"],
+                                      err_msg=exec_str)
 
 
 def test_legacy_factories_warn_and_still_run(graph, oracle):
@@ -223,3 +270,43 @@ def test_spmd_nequip_loss_matches_dense(mesh3):
     with mesh3:
         spmd = jax.jit(loss_fn)(npar, species, coords, s, r, targets)
     assert np.isclose(float(dense), float(spmd), rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Multi-host entry path (repro.launch.multihost): single-process fallback.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def fresh_multihost(monkeypatch):
+    from repro.launch import multihost
+    monkeypatch.setattr(multihost, "_TOPOLOGY", None)
+    for var in ("JAX_COORDINATOR_ADDRESS", "JAX_NUM_PROCESSES",
+                "JAX_PROCESS_ID"):
+        monkeypatch.delenv(var, raising=False)
+    return multihost
+
+
+def test_multihost_initialize_falls_back_single_process(fresh_multihost):
+    topo = fresh_multihost.initialize()
+    assert topo == fresh_multihost.HostTopology(1, 0, None, False)
+    assert topo.is_leader
+    # idempotent: the second call returns the cached topology
+    assert fresh_multihost.initialize() is topo
+
+
+def test_multihost_global_mesh_factors_all_devices(fresh_multihost):
+    spec, mesh = fresh_multihost.global_mesh("sharded(x,y)")
+    assert str(spec) == "sharded(x,y)"
+    assert mesh.axis_names == ("x", "y")
+    assert mesh.devices.size == jax.device_count()
+    spec, mesh = fresh_multihost.global_mesh("single")
+    assert mesh is None
+
+
+def test_multihost_cli_single_process(fresh_multihost, capsys):
+    rc = fresh_multihost.main(["--exec", "sharded(x)", "--n", "64",
+                               "--m", "256"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "processes=1" in out and "distributed=False" in out
+    assert "exec=sharded(x)" in out

@@ -39,6 +39,15 @@ ROUNDTRIP = [
     "sharded(pod,data|model)",
     "sharded(pod,data|model):fused,pad=32,donate,rounds=4",
     "sharded(x,y|x)",
+    # 2-D no-bar form: edges over both axes, labels over the last
+    "sharded(x,y)",
+    "sharded(pod,data,model)",
+    # frontier / overlap knobs (sharded-only; -1 auto is the elided default)
+    "sharded(x):overlap",
+    "sharded(x):frontier=1024",
+    "sharded(x):frontier=0",
+    "sharded(x,y):fused,overlap,frontier=512,donate",
+    "sharded(x):overlap,rounds=6",
 ]
 
 
@@ -54,9 +63,17 @@ def test_parse_normalizes_aliases():
     # bare placements get the default 1-axis mesh
     assert str(ExecutionSpec.parse("replicated")) == "replicated(x)"
     assert str(ExecutionSpec.parse("sharded")) == "sharded(x)"
-    # sharded without '|': last axis carries labels
+    # sharded without '|': edges over every axis, labels over the last —
+    # the no-bar form is itself canonical (bar form prints only when the
+    # label axis is NOT the last edge axis)
+    assert ExecutionSpec.parse("sharded(pod,data,model)").axes == \
+        ("pod", "data", "model")
+    assert ExecutionSpec.parse("sharded(pod,data,model)").label_axis == \
+        "model"
     assert str(ExecutionSpec.parse("sharded(pod,data,model)")) == \
-        "sharded(pod,data|model)"
+        "sharded(pod,data,model)"
+    # frontier=-1 (auto) is the default and elides from the canonical form
+    assert str(ExecutionSpec.parse("sharded(x):frontier=-1")) == "sharded(x)"
     # pad=pow2 is the default (omitted from the canonical string)
     assert str(ExecutionSpec.parse("single:pad=pow2")) == "single"
     # constructor mirrors the grammar
@@ -71,6 +88,11 @@ def test_unused_knobs_are_pinned():
     # replicated pins fused and label_axis
     assert ExecutionSpec("replicated", fused=True) == \
         ExecutionSpec("replicated")
+    # frontier/overlap are sharded-only merge knobs
+    assert ExecutionSpec("single", overlap=True, frontier=64) == \
+        ExecutionSpec()
+    assert ExecutionSpec("replicated", overlap=True, frontier=64) == \
+        ExecutionSpec("replicated")
     # pow2 pins the multiple granularity
     assert ExecutionSpec(pad="pow2", pad_multiple=64) == ExecutionSpec()
 
@@ -78,7 +100,8 @@ def test_unused_knobs_are_pinned():
 @pytest.mark.parametrize("bad", [
     "quantum", "single(x)", "replicated()", "sharded(9bad)",
     "sharded(x|", "replicated(a|b)", "single:bogus", "single:rounds",
-    "sharded(x):pad=", "replicated(a,a)",
+    "sharded(x):pad=", "replicated(a,a)", "sharded(x):frontier=zz",
+    "sharded(x):frontier=-2", "sharded(x):overlap=1",
 ])
 def test_invalid_spec_strings_rejected(bad):
     with pytest.raises(ValueError):
@@ -94,6 +117,8 @@ def test_invalid_spec_fields_rejected():
         ExecutionSpec(pad_multiple=0)
     with pytest.raises(ValueError):
         ExecutionSpec("sharded", rounds=-1)
+    with pytest.raises(ValueError):
+        ExecutionSpec("sharded", frontier=-2)
 
 
 def test_plan_mesh_validates_axis_names():
@@ -136,7 +161,9 @@ def _family_graphs():
 
 
 PLACEMENT_SWEEP = ["single", "single:fused", "replicated(x)", "sharded(x)",
-                   "sharded(x):fused"]
+                   "sharded(x):fused", "sharded(x):overlap",
+                   "sharded(x):frontier=0", "sharded(x):frontier=16",
+                   "sharded(x,y)", "sharded(x,y):overlap"]
 
 EQUIV_VARIANTS = ["kout_hybrid_k2+uf_sync_full", "none+uf_sync_naive",
                   "bfs_c3+shiloach_vishkin", "none+liu_tarjan_CRFA"]
