@@ -13,6 +13,10 @@
                                        (repro.serve) → BENCH_serve.json
 ``python -m benchmarks.run --dynamic`` batch-dynamic churn sweep
                                        (repro.dynamic) → BENCH_dynamic.json
+``python -m benchmarks.run --scale``   out-of-core chunked-ingest sweep
+                                       (repro.graphs.ingest) →
+                                       BENCH_scale.json (max feasible n/m,
+                                       edges/sec, survivor ratio, peak RSS)
 
 Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
 from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
@@ -26,7 +30,7 @@ import sys
 import time
 
 from . import (amsf_bench, dynamic_bench, execution_bench, gather_edges,
-               sampling_quality, scan_bench, serve_bench,
+               sampling_quality, scale_bench, scan_bench, serve_bench,
                static_connectivity, streaming_batchsize,
                streaming_throughput, synthetic_families)
 
@@ -42,6 +46,7 @@ SUITES = {
     "execution": execution_bench.run,                   # placements sweep
     "serve": serve_bench.run,                           # serving layer
     "dynamic": dynamic_bench.run,                       # batch-dynamic churn
+    "scale": scale_bench.run,                           # out-of-core ingest
 }
 
 
@@ -99,6 +104,11 @@ def main(argv=None) -> int:
                     help="run the batch-dynamic churn sweep only and write "
                          "BENCH_dynamic.json (updates/sec + query p50/p95 "
                          "vs delete fraction per placement)")
+    ap.add_argument("--scale", action="store_true",
+                    help="run the out-of-core chunked-ingest sweep only and "
+                         "write BENCH_scale.json (max feasible n/m, "
+                         "edges/sec ingested, survivor ratio, peak "
+                         "resident bytes)")
     ap.add_argument("--out", default=None,
                     help="output path for the --apps/--serve JSON artifact")
     args = ap.parse_args(argv)
@@ -123,6 +133,12 @@ def main(argv=None) -> int:
         print("\n### dynamic " + "#" * 53)
         dynamic_bench.run(quick=not args.full, smoke=args.smoke,
                           out=args.out or "BENCH_dynamic.json")
+    elif args.scale:
+        if args.only or args.exec_spec:
+            ap.error("--scale is exclusive with --only/--exec")
+        print("\n### scale " + "#" * 55)
+        scale_bench.run(quick=not args.full, smoke=args.smoke,
+                        out=args.out or "BENCH_scale.json")
     elif args.exec_spec is not None:
         if args.only:
             ap.error("--exec and --only are mutually exclusive")

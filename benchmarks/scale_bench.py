@@ -1,0 +1,205 @@
+"""Out-of-core scale benchmark (repro.graphs.ingest) → BENCH_scale.json.
+
+The paper's flagship result is connectivity at 3.5B vertices / 128B edges;
+the dense ``build_graph`` path tops out orders of magnitude earlier because
+the whole padded COO+CSR graph must be resident before any work starts.
+This suite measures how far the chunked ingest path pushes feasible scale
+on one box: for each (family, n, m) it streams a generated edge stream
+through ``ConnectIt(...).from_chunks`` and reports
+
+  * ingest throughput (generated edges / wall second, generation included —
+    the stream is produced inline, exactly as a real out-of-core load would)
+  * survivor ratio and spill count (how much of the stream ever needed the
+    finish phase — the quantity that makes bounded memory possible)
+  * resident memory: the *stated analytic budget* (labels + one padded
+    chunk + survivor buffer + sampling head, in bytes — what the algorithm
+    is allowed to keep resident), the process RSS delta across the run, and
+    the process peak RSS (runtime + compile caches included)
+  * an exact-labels oracle check against the one-shot path at every size
+    small enough to materialize (mismatch raises — bit-identity is the
+    ingest contract, not a statistic)
+
+``python -m benchmarks.scale_bench --smoke``   CI-sized (interpret kernels)
+``python -m benchmarks.run --scale``           full sweep → BENCH_scale.json
+                                               (RMAT up to n=2^24, m=2^26)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (path bootstrap side effect)
+
+VARIANT = "kout_afforest_k2+uf_sync_full"
+# n at or below this gets the full one-shot / oracle equivalence check
+ORACLE_MAX_N = 1 << 16
+# runtime allowance on top of the analytic structures (interpreter, XLA
+# runtime, compile caches) when judging within_budget from process RSS
+RUNTIME_ALLOWANCE = 1 << 30
+
+
+def _vm_rss() -> int:
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return 0
+
+
+def _peak_rss() -> int:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def _sizes(quick: bool, smoke: bool):
+    """(family, n, m, chunk) sweep. Full ends at the acceptance point:
+    RMAT n=2^24 with 2^26 generated edges."""
+    if smoke:
+        return [("rmat", 1 << 10, 1 << 12, 1 << 9),
+                ("powerlaw", 1 << 10, 1 << 12, 1 << 9)]
+    if quick:
+        return [("rmat", 1 << 12, 1 << 14, 1 << 11),
+                ("powerlaw", 1 << 12, 1 << 14, 1 << 11),
+                ("rmat", 1 << 16, 1 << 18, 1 << 16),
+                ("rmat", 1 << 18, 1 << 20, 1 << 18)]
+    return [("rmat", 1 << 14, 1 << 16, 1 << 13),
+            ("powerlaw", 1 << 14, 1 << 16, 1 << 13),
+            ("rmat", 1 << 18, 1 << 20, 1 << 18),
+            ("rmat", 1 << 20, 1 << 22, 1 << 19),
+            ("powerlaw", 1 << 20, 1 << 22, 1 << 19),
+            ("rmat", 1 << 22, 1 << 24, 1 << 20),
+            ("rmat", 1 << 24, 1 << 26, 1 << 20)]
+
+
+def _source(family: str, n: int, m: int, chunk: int):
+    from repro.graphs import generators as gen
+    if family == "rmat":
+        return gen.rmat_chunks(n, m, chunk=chunk, seed=7)
+    if family == "powerlaw":
+        return gen.powerlaw_chunks(n, m, chunk=chunk, seed=7)
+    raise ValueError(family)
+
+
+def _analytic_bytes(n: int, chunk: int, cap: int) -> int:
+    """What the ingest algorithm keeps resident, in bytes: int32 labels over
+    n+1 rows, one dump-padded (u, v) chunk at its pow2 bucket, the survivor
+    buffer pair, and the sampling head's dense mini-graph (4 int32 arrays at
+    the head chunk's padded size, freed after sampling)."""
+    from repro.core.driver import bucket_size
+    b = bucket_size(chunk, pad="pow2")
+    labels = 4 * (n + 1)
+    chunk_pair = 2 * 4 * b
+    buffer_pair = 2 * 4 * (cap + 1)
+    head_graph = 4 * 4 * b + 4 * (n + 2)
+    return labels + chunk_pair + buffer_pair + head_graph
+
+
+def scale_rows(quick: bool = True, smoke: bool = False,
+               variant: str = VARIANT) -> list:
+    import jax
+    from repro.api import ConnectIt
+    from repro.graphs import build_graph, components_oracle
+
+    rows = []
+    ci = ConnectIt(variant)
+    for family, n, m, chunk in _sizes(quick, smoke):
+        src = _source(family, n, m, chunk)
+        rss0 = _vm_rss()
+        t0 = time.perf_counter()
+        labels, stats = ci.from_chunks(src, key=jax.random.PRNGKey(0),
+                                       return_stats=True)
+        np.asarray(labels)  # host-sync before stopping the clock
+        dt = time.perf_counter() - t0
+        rss1 = _vm_rss()
+
+        cap = 4 * max(chunk, 8)  # mirrors ingest's default survivor_cap
+        analytic = _analytic_bytes(n, chunk, cap)
+        budget = analytic + RUNTIME_ALLOWANCE
+        oracle_checked = n <= ORACLE_MAX_N
+        if oracle_checked:
+            edges = np.concatenate([np.asarray(c).reshape(-1, 2)
+                                    for c in src.chunks()])
+            g = build_graph(edges, n)
+            one = np.asarray(ci.connectivity(g, key=jax.random.PRNGKey(0)))
+            if not np.array_equal(np.asarray(labels), one):
+                raise RuntimeError(
+                    f"chunked labels != one-shot at {family} n={n}")
+            if not np.array_equal(one, components_oracle(g)):
+                raise RuntimeError(f"one-shot labels != oracle at n={n}")
+        rows.append({
+            "family": family,
+            "n": n,
+            "m_generated": m,
+            "m_streamed": stats.edges_total,
+            "chunk": chunk,
+            "chunks": stats.chunks,
+            "time_s": round(dt, 4),
+            "edges_per_sec": round(m / dt, 1),
+            "survivors": stats.edges_finish,
+            "spills": stats.spills,
+            "survivor_ratio": round(stats.survivor_ratio, 6),
+            "lmax_count": stats.lmax_count,
+            "finish_rounds": stats.finish_rounds,
+            "analytic_bytes": analytic,
+            "budget_bytes": budget,
+            "rss_delta_bytes": max(rss1 - rss0, 0),
+            "peak_rss_bytes": _peak_rss(),
+            "within_budget": bool(max(rss1 - rss0, 0) <= budget),
+            "oracle_checked": oracle_checked,
+            "match": True if oracle_checked else None,
+        })
+        print(f"  {family:9} n=2^{n.bit_length() - 1:<3} m={m:>10} "
+              f"{rows[-1]['edges_per_sec']:>12.0f} e/s "
+              f"ratio={rows[-1]['survivor_ratio']:.4f} "
+              f"spills={rows[-1]['spills']} "
+              f"rss+{rows[-1]['rss_delta_bytes'] >> 20}MB "
+              f"{'oracle-ok' if oracle_checked else ''}")
+    return rows
+
+
+def run(quick: bool = True, smoke: bool = False,
+        out: str = "BENCH_scale.json") -> dict:
+    import jax
+
+    rows = scale_rows(quick=quick, smoke=smoke)
+    best = max(rows, key=lambda r: (r["n"], r["m_generated"]))
+    payload = {
+        "suite": "scale",
+        "scale": "smoke" if smoke else ("quick" if quick else "full"),
+        "variant": VARIANT,
+        "backend": jax.default_backend(),
+        "kernels": __import__("os").environ.get("REPRO_KERNELS", "auto"),
+        "devices": jax.device_count(),
+        "max_feasible": {"n": best["n"], "m": best["m_generated"],
+                         "edges_per_sec": best["edges_per_sec"],
+                         "analytic_bytes": best["analytic_bytes"]},
+        "rows": rows,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out} ({len(rows)} rows; max feasible "
+          f"n=2^{best['n'].bit_length() - 1}, m={best['m_generated']})")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_scale.json")
+    args = ap.parse_args(argv)
+    run(quick=not args.full, smoke=args.smoke, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

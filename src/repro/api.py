@@ -858,6 +858,31 @@ class ConnectIt:
         """Convenience: host numpy labels."""
         return np.asarray(self.connectivity(g, **kw))
 
+    def from_chunks(self, source, *, key: Optional[jax.Array] = None,
+                    survivor_cap: Optional[int] = None,
+                    sample_chunks: int = 1, return_stats: bool = False):
+        """Out-of-core connectivity over a ``ChunkedEdgeSource`` — the
+        bounded-memory path for graphs too large to materialize (docs/API.md
+        §Out-of-core ingest).
+
+        Runs the session's sampling phase on the stream's head, then streams
+        every chunk through relabel-and-filter into a bounded survivor
+        buffer; labels are bit-identical to ``.connectivity`` on the same
+        edges. ``.stats`` reports chunk/spill/survivor accounting alongside
+        the usual fields. Ingest is a single-device pipeline regardless of
+        placement (the same precedent as ``.spanning_forest`` on distributed
+        placements); ``stats.exec`` reports what actually ran."""
+        from .graphs.ingest import ingest_chunks, ingest_stats
+        result = ingest_chunks(
+            source, self._sampler, self._finish, key,
+            kernels=self._backend.kernels, survivor_cap=survivor_cap,
+            sample_chunks=sample_chunks)
+        stats = ingest_stats(result, variant=str(self.spec))
+        self._stats = stats
+        if return_stats:
+            return result.labels, stats
+        return result.labels
+
     def spanning_forest(self, g, *, key: Optional[jax.Array] = None
                         ) -> np.ndarray:
         """Spanning forest edges, (k, 2) host array (paper §3.4).

@@ -74,6 +74,10 @@ class ConnectivityStats:
     app: str = ""              # canonical AppSpec string ("" for core paths)
     buckets: int = 0           # AMSF: weight buckets swept
     edges_per_bucket: tuple = ()  # AMSF: in-bucket candidate edges (capped)
+    # chunked out-of-core ingest (repro.graphs.ingest) fills these too:
+    chunks: int = 0            # edge chunks streamed through relabel
+    spills: int = 0            # survivor-buffer overflow flushes
+    survivor_ratio: float = 0.0  # survivors kept / real edges streamed
 
 
 @partial(jax.jit, static_argnames=("finish_fn", "kernels"))

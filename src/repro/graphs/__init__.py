@@ -1,2 +1,16 @@
-from .containers import Graph, build_graph, components_oracle, graph_spec  # noqa: F401
+from .containers import (  # noqa: F401
+    ArrayEdgeSource,
+    ChunkedEdgeSource,
+    CompressedEdgeBlocks,
+    Graph,
+    build_graph,
+    components_oracle,
+    compress_edges,
+    compress_graph,
+    graph_spec,
+    open_edge_file,
+    sort_dedup_edges,
+    write_edge_file,
+)
+from .ingest import IngestResult, ingest_chunks  # noqa: F401
 from . import generators  # noqa: F401

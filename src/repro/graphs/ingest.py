@@ -1,0 +1,258 @@
+"""Out-of-core chunked ingest: connectivity without a resident edge list.
+
+The paper's flagship result (3.5B vertices / 128B edges) rests on an
+observation the one-shot ``build_graph`` path cannot exploit: after the
+sampling phase, the vast majority of edges are already intra-component and
+die without ever touching the finish method. So the full graph never needs
+to exist — on host *or* device — at once:
+
+  1. **Sample** on the first chunk(s) only: build a small dense ``Graph``
+     from the head of the stream, run the VariantSpec sampling phase on it,
+     fully compress. (Unlike the one-shot paths, L_max is *not* pinned to
+     the virtual label −1: survivors are stored as rewritten endpoints, so
+     labels must remain valid vertex indices. The kill below only needs
+     representative equality — L_max-internal edges share a root either
+     way, so nothing is lost.)
+  2. **Stream** every chunk (head included) through ``rewrite_edges``
+     against the compressed labeling. An edge whose endpoints map to the
+     same representative — intra-component (L_max-internal included),
+     self-loop, or dump padding — is dead and is dropped on device. The
+     survivors are cumsum-compacted into a bounded *survivor buffer*.
+  3. **Flush** when a chunk's survivors would overflow the buffer
+     (``lax.cond``, still on device): run the finish method on the
+     symmetrized buffer, fully compress, reset the buffer. Each flush is a
+     *spill* — the accounting the scale bench reports. Edges appended after
+     relabeling against an older labeling stay correct: the finish method
+     unions by connectivity, and a merge can only turn a live edge into a
+     no-op, never resurrect a dead one.
+  4. **Finalize**: one last finish over the remaining buffer, then the same
+     ``min_vertex_labels`` canonicalization as every other path — canonical
+     labels are partition-determined, so chunked ingest is bit-identical to
+     the one-shot path by construction (the property suite asserts it).
+
+No host syncs happen inside a chunk: the alive mask, compaction, overflow
+test, flush, and all counters (survivors / spills / rounds / streamed) live
+on device; the only host decision per chunk is the static dispatch shape,
+bucketed to the same pow2 sizes the Stream uses (``driver.bucket_size``).
+
+Resident peak is ``O(n)`` labels + one padded chunk + the survivor buffer —
+independent of m. Anything satisfying ``ChunkedEdgeSource`` (an ``n`` plus
+a ``chunks()`` iterator) can feed it: ``ArrayEdgeSource`` / ``np.memmap``
+edge files, ``CompressedEdgeBlocks``, or the streamed generators in
+``repro.graphs.generators``. Surfaced as ``ConnectIt(...).from_chunks``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.driver import ConnectivityStats, bucket_size
+from ..core.primitives import (
+    full_compress,
+    init_labels,
+    min_vertex_labels,
+    most_frequent,
+    rewrite_edges,
+)
+from .containers import ChunkedEdgeSource, build_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestResult:
+    """Labels + accounting from one chunked ingest run."""
+
+    labels: jax.Array        # (n,) int32 canonical min-vertex-id labels
+    n: int
+    chunks: int              # chunks streamed (incl. the sampled head)
+    streamed: int            # real edges streamed through relabel
+    survivors: int           # edges that reached the survivor buffer
+    spills: int              # buffer-overflow flushes mid-stream
+    finish_rounds: int       # finish rounds across all flushes + finalize
+    lmax_count: int          # L_max size after the sampling phase
+    survivor_cap: int        # buffer capacity the run used
+
+    @property
+    def survivor_ratio(self) -> float:
+        return self.survivors / self.streamed if self.streamed else 0.0
+
+
+@partial(jax.jit, static_argnames=("kernels",))
+def _sample_prep(P, kernels=None):
+    # Compress only — no relabel_lmax: survivor-buffer entries are the
+    # *rewritten endpoints*, so labels must stay valid vertex indices (the
+    # virtual −1 label would become a scatter index inside the finish).
+    # The streaming win doesn't need the pin: an edge dies on representative
+    # *equality*, and L_max-internal edges share a root either way.
+    P = full_compress(P, kernels=kernels)
+    _, cnt = most_frequent(P)
+    return P, cnt
+
+
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
+def _chunk_step(P, bu, bv, count, spills, survivors, rounds, streamed,
+                u, v, finish_fn, kernels=None):
+    """One chunk through relabel → compact-append → cond-flush. Everything
+    is device-side; the caller never syncs inside the stream."""
+    n = P.shape[0] - 1
+    cap = bu.shape[0] - 1  # slot `cap` is the dump slot
+    ru, rv = rewrite_edges(P, u, v, kernels=kernels)
+    # equal representatives ⇔ dead: intra-component, L_max-internal (both
+    # −1), self-loops, and dump padding (n → n) all collapse to ru == rv
+    alive = ru != rv
+    k = jnp.cumsum(alive.astype(jnp.int32))
+    incoming = k[-1]
+    overflow = count + incoming > cap
+
+    def flush(args):
+        P, bu, bv, count, rounds = args
+        su = jnp.concatenate([bu, bv])
+        sv = jnp.concatenate([bv, bu])
+        P, r = finish_fn(P, su, sv)
+        P = full_compress(P, kernels=kernels)
+        return (P, jnp.full_like(bu, n), jnp.full_like(bv, n),
+                jnp.int32(0), rounds + r)
+
+    P, bu, bv, count, rounds = jax.lax.cond(
+        overflow, flush, lambda args: args, (P, bu, bv, count, rounds))
+    # survivors appended against the pre-flush representatives stay valid:
+    # (ru, rv) connects the same components as (u, v) under any newer P
+    pos = jnp.where(alive, count + k - 1, cap)
+    bu = bu.at[pos].set(jnp.where(alive, ru, n))
+    bv = bv.at[pos].set(jnp.where(alive, rv, n))
+    return (P, bu, bv, count + incoming,
+            spills + overflow.astype(jnp.int32),
+            survivors + incoming, rounds,
+            streamed + jnp.sum((u < n).astype(jnp.int32)))
+
+
+@partial(jax.jit, static_argnames=("finish_fn", "kernels"))
+def _finalize(P, bu, bv, finish_fn, kernels=None):
+    su = jnp.concatenate([bu, bv])
+    sv = jnp.concatenate([bv, bu])
+    P, r = finish_fn(P, su, sv)
+    P = full_compress(P, kernels=kernels)
+    P = min_vertex_labels(P, kernels=kernels)
+    return P, r
+
+
+def _pad_chunk(chunk, n: int, shards: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Host chunk → dump-padded (u, v) device arrays on the shared pow2
+    buckets, so a long stream compiles O(log max_chunk) shapes total."""
+    arr = np.asarray(chunk, dtype=np.int32).reshape(-1, 2)
+    k = arr.shape[0]
+    size = bucket_size(k, pad="pow2", shards=shards)
+    u = np.full((size,), n, np.int32)
+    v = np.full((size,), n, np.int32)
+    u[:k] = arr[:, 0]
+    v[:k] = arr[:, 1]
+    return jnp.asarray(u), jnp.asarray(v)
+
+
+def ingest_chunks(
+    source: ChunkedEdgeSource,
+    sampler_fn: Optional[Callable],
+    finish_fn: Callable,
+    key: Optional[jax.Array] = None,
+    *,
+    kernels: Optional[str] = None,
+    survivor_cap: Optional[int] = None,
+    sample_chunks: int = 1,
+) -> IngestResult:
+    """Out-of-core connectivity over a ``ChunkedEdgeSource`` → labels that
+    are bit-identical to the one-shot ``build_graph`` path.
+
+    ``survivor_cap`` bounds the resident survivor buffer; it defaults to 4×
+    the first chunk's pow2 bucket and must be at least every chunk's bucket
+    size (a single chunk's survivors must fit an empty buffer — the flush
+    happens *before* the append). ``sample_chunks`` controls how much of the
+    stream's head seeds the sampling phase; the head is streamed again
+    afterwards, so sampling coverage affects only speed, never correctness.
+    """
+    n = int(source.n)
+    key = jax.random.PRNGKey(0) if key is None else key
+
+    it = iter(source.chunks())
+    head: list[np.ndarray] = []
+    for chunk in it:
+        head.append(np.asarray(chunk, dtype=np.int32).reshape(-1, 2))
+        if len(head) >= max(sample_chunks, 1):
+            break
+
+    head_edges = int(sum(c.shape[0] for c in head))
+    if sampler_fn is not None and head_edges:
+        g0 = build_graph(np.concatenate(head) if len(head) > 1 else head[0], n)
+        P = sampler_fn(g0, key)
+        del g0
+    else:
+        P = init_labels(n)
+    P, cnt = _sample_prep(P, kernels=kernels)
+
+    first_bucket = bucket_size(max(c.shape[0] for c in head) if head else 1,
+                               pad="pow2")
+    cap = 4 * first_bucket if survivor_cap is None else int(survivor_cap)
+    bu = jnp.full((cap + 1,), n, jnp.int32)
+    bv = jnp.full((cap + 1,), n, jnp.int32)
+    count = jnp.int32(0)
+    spills = jnp.int32(0)
+    survivors = jnp.int32(0)
+    rounds = jnp.int32(0)
+    streamed = jnp.int32(0)
+
+    chunks_seen = 0
+
+    def all_chunks():
+        yield from head
+        yield from it
+
+    for chunk in all_chunks():
+        u, v = _pad_chunk(chunk, n)
+        if int(u.shape[0]) > cap:
+            raise ValueError(
+                f"chunk bucket {int(u.shape[0])} exceeds survivor_cap={cap}; "
+                f"a whole chunk must fit the empty buffer — raise "
+                f"survivor_cap or lower the source chunk size")
+        (P, bu, bv, count, spills, survivors, rounds, streamed) = _chunk_step(
+            P, bu, bv, count, spills, survivors, rounds, streamed,
+            u, v, finish_fn, kernels)
+        chunks_seen += 1
+
+    P, r = _finalize(P, bu, bv, finish_fn, kernels)
+    return IngestResult(
+        labels=P[:n],
+        n=n,
+        chunks=chunks_seen,
+        streamed=int(streamed),
+        survivors=int(survivors),
+        spills=int(spills),
+        finish_rounds=int(rounds) + int(r),
+        lmax_count=int(cnt),
+        survivor_cap=cap,
+    )
+
+
+def ingest_stats(result: IngestResult, *, variant: str = "",
+                 exec_str: str = "single") -> ConnectivityStats:
+    """Fold an ``IngestResult`` into the unified ``ConnectivityStats`` shape
+    every other execution path reports."""
+    return ConnectivityStats(
+        variant=variant,
+        exec=exec_str,
+        placement="single",
+        devices=1,
+        edges_total=result.streamed,
+        edges_finish=result.survivors,
+        edges_finish_padded=2 * (result.survivor_cap + 1),
+        edges_per_device=(result.survivors,),
+        dispatch_sizes=(2 * (result.survivor_cap + 1),),
+        lmax_count=result.lmax_count,
+        finish_rounds=result.finish_rounds,
+        chunks=result.chunks,
+        spills=result.spills,
+        survivor_ratio=result.survivor_ratio,
+    )

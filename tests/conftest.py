@@ -21,11 +21,14 @@ def _clear_jax_caches():
 def scipy_canonical(g) -> np.ndarray:
     """scipy connected_components relabeled to min-vertex-id canonical form
     (the labeling convention every execution path must reproduce exactly)."""
+    if g.m == 0:
+        return np.arange(g.n, dtype=np.int64)
     from scipy.sparse import csr_matrix
     from scipy.sparse.csgraph import connected_components as scipy_cc
     s = np.asarray(g.senders)[: g.m]
     r = np.asarray(g.receivers)[: g.m]
-    mat = csr_matrix((np.ones(len(s)), (s, r)), shape=(g.n, g.n))
+    mat = csr_matrix((np.ones(len(s), dtype=np.int8), (s, r)),
+                     shape=(g.n, g.n))
     _, lab = scipy_cc(mat, directed=False)
     reps = np.full(lab.max() + 1, g.n, dtype=np.int64)
     np.minimum.at(reps, lab, np.arange(g.n))
