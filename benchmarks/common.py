@@ -1,15 +1,18 @@
-"""Shared benchmark utilities: timing, graph suite, CSV emission."""
+"""Shared benchmark utilities: timing, graph suite, CSV emission.
+
+The timing discipline lives in ``repro.tune.harness.time_fn`` (one
+definition for the tuner, the roofline, and every ``*_bench.py`` driver);
+``timeit`` below is the benchmarks' historical spelling of it.
+"""
 
 from __future__ import annotations
 
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
+from repro.tune.harness import time_fn  # noqa: E402,F401
 
 # scaled-down stand-ins for the paper's Table 2 suite (same families):
 #   road_usa → 2-D grid; LiveJournal/Orkut → RMAT; Friendster → BA;
@@ -32,14 +35,7 @@ def graph_suite():
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
     """Median wall time in seconds of fn(*args) with block_until_ready."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args, **kw))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    return time_fn(fn, *args, trials=iters, warmup=warmup, **kw)
 
 
 def emit(rows, header):

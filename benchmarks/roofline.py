@@ -84,46 +84,33 @@ def run(quick: bool = True, path: str = "dryrun_all.csv"):
 # ---------------------------------------------------------------------------
 
 def run_kernels(quick: bool = True):
-    """Time every hot-path primitive under ref vs the Pallas code path."""
+    """Time every hot-path primitive under ref vs the Pallas code path.
+
+    Measurement runs through the shared autotuning harness
+    (``repro.tune.harness``): the same drivers, workload, and timing
+    discipline the block-size tuner sweeps — one definition, two consumers.
+    Rows are ``(name, ref_s, compiled_s, ratio)``, unchanged."""
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks.common import timeit
-    from repro.kernels import ops
+    from repro.tune.harness import (PRIMITIVE_LABELS, PRIMITIVES,
+                                    primitive_drivers, time_fn)
 
     n = 1 << 12 if quick else 1 << 20
     m = 4 * n
     compiled = "pallas" if jax.default_backend() == "tpu" else "interpret"
     reps = 3 if quick else 10
 
-    rng = np.random.default_rng(0)
-    P = jnp.asarray(np.minimum(rng.integers(0, n, n + 1),
-                               np.arange(n + 1)).astype(np.int32))
-    s = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
-    r = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
-    vals = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
-
-    prims = [
-        ("scatter_min (writeMin)",
-         lambda p: ops.scatter_min(P, s, vals, policy=p)),
-        ("pointer_jump k=3 (FindHalve)",
-         lambda p: ops.pointer_jump(P, k=3, policy=p)),
-        ("hook_compress k=1 (uf_sync round)",
-         lambda p: ops.hook_compress(P, s, r, k=1, policy=p)),
-        ("edge_relabel (ParentConnect)",
-         lambda p: ops.edge_relabel(P, s, r, policy=p)),
-        ("edge_rewrite (alter/stream)",
-         lambda p: ops.edge_rewrite(P, s, r, policy=p)),
-    ]
+    drivers = primitive_drivers(n, m, seed=0)
     print(f"kernel smoke: n={n} m={m} backend={jax.default_backend()} "
           f"compiled-path={compiled}")
     print(f"{'primitive':36s} {'ref_ms':>10s} {compiled + '_ms':>14s} "
           f"{'ratio':>8s}")
     rows = []
-    for name, call in prims:
-        t_ref = timeit(call, "ref", iters=reps)
-        t_krn = timeit(call, compiled, iters=reps)
+    for prim in PRIMITIVES:
+        name, call = PRIMITIVE_LABELS[prim], drivers[prim]
+        t_ref = time_fn(call, "ref", trials=reps)
+        t_krn = time_fn(call, compiled, trials=reps)
         ratio = t_krn / t_ref if t_ref else float("inf")
         rows.append((name, t_ref, t_krn, ratio))
         print(f"{name:36s} {t_ref * 1e3:10.3f} {t_krn * 1e3:14.3f} "

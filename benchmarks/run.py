@@ -17,6 +17,10 @@
                                        (repro.graphs.ingest) →
                                        BENCH_scale.json (max feasible n/m,
                                        edges/sec, survivor ratio, peak RSS)
+``python -m benchmarks.run --tune``    autotuning sweep (repro.tune) →
+                                       BENCH_tune.json (per-(backend,
+                                       family) variant winners + tuned-vs-
+                                       default block_m speedup)
 
 Roofline terms come from the compiled dry-run (``repro.launch.dryrun``), not
 from wall time — see benchmarks/roofline.py and EXPERIMENTS.md §Roofline.
@@ -32,7 +36,7 @@ import time
 from . import (amsf_bench, dynamic_bench, execution_bench, gather_edges,
                sampling_quality, scale_bench, scan_bench, serve_bench,
                static_connectivity, streaming_batchsize,
-               streaming_throughput, synthetic_families)
+               streaming_throughput, synthetic_families, tune_bench)
 
 SUITES = {
     "static_connectivity": static_connectivity.run,     # Table 3
@@ -109,6 +113,10 @@ def main(argv=None) -> int:
                          "write BENCH_scale.json (max feasible n/m, "
                          "edges/sec ingested, survivor ratio, peak "
                          "resident bytes)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the autotuning sweep only and write "
+                         "BENCH_tune.json (per-(backend, family) variant "
+                         "winners + tuned-vs-default block_m speedup)")
     ap.add_argument("--out", default=None,
                     help="output path for the --apps/--serve JSON artifact")
     args = ap.parse_args(argv)
@@ -139,6 +147,16 @@ def main(argv=None) -> int:
         print("\n### scale " + "#" * 55)
         scale_bench.run(quick=not args.full, smoke=args.smoke,
                         out=args.out or "BENCH_scale.json")
+    elif args.tune:
+        if args.only or args.exec_spec:
+            ap.error("--tune is exclusive with --only/--exec")
+        print("\n### tune " + "#" * 56)
+        payload = tune_bench.run(quick=not args.full, smoke=args.smoke)
+        out = args.out or "BENCH_tune.json"
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out}")
     elif args.exec_spec is not None:
         if args.only:
             ap.error("--exec and --only are mutually exclusive")

@@ -1,0 +1,84 @@
+"""Autotuning artifact: per-(backend, family) winner table + tuned-vs-default
+block_m speedup → BENCH_tune.json.
+
+Runs the real tuner (``repro.tune.tuner``) against a throwaway cache: the
+per-primitive block ladder first (the speedup column compares the elected
+block against the shipped ``DEFAULT_BLOCK_M`` from the same sweep — no
+re-measurement), then the variant shortlist over scaled-down proxies of the
+paper's input families. The artifact is the repo's perf-trajectory record of
+what ``auto`` resolves to on this backend.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks.common import graph_suite
+
+
+def tune_rows(quick: bool = True, smoke: bool = False):
+    """(block_rows, block_summary, family_rows, meta) from one tuning pass."""
+    import jax
+
+    from repro.kernels.ops import DEFAULT_BLOCK_M
+    from repro.tune import (SelectionCache, TuneSpec, backend_key,
+                            resolve_variant, tune_block_m, tune_families)
+
+    spec = TuneSpec(trials=2 if smoke else 3)
+    fd, path = tempfile.mkstemp(prefix="bench_tune_", suffix=".json")
+    os.close(fd)
+    cache = SelectionCache(path)
+    try:
+        n = 1 << 8 if smoke else (1 << 12 if quick else 1 << 16)
+        block_rows = tune_block_m(spec, cache=cache, n=n)
+
+        by_prim: dict = {}
+        for r in block_rows:
+            by_prim.setdefault(r["primitive"], {})[r["block_m"]] = r
+        block_summary = []
+        for prim, pts in by_prim.items():
+            winner = next(r for r in pts.values() if r["winner"])
+            base = pts.get(DEFAULT_BLOCK_M, winner)
+            block_summary.append(dict(
+                primitive=prim,
+                default_block=DEFAULT_BLOCK_M,
+                default_time_s=base["time_s"],
+                tuned_block=winner["block_m"],
+                tuned_time_s=winner["time_s"],
+                speedup=(base["time_s"] / winner["time_s"]
+                         if winner["time_s"] else float("inf")),
+            ))
+
+        if smoke:
+            families = {k: build() for k, build in
+                        list(graph_suite().items())[:2]}
+        else:
+            families = {k: build() for k, build in graph_suite().items()}
+        family_rows = tune_families(families, spec, cache=cache,
+                                    kernels=None)
+        platform, device = backend_key()
+        meta = dict(platform=platform, device=device,
+                    global_winner=resolve_variant(cache=cache),
+                    grid=spec.grid, trials=spec.trials, n=n)
+        return block_rows, block_summary, family_rows, meta
+    finally:
+        if os.path.exists(path):
+            os.unlink(path)
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Suite-runner surface: print the winner tables, return rows."""
+    block_rows, block_summary, family_rows, meta = tune_rows(
+        quick=quick, smoke=smoke)
+    print(f"tune: backend={meta['platform']}/{meta['device']} "
+          f"grid={meta['grid']} n={meta['n']}")
+    print(f"{'primitive':16} {'default':>8} {'tuned':>8} {'speedup':>8}")
+    for r in block_summary:
+        print(f"{r['primitive']:16} {r['default_block']:>8} "
+              f"{r['tuned_block']:>8} {r['speedup']:>8.2f}")
+    print(f"{'family':20} {'fingerprint':16} {'winner':32}")
+    for r in family_rows:
+        print(f"{r['family']:20} {r['fingerprint']:16} {r['winner']:32}")
+    print(f"global winner: {meta['global_winner']}")
+    return dict(meta=meta, blocks=block_summary, families=family_rows)

@@ -338,7 +338,15 @@ class VariantSpec:
 
     @classmethod
     def parse(cls, text: str) -> "VariantSpec":
-        """Parse ``"<sampling>+<finish>"`` (or bare ``"<finish>"``)."""
+        """Parse ``"<sampling>+<finish>"`` (or bare ``"<finish>"``).
+
+        ``"auto"`` resolves through the tuned-selection cache
+        (``repro.tune``): the backend-global winner if one was ever tuned on
+        this backend, else the paper's recommended default — a resolution
+        request, not a canonical form, so it does not round-trip."""
+        if text.strip().lower() == "auto":
+            from .tune.tuner import resolve_variant  # lazy: tune imports api
+            return cls.parse(resolve_variant())
         if "+" in text:
             # split on the LAST '+': finish tokens never contain one, while
             # a float sampling parameter may (repr(1e16) == '1e+16')
@@ -799,12 +807,24 @@ class ConnectIt:
     convenience that folds into the ExecutionSpec's ``kernels`` field, so
     placement and kernel policy travel together and ``stats.exec`` reports
     what actually ran (see repro.kernels.ops and docs/API.md).
+
+    ``ConnectIt("auto", ...)`` defers the variant choice to the tuned
+    selection cache (``repro.tune``): each ``.connectivity(g)`` call
+    resolves the winner recorded for ``g``'s graph-family fingerprint
+    (falling back to the backend-global winner, then the paper's
+    recommended default on a cold cache) — a pure cache lookup, memoized
+    per family, so the query path never measures anything. With the
+    ``tune`` exec opt the session instead re-measures the shortlist on the
+    first graph of each family it sees and persists the winners. The
+    non-connectivity surfaces (streams, forests, ingest) bind the
+    backend-global resolution at construction.
     """
 
     def __init__(self, spec: SpecLike = "none+uf_sync_naive",
                  exec: ExecLike = "single", *, mesh=None,
                  compact_pad: Optional[int] = None,
                  kernels: Optional[str] = None):
+        auto = isinstance(spec, str) and spec.strip().lower() == "auto"
         if isinstance(spec, str):
             spec = VariantSpec.parse(spec)
         if not isinstance(spec, VariantSpec):
@@ -830,11 +850,36 @@ class ConnectIt:
         self._sampler = spec.sampling.build()
         self._finish = spec.build_finish(kernels=exec_spec.kernels)
         self._stats: Optional[driver.ConnectivityStats] = None
+        self._auto = auto
+        self._auto_specs: dict = {}      # family fingerprint -> programs
+        self._tuned_families: set = set()
 
     def __repr__(self) -> str:
         if self.exec == ExecutionSpec():
             return f"ConnectIt({str(self.spec)!r})"
         return f"ConnectIt({str(self.spec)!r}, exec={str(self.exec)!r})"
+
+    def _resolve_auto(self, g):
+        """Per-graph programs of an ``"auto"`` session: the cached winner
+        for ``g``'s family fingerprint, memoized per family so warm calls
+        do a dict lookup and reuse the jitted programs (zero tuning work on
+        the query path). Under the ``tune`` exec opt, the first graph of
+        each family is measured once per session and the winner persisted."""
+        from .tune.cache import fingerprint_graph
+        from .tune.tuner import resolve_variant, tune_variant
+        fam = fingerprint_graph(g)
+        if self.exec.tune and fam not in self._tuned_families:
+            tune_variant(
+                g, family=fam, kernels=self.exec.kernels,
+                exec=str(dataclasses.replace(self.exec, tune=False)))
+            self._tuned_families.add(fam)
+            self._auto_specs.pop(fam, None)
+        if fam not in self._auto_specs:
+            spec = VariantSpec.parse(resolve_variant(fam))
+            self._auto_specs[fam] = (
+                spec, spec.sampling.build(),
+                spec.build_finish(kernels=self.exec.kernels))
+        return self._auto_specs[fam]
 
     def connectivity(self, g, *, key: Optional[jax.Array] = None,
                      fused: Optional[bool] = None,
@@ -846,9 +891,10 @@ class ConnectIt:
         ExecutionSpec knob, overridable per call on the single placement)
         selects the single-dispatch path with no host compaction.
         """
+        spec, sampler, finish = ((self.spec, self._sampler, self._finish)
+                                 if not self._auto else self._resolve_auto(g))
         labels, stats = self._backend.connectivity(
-            g, self._sampler, self._finish, key, variant=str(self.spec),
-            fused=fused)
+            g, sampler, finish, key, variant=str(spec), fused=fused)
         self._stats = stats
         if return_stats:
             return labels, stats

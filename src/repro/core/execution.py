@@ -8,7 +8,7 @@ compression); ``ExecutionSpec`` says *where and how* to dispatch it:
     axes      := axis ("," axis)* [ "|" label_axis ]      # sharded only
     opt       := "fused" | "overlap" | "donate"
                | "frontier=" INT | "pad=" ("pow2" | INT) | "rounds=" INT
-               | "dynamic" | "log=" INT
+               | "dynamic" | "log=" INT | "tune"
                | "kernels=" ("auto" | "pallas" | "interpret" | "ref")
 
 Examples (canonical strings round-trip, ``ExecutionSpec.parse(str(s)) == s``):
@@ -67,6 +67,12 @@ construction, so equality and round-trips are canonical — same discipline as
     defers to ``REPRO_KERNELS`` then backend detection) | ``pallas`` |
     ``interpret`` | ``ref``. Meaningful for every placement, so placement
     and kernel policy travel together in one spec.
+  * ``tune`` — force re-tuning of ``auto`` selections: a
+    ``ConnectIt("auto", exec="single:tune")`` session re-measures the
+    variant shortlist on the first graph of each family it sees (once per
+    family per session) and persists the winners in the selection cache
+    (``repro.tune``) instead of trusting cached entries. Without it, auto
+    resolution is a pure cache lookup. Meaningful for every placement.
 
 Backends are planned once per (spec, mesh) and memoized: the same
 ``FactoryRegistry`` machinery that keeps sampler/finish callables stable for
@@ -149,6 +155,7 @@ class ExecutionSpec:
     rounds: int = 0             # distributed outer rounds; 0 = fixpoint
     dynamic: bool = False       # mixed insert/delete/query streams
     log: int = 0                # dynamic edge-log capacity; 0 = auto
+    tune: bool = False          # force re-tuning of auto selections
     kernels: str = "auto"       # KernelPolicy: auto | pallas | interpret | ref
 
     def __post_init__(self):
@@ -243,6 +250,8 @@ class ExecutionSpec:
             opts.append("dynamic")
         if self.log:
             opts.append(f"log={self.log}")
+        if self.tune:
+            opts.append("tune")
         if self.kernels != "auto":
             opts.append(f"kernels={self.kernels}")
         return head + (":" + ",".join(opts) if opts else "")
@@ -298,6 +307,8 @@ class ExecutionSpec:
                 kw["dynamic"] = True
             elif key == "log" and eq:
                 kw["log"] = int(val)
+            elif key == "tune" and not eq:
+                kw["tune"] = True
             elif key == "kernels" and eq:
                 kw["kernels"] = val.strip()
             elif key == "pad" and eq:

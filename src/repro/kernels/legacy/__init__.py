@@ -1,0 +1,8 @@
+"""Quarantined ML-era kernels (no connectivity consumer).
+
+``embedding_bag`` shipped with the seed model stack, whose last consumer
+moved to ``repro.legacy`` in PR 6; the pair is kept compiling (and under
+test) here, outside the connectivity hot-path namespace. Reach it via
+``repro.kernels.legacy.embedding_bag``; the ``ops.embedding_bag`` wrapper
+survives as a DeprecationWarning shim.
+"""

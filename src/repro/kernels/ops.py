@@ -40,26 +40,16 @@ This layer owns the dispatch contract between core arrays and kernels:
 from __future__ import annotations
 
 import os
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..graphs.containers import round_up
-from .edge_relabel.kernel import edge_relabel as _edge_relabel_pallas
-from .edge_relabel.kernel import edge_rewrite as _edge_rewrite_pallas
-from .edge_relabel.ref import edge_relabel_ref, edge_rewrite_ref
-from .embedding_bag.kernel import embedding_bag as _embedding_bag_pallas
-from .embedding_bag.ref import embedding_bag_ref
-from .hook_compress.kernel import hook_compress as _hook_compress_pallas
-from .hook_compress.ref import hook_compress_ref
-from .pointer_jump.kernel import pointer_jump as _pointer_jump_pallas
-from .pointer_jump.ref import pointer_jump_ref
-from .scatter_min.kernel import scatter_min as _scatter_min_pallas
-from .scatter_min.ref import scatter_min_ref
-
 __all__ = [
-    "KERNEL_POLICIES", "ENV_VAR", "default_policy", "resolve_policy",
+    "KERNEL_POLICIES", "ENV_VAR", "KERNEL_CONTRACT_VERSION",
+    "default_policy", "resolve_policy", "tuned_block_m",
+    "clear_tuned_blocks", "DEFAULT_BLOCK_M",
     "scatter_min", "pointer_jump", "hook_compress", "edge_relabel",
     "edge_rewrite", "embedding_bag", "compact_mask",
 ]
@@ -67,7 +57,30 @@ __all__ = [
 KERNEL_POLICIES = ("auto", "pallas", "interpret", "ref")
 ENV_VAR = "REPRO_KERNELS"
 
+# Version of the dispatch contract this module owns (padding, dump-slot
+# semantics, -1 virtual minimum). Bump on any semantic change: the tune
+# selection cache records it per entry and invalidates winners measured
+# under an older contract (repro.tune.cache).
+KERNEL_CONTRACT_VERSION = 1
+
 _LANE = 128  # TPU lane width: 1-D label/edge buffers pad to multiples of it
+
+DEFAULT_BLOCK_M = 8192  # shipped edge-block size; the tuner's fallback
+
+# These sit below the module constants on purpose: importing the graphs
+# package re-enters this module through graphs -> core.execution, which
+# needs KERNEL_POLICIES already bound for the cycle to resolve from any
+# entry point (not just repro.api).
+from ..graphs.containers import round_up  # noqa: E402
+from .edge_relabel.kernel import edge_relabel as _edge_relabel_pallas  # noqa: E402
+from .edge_relabel.kernel import edge_rewrite as _edge_rewrite_pallas  # noqa: E402
+from .edge_relabel.ref import edge_relabel_ref, edge_rewrite_ref  # noqa: E402
+from .hook_compress.kernel import hook_compress as _hook_compress_pallas  # noqa: E402
+from .hook_compress.ref import hook_compress_ref  # noqa: E402
+from .pointer_jump.kernel import pointer_jump as _pointer_jump_pallas  # noqa: E402
+from .pointer_jump.ref import pointer_jump_ref  # noqa: E402
+from .scatter_min.kernel import scatter_min as _scatter_min_pallas  # noqa: E402
+from .scatter_min.ref import scatter_min_ref  # noqa: E402
 
 
 def _on_tpu() -> bool:
@@ -85,6 +98,11 @@ def default_policy() -> str:
     return env
 
 
+def _backend_policy() -> str:
+    """The backend-detected implementation ``auto`` resolves to."""
+    return "pallas" if _on_tpu() else "ref"
+
+
 def resolve_policy(policy: Optional[str] = None) -> str:
     """Resolve an (optional) explicit policy to a concrete implementation:
     ``pallas`` | ``interpret`` | ``ref``."""
@@ -92,11 +110,48 @@ def resolve_policy(policy: Optional[str] = None) -> str:
     if p == "auto":
         p = default_policy()
     if p == "auto":
-        p = "pallas" if _on_tpu() else "ref"
-    if p not in KERNEL_POLICIES or p == "auto":
+        p = _backend_policy()
+    if p == "auto":
+        # distinct from an unknown-policy spelling: resolution itself failed
+        raise ValueError(
+            f"kernel policy 'auto' did not resolve to a concrete "
+            f"implementation on backend {jax.default_backend()!r} — "
+            f"backend detection returned 'auto' (dispatch-layer bug)")
+    if p not in KERNEL_POLICIES:
         raise ValueError(f"unknown kernel policy {policy!r}; "
                          f"have {KERNEL_POLICIES}")
     return p
+
+
+# ---------------------------------------------------------------------------
+# Tuned block-size resolution (repro.tune selection cache).
+# ---------------------------------------------------------------------------
+
+_TUNED_BLOCKS: dict = {}
+
+
+def tuned_block_m(primitive: str) -> int:
+    """The edge-block size ``primitive`` dispatches with when the caller
+    passes none: the tuned winner from the selection cache
+    (``repro.tune``), else ``DEFAULT_BLOCK_M``.
+
+    Resolved at trace time and memoized per process (one cache read per
+    primitive), so the hot path never touches the filesystem after its
+    first trace. ``clear_tuned_blocks`` drops the memo (tests; after an
+    in-process tuning run)."""
+    if primitive not in _TUNED_BLOCKS:
+        try:
+            from ..tune.tuner import resolve_block_m
+            block = resolve_block_m(primitive, default=DEFAULT_BLOCK_M)
+        except Exception:  # any cache trouble degrades to the default
+            block = DEFAULT_BLOCK_M
+        _TUNED_BLOCKS[primitive] = block
+    return _TUNED_BLOCKS[primitive]
+
+
+def clear_tuned_blocks() -> None:
+    """Forget memoized block-size winners (re-read the cache on next use)."""
+    _TUNED_BLOCKS.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -138,14 +193,17 @@ def _pad_edges(arrs, fills, block_m: int):
 
 def scatter_min(P: jax.Array, idx: jax.Array, vals: jax.Array,
                 mask: Optional[jax.Array] = None, *,
-                policy: Optional[str] = None, block_m: int = 8192
-                ) -> jax.Array:
+                policy: Optional[str] = None,
+                block_m: Optional[int] = None) -> jax.Array:
     """``P[idx] = min(P[idx], vals)`` — the paper's writeMin (Appendix A).
 
     Negative, masked, and out-of-range targets are dumped (no-op scatter of
     the dtype's max sentinel), so ``P``'s dump row and any non-label buffer
-    (e.g. the forest edge-id buffer) are safe targets."""
+    (e.g. the forest edge-id buffer) are safe targets. ``block_m=None``
+    resolves through the tune selection cache (``tuned_block_m``)."""
     p = resolve_policy(policy)
+    if block_m is None:
+        block_m = tuned_block_m("scatter_min")
     n = P.shape[0] - 1
     big = jnp.iinfo(P.dtype).max
     ok = (idx >= 0) & (idx <= n)
@@ -163,7 +221,7 @@ def scatter_min(P: jax.Array, idx: jax.Array, vals: jax.Array,
 
 
 def pointer_jump(labels: jax.Array, *, k: int = 1,
-                 policy: Optional[str] = None, block: int = 8192
+                 policy: Optional[str] = None, block: Optional[int] = None
                  ) -> jax.Array:
     """``k`` chained shortcut hops through the round-start snapshot.
 
@@ -171,6 +229,8 @@ def pointer_jump(labels: jax.Array, *, k: int = 1,
     ``k=3`` in one dispatch equals two successive rounds (FindHalve).
     ``-1`` labels and self-labeled slots are fixed points."""
     p = resolve_policy(policy)
+    if block is None:
+        block = tuned_block_m("pointer_jump")
     if p == "ref":
         return pointer_jump_ref(labels, k=k)
     L = labels.shape[0]
@@ -183,7 +243,7 @@ def pointer_jump(labels: jax.Array, *, k: int = 1,
 def hook_compress(P: jax.Array, senders: jax.Array, receivers: jax.Array,
                   *, k: int = 1, mask: Optional[jax.Array] = None,
                   policy: Optional[str] = None,
-                  block_m: int = 8192) -> jax.Array:
+                  block_m: Optional[int] = None) -> jax.Array:
     """One fused uf_sync round: root-masked min-hook + ``k`` shortcut hops.
 
     Equivalent to ``write_min(P, P[s], P[r], root-mask)`` followed by
@@ -196,6 +256,8 @@ def hook_compress(P: jax.Array, senders: jax.Array, receivers: jax.Array,
         senders = jnp.where(mask, senders, dump)
         receivers = jnp.where(mask, receivers, dump)
     p = resolve_policy(policy)
+    if block_m is None:
+        block_m = tuned_block_m("hook_compress")
     if p == "ref":
         return hook_compress_ref(P, senders, receivers, k=k)
     n = P.shape[0] - 1
@@ -233,12 +295,14 @@ def compact_mask(mask: jax.Array, vals: jax.Array, cap: int, *,
 
 
 def edge_relabel(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
-                 *, policy: Optional[str] = None, block_m: int = 8192
-                 ) -> jax.Array:
+                 *, policy: Optional[str] = None,
+                 block_m: Optional[int] = None) -> jax.Array:
     """One relabel round: propose each endpoint's label to the other, merge
     with scatter-min (the inner loop of label-propagation-style finishes and
     the Liu–Tarjan ParentConnect rule)."""
     p = resolve_policy(policy)
+    if block_m is None:
+        block_m = tuned_block_m("edge_relabel")
     if p == "ref":
         return edge_relabel_ref(labels, senders, receivers)
     L = labels.shape[0]
@@ -251,10 +315,13 @@ def edge_relabel(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
 
 
 def edge_rewrite(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
-                 *, policy: Optional[str] = None, block_m: int = 8192):
+                 *, policy: Optional[str] = None,
+                 block_m: Optional[int] = None):
     """Rewrite edge endpoints to their parents (Liu–Tarjan alter step, the
     streaming batch relabel): ``e ← P[e]`` with ``-1`` fixed points."""
     p = resolve_policy(policy)
+    if block_m is None:
+        block_m = tuned_block_m("edge_rewrite")
     if p == "ref":
         return edge_rewrite_ref(labels, senders, receivers)
     m = senders.shape[0]
@@ -269,8 +336,17 @@ def edge_rewrite(labels: jax.Array, senders: jax.Array, receivers: jax.Array,
 def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "sum",
                   block_b: int = 1024, policy: Optional[str] = None
                   ) -> jax.Array:
+    """Deprecated: the ML-era kernel pair moved to
+    ``repro.kernels.legacy.embedding_bag`` (its last consumer, the seed
+    model stack, lives in ``repro.legacy``). Import from there directly."""
+    warnings.warn(
+        "ops.embedding_bag is deprecated — the kernel pair moved to "
+        "repro.kernels.legacy.embedding_bag (no connectivity consumer)",
+        DeprecationWarning, stacklevel=2)
+    from .legacy.embedding_bag.kernel import embedding_bag as _pallas
+    from .legacy.embedding_bag.ref import embedding_bag_ref as _ref
     p = resolve_policy(policy)
     if p == "ref":
-        return embedding_bag_ref(table, idx, mode=mode)
-    return _embedding_bag_pallas(table, idx, mode=mode, block_b=block_b,
-                                 interpret=(p == "interpret"))
+        return _ref(table, idx, mode=mode)
+    return _pallas(table, idx, mode=mode, block_b=block_b,
+                   interpret=(p == "interpret"))

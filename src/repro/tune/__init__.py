@@ -1,0 +1,59 @@
+"""``repro.tune``: per-backend autotuning with a persistent selection cache.
+
+The ConnectIt paper's central finding is that no single variant wins
+everywhere, and the GPU follow-up (Hong et al., arXiv:2008.11839) shows the
+winner also changes per backend. This subsystem closes the loop: it
+micro-benchmarks the candidate (variant, kernel policy, block size) grid
+against the actual backend and graph family (``tuner``/``harness``), and
+persists winners on disk (``cache``) so later sessions resolve ``auto``
+choices instantly:
+
+* ``ConnectIt("auto", ...)`` resolves the variant per graph family
+  (cold cache → the paper's recommended default, never an error);
+* ``repro.kernels.ops`` resolves its Pallas ``block_m`` per primitive
+  (cold cache → the shipped ``8192``);
+* the ``tune`` ExecutionSpec opt forces re-tuning for a session;
+* ``python -m repro.launch.tune`` is the offline driver.
+
+See docs/API.md §Autotuning.
+"""
+
+from .cache import (  # noqa: F401
+    ENV_VAR,
+    SCHEMA_VERSION,
+    SelectionCache,
+    backend_key,
+    cache_path,
+    default_cache,
+    fingerprint,
+    fingerprint_graph,
+    make_key,
+    reset_default_cache,
+)
+from .harness import (  # noqa: F401
+    PRIMITIVE_LABELS,
+    PRIMITIVES,
+    measure_primitives,
+    primitive_drivers,
+    time_fn,
+)
+from .space import TuneSpec, as_tune_spec  # noqa: F401
+from .tuner import (  # noqa: F401
+    PAPER_DEFAULT_VARIANT,
+    compiled_policy,
+    resolve_block_m,
+    resolve_variant,
+    tune_block_m,
+    tune_families,
+    tune_variant,
+)
+
+__all__ = [
+    "TuneSpec", "as_tune_spec", "SelectionCache", "default_cache",
+    "reset_default_cache", "cache_path", "make_key", "backend_key",
+    "fingerprint", "fingerprint_graph", "time_fn", "primitive_drivers",
+    "measure_primitives", "PRIMITIVES", "PRIMITIVE_LABELS",
+    "PAPER_DEFAULT_VARIANT", "resolve_variant", "resolve_block_m",
+    "tune_block_m", "tune_variant", "tune_families", "compiled_policy",
+    "ENV_VAR", "SCHEMA_VERSION",
+]

@@ -1,0 +1,258 @@
+"""On-disk selection cache: persisted winners of the autotuning grid.
+
+One JSON file maps **selection keys** to tuned winners so every later
+process resolves ``auto`` choices (variant, kernel policy, block sizes)
+instantly instead of re-measuring. A key names exactly what the ConnectIt
+and GPU follow-up papers say a winner depends on:
+
+    <platform>/<device_kind>/<graph-family fingerprint>/<target>
+
+* ``platform`` — ``jax.default_backend()`` (``cpu`` | ``tpu`` | ``gpu``);
+* ``device_kind`` — the concrete device model (``TPU v4`` → ``tpu-v4``),
+  because the winning block size changes across generations;
+* fingerprint — the graph family, bucketed so one measurement covers the
+  regime: ``n<log2-bucket>-<density>-<skew>`` (see ``fingerprint``). The
+  wildcard family ``"*"`` holds backend-global winners (block sizes are
+  resolved at trace time, before any graph is seen);
+* ``target`` — ``"variant"``, ``"policy"``, or ``"block_m:<primitive>"`` /
+  ``"block_b:<primitive>"``.
+
+Durability contract:
+
+* **schema versioning** — a file whose ``schema`` differs from
+  ``SCHEMA_VERSION`` is discarded wholesale (never half-migrated);
+* **contract invalidation** — every entry records the
+  ``KERNEL_CONTRACT_VERSION`` it was measured under; entries from an older
+  kernel dispatch contract are dropped on load (a contract bump means the
+  padding/dump-slot semantics changed and old timings are meaningless);
+* **atomic writes** — the file is rewritten via temp-file + ``os.replace``
+  so a crash mid-write leaves the previous cache intact;
+* ``REPRO_TUNE_CACHE`` overrides the default location (an explicit
+  ``path=`` argument wins over the environment).
+
+Corrupt or unreadable files degrade to an empty cache — resolution falls
+back to the paper defaults, never to an error.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+import time
+from typing import Optional
+
+import jax
+
+__all__ = [
+    "SCHEMA_VERSION", "ENV_VAR", "SelectionCache", "cache_path",
+    "default_cache", "reset_default_cache", "backend_key", "make_key",
+    "fingerprint", "fingerprint_graph", "DENSITY_BUCKETS", "SKEW_THRESHOLD",
+]
+
+SCHEMA_VERSION = 1
+ENV_VAR = "REPRO_TUNE_CACHE"
+_DEFAULT_PATH = os.path.join("~", ".cache", "repro", "tune.json")
+
+# m/n thresholds for the density bucket (directed edges per vertex)
+DENSITY_BUCKETS = ((4.0, "sparse"), (16.0, "mid"), (float("inf"), "dense"))
+# max-degree / mean-degree ratio separating skewed (power-law-ish) families
+SKEW_THRESHOLD = 8.0
+
+_SAFE_RE = re.compile(r"[^a-z0-9._*-]+")
+
+
+def _slug(text: str) -> str:
+    return _SAFE_RE.sub("-", str(text).strip().lower()).strip("-") or "unknown"
+
+
+def cache_path(path: Optional[str] = None) -> str:
+    """Resolve the cache file location: explicit ``path`` > ``REPRO_TUNE_CACHE``
+    > ``~/.cache/repro/tune.json``."""
+    if path:
+        return os.path.expanduser(path)
+    env = os.environ.get(ENV_VAR, "").strip()
+    if env:
+        return os.path.expanduser(env)
+    return os.path.expanduser(_DEFAULT_PATH)
+
+
+def backend_key() -> tuple:
+    """``(platform, device_kind)`` of the default backend, slugged for keys."""
+    platform = _slug(jax.default_backend())
+    try:
+        kind = _slug(jax.devices()[0].device_kind)
+    except Exception:  # pragma: no cover - no devices at all
+        kind = "unknown"
+    return platform, kind
+
+
+def make_key(target: str, family: str = "*",
+             platform: Optional[str] = None,
+             device: Optional[str] = None) -> str:
+    """Canonical selection key ``platform/device/family/target``."""
+    if platform is None or device is None:
+        p, d = backend_key()
+        platform = platform or p
+        device = device or d
+    return "/".join((platform, device, family, target))
+
+
+# ---------------------------------------------------------------------------
+# Graph-family fingerprints.
+# ---------------------------------------------------------------------------
+
+def fingerprint(n: int, m: int, skew_ratio: Optional[float] = None) -> str:
+    """Bucketed graph-family fingerprint ``n<b>-<density>-<skew>``.
+
+    ``n`` buckets by log2 (one winner per order of magnitude of vertices),
+    density by directed edges per vertex, skew by the max/mean degree ratio
+    (``None`` → ``any``: callers that cannot afford a degree pass still get
+    a usable family key)."""
+    nb = max(int(n), 1).bit_length() - 1
+    per = m / max(n, 1)
+    density = next(name for hi, name in DENSITY_BUCKETS if per < hi)
+    if skew_ratio is None:
+        skew = "any"
+    else:
+        skew = "hi" if skew_ratio >= SKEW_THRESHOLD else "lo"
+    return f"n{nb}-{density}-{skew}"
+
+
+def fingerprint_graph(g) -> str:
+    """Fingerprint a ``repro.graphs.Graph`` (degree skew from its CSR).
+
+    Cheap: two reductions over the already-resident ``indptr`` — no edge
+    pass, no compilation beyond the first call per shape."""
+    deg = g.degrees()[: g.n]
+    maxdeg = float(jax.numpy.max(deg)) if g.n else 0.0
+    mean = g.m / max(g.n, 1)
+    ratio = maxdeg / mean if mean > 0 else 1.0
+    return fingerprint(g.n, g.m, ratio)
+
+
+# ---------------------------------------------------------------------------
+# The cache.
+# ---------------------------------------------------------------------------
+
+class SelectionCache:
+    """Load/store tuned winners in one JSON file (see module docstring).
+
+    Reads are lazy and tolerant (missing/corrupt/old-schema files are an
+    empty cache); writes rewrite the whole file atomically. Instances hold
+    an in-memory view loaded once — call ``reload()`` to pick up writes
+    from another process."""
+
+    def __init__(self, path: Optional[str] = None, *,
+                 contract: Optional[int] = None):
+        if contract is None:
+            # lazy: ops sits inside the repo's kernels<->core import cycle,
+            # which only resolves when entered via repro.api/repro.core
+            from ..kernels.ops import KERNEL_CONTRACT_VERSION
+            contract = KERNEL_CONTRACT_VERSION
+        self.path = cache_path(path)
+        self.contract = int(contract)
+        self._entries: Optional[dict] = None
+
+    # -- reading -------------------------------------------------------------
+
+    def _load(self) -> dict:
+        if self._entries is not None:
+            return self._entries
+        entries: dict = {}
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if (isinstance(data, dict)
+                    and data.get("schema") == SCHEMA_VERSION
+                    and isinstance(data.get("entries"), dict)):
+                # contract invalidation: drop winners measured under an
+                # older kernel dispatch contract
+                entries = {
+                    k: v for k, v in data["entries"].items()
+                    if isinstance(v, dict)
+                    and v.get("contract") == self.contract
+                }
+        except (OSError, ValueError):
+            entries = {}
+        self._entries = entries
+        return entries
+
+    def reload(self) -> "SelectionCache":
+        self._entries = None
+        self._load()
+        return self
+
+    def get(self, key: str) -> Optional[dict]:
+        """The stored entry for ``key`` (``{"winner": ..., ...}``) or None."""
+        return self._load().get(key)
+
+    def winner(self, key: str):
+        """The stored winner for ``key``, or None."""
+        entry = self.get(key)
+        return None if entry is None else entry.get("winner")
+
+    def keys(self) -> list:
+        return sorted(self._load())
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    # -- writing -------------------------------------------------------------
+
+    def put(self, key: str, winner, *, time_s: Optional[float] = None,
+            **meta) -> dict:
+        """Record ``winner`` under ``key`` and persist atomically."""
+        entry = {"winner": winner, "contract": self.contract,
+                 "tuned_at": time.time()}
+        if time_s is not None:
+            entry["time_s"] = float(time_s)
+        entry.update(meta)
+        entries = dict(self._load())
+        entries[key] = entry
+        self._write(entries)
+        self._entries = entries
+        return entry
+
+    def discard(self, key: str) -> None:
+        entries = dict(self._load())
+        if entries.pop(key, None) is not None:
+            self._write(entries)
+            self._entries = entries
+
+    def _write(self, entries: dict) -> None:
+        payload = {"schema": SCHEMA_VERSION, "contract": self.contract,
+                   "entries": entries}
+        directory = os.path.dirname(self.path) or "."
+        os.makedirs(directory, exist_ok=True)
+        # atomic: a crash between write and replace leaves the old file
+        fd, tmp = tempfile.mkstemp(prefix=".tune.", suffix=".tmp",
+                                   dir=directory)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+
+_DEFAULT_CACHE: Optional[SelectionCache] = None
+
+
+def default_cache() -> SelectionCache:
+    """The process-level cache at the resolved default path (memoized; a
+    changed ``REPRO_TUNE_CACHE`` is honored after ``reset_default_cache``)."""
+    global _DEFAULT_CACHE
+    path = cache_path()
+    if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != path:
+        _DEFAULT_CACHE = SelectionCache(path)
+    return _DEFAULT_CACHE
+
+
+def reset_default_cache() -> None:
+    """Drop the memoized default cache (tests; env-var changes)."""
+    global _DEFAULT_CACHE
+    _DEFAULT_CACHE = None

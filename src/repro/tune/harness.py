@@ -1,0 +1,129 @@
+"""Deterministic measurement harness: one timing discipline for the tuner
+and every benchmark driver.
+
+``time_fn`` is THE wall-clock helper of the repo — ``benchmarks/common.py``
+re-exports it, ``benchmarks/roofline.py --kernels`` and the ``*_bench.py``
+drivers call it through ``timeit``, and the tuner's winner selection runs on
+it. Discipline:
+
+* explicit ``warmup`` runs first (compilation and cache effects excluded);
+* ``jax.block_until_ready`` on every result (async dispatch never leaks
+  into or out of a sample);
+* the **median** of ``trials`` samples (robust to scheduler noise);
+* an injectable ``timer`` (defaults to ``time.perf_counter``) so tests pin
+  winner selection with a deterministic fake clock.
+
+``primitive_drivers`` builds the per-primitive micro-benchmark closures the
+roofline kernel smoke used to inline — one closure per connectivity hot-path
+op, parameterized by kernel policy and (for the Pallas paths) the edge block
+size, so the same drivers serve the CI parity smoke and the block-size
+tuner.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .space import TuneSpec
+
+__all__ = ["time_fn", "primitive_drivers", "measure_primitives",
+           "PRIMITIVES", "PRIMITIVE_LABELS"]
+
+# tuning targets: every hot-path op with a block_m-gridded Pallas pair
+PRIMITIVES = ("scatter_min", "pointer_jump", "hook_compress",
+              "edge_relabel", "edge_rewrite")
+
+# display labels (the roofline table's historical names)
+PRIMITIVE_LABELS = {
+    "scatter_min": "scatter_min (writeMin)",
+    "pointer_jump": "pointer_jump k=3 (FindHalve)",
+    "hook_compress": "hook_compress k=1 (uf_sync round)",
+    "edge_relabel": "edge_relabel (ParentConnect)",
+    "edge_rewrite": "edge_rewrite (alter/stream)",
+}
+
+
+def time_fn(fn: Callable, *args, trials: int = 3, warmup: int = 1,
+            timer: Optional[Callable[[], float]] = None, **kw) -> float:
+    """Median wall time in seconds of ``fn(*args, **kw)``.
+
+    Runs ``warmup`` discarded calls, then ``trials`` timed calls, blocking
+    on the result each time; ``timer`` is read before/after each timed call
+    (injectable for deterministic tests)."""
+    if trials < 1:
+        raise ValueError(f"trials must be >= 1, got {trials}")
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    clock = time.perf_counter if timer is None else timer
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    samples = []
+    for _ in range(trials):
+        t0 = clock()
+        jax.block_until_ready(fn(*args, **kw))
+        samples.append(clock() - t0)
+    return float(np.median(samples))
+
+
+def primitive_drivers(n: int, m: int, *, seed: int = 0) -> dict:
+    """Per-primitive micro-benchmark closures over one shared problem.
+
+    Returns ``{primitive: driver}`` where ``driver(policy, block_m=None)``
+    dispatches the op once through ``repro.kernels.ops`` under the given
+    kernel policy (and block size, when given) and returns its result. The
+    label array is a valid parent forest (``P[i] <= i``), edges are uniform
+    random — the same workload the roofline kernel smoke always used."""
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    rng = np.random.default_rng(seed)
+    P = jnp.asarray(np.minimum(rng.integers(0, n, n + 1),
+                               np.arange(n + 1)).astype(np.int32))
+    s = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+    r = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+
+    def _kw(block_m):
+        return {} if block_m is None else {"block_m": int(block_m)}
+
+    return {
+        "scatter_min": lambda p, block_m=None: ops.scatter_min(
+            P, s, vals, policy=p, **_kw(block_m)),
+        "pointer_jump": lambda p, block_m=None: ops.pointer_jump(
+            P, k=3, policy=p,
+            **({} if block_m is None else {"block": int(block_m)})),
+        "hook_compress": lambda p, block_m=None: ops.hook_compress(
+            P, s, r, k=1, policy=p, **_kw(block_m)),
+        "edge_relabel": lambda p, block_m=None: ops.edge_relabel(
+            P, s, r, policy=p, **_kw(block_m)),
+        "edge_rewrite": lambda p, block_m=None: ops.edge_rewrite(
+            P, s, r, policy=p, **_kw(block_m)),
+    }
+
+
+def measure_primitives(policies: Sequence[str], *, n: int, m: int,
+                       spec: TuneSpec = TuneSpec(),
+                       primitives: Optional[Sequence[str]] = None,
+                       block_m: Optional[int] = None,
+                       timer: Optional[Callable[[], float]] = None,
+                       seed: int = 0) -> list:
+    """Time every (primitive × policy) pair under the harness discipline.
+
+    Returns rows ``{"primitive", "policy", "block_m", "time_s"}`` — the
+    shared measurement surface of ``roofline --kernels`` and the tuner."""
+    drivers = primitive_drivers(n, m, seed=seed)
+    names = PRIMITIVES if primitives is None else tuple(primitives)
+    rows = []
+    for name in names:
+        call = drivers[name]
+        for policy in policies:
+            t = time_fn(call, policy, block_m=block_m,
+                        trials=spec.trials, warmup=spec.warmup, timer=timer)
+            rows.append(dict(primitive=name, policy=policy,
+                             block_m=block_m, time_s=t))
+    return rows

@@ -7,8 +7,8 @@ import pytest
 
 from repro.kernels.edge_relabel.kernel import edge_relabel, edge_rewrite
 from repro.kernels.edge_relabel.ref import edge_relabel_ref, edge_rewrite_ref
-from repro.kernels.embedding_bag.kernel import embedding_bag
-from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.legacy.embedding_bag.kernel import embedding_bag
+from repro.kernels.legacy.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.hook_compress.kernel import hook_compress
 from repro.kernels.hook_compress.ref import hook_compress_ref
 from repro.kernels.pointer_jump.kernel import pointer_jump
